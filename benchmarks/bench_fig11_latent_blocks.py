@@ -1,0 +1,82 @@
+"""Figure 11 (CPU-scaled): latent-space self-attention blocks (L_B) vs FLARE
+encode-decode blocks (B). Paper claim: adding latent blocks hurts accuracy
+per unit compute; the best cell has ZERO latent blocks and max B.
+
+We build a hybrid surrogate: B FLARE blocks, and after each encode we
+optionally run L_B latent self-attention blocks before decoding (the
+Perceiver/LNO direction).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit, eval_loss, param_count, train_small
+from repro.core.flare import _merge_heads, _split_heads, sdpa
+from repro.data.pde_data import darcy_batch
+from repro.models import pde
+from repro.nn.modules import dense, layernorm, resmlp
+
+KEY = jax.random.PRNGKey(4)
+DIM, HEADS, LATENTS, STEPS = 32, 4, 16, 90
+
+
+def _init_hybrid(key, b_blocks, l_blocks):
+    ks = jax.random.split(key, 3)
+    params = pde.init_surrogate(ks[0], "flare", in_dim=3, out_dim=1, dim=DIM,
+                                num_blocks=b_blocks, num_heads=HEADS,
+                                num_latents=LATENTS)
+    params["latent_blocks"] = [
+        [pde.init_vanilla_block(jax.random.fold_in(ks[1], i * 10 + j), DIM, HEADS)
+         for j in range(l_blocks)]
+        for i in range(b_blocks)
+    ]
+    return params
+
+
+def _hybrid_forward(params, x):
+    """FLARE blocks whose latent sequence is refined by L_B self-attn blocks
+    between encode and decode (the Perceiver/LNO-style variant)."""
+    h = resmlp(params["in_proj"], x)
+    for bp, lbs in zip(params["blocks"], params["latent_blocks"]):
+        y = layernorm(bp["ln1"], h)
+        mix = bp["mixer"]
+        nheads = mix["q_latent"].shape[0]
+        k = _split_heads(resmlp(mix["k_proj"], y), nheads)
+        v = _split_heads(resmlp(mix["v_proj"], y), nheads)
+        q = mix["q_latent"].astype(y.dtype)
+        z = sdpa(q[None], k, v, scale=1.0)               # encode
+        zt = _merge_heads(z)
+        for lb in lbs:                                   # latent self-attn
+            zt = pde.vanilla_block(lb, zt, nheads)
+        z = _split_heads(zt, nheads)
+        out = sdpa(k, q[None], z, scale=1.0)             # decode
+        h = h + dense(mix["out_proj"], _merge_heads(out))
+        h = h + resmlp(bp["mlp"], layernorm(bp["ln2"], h))
+    h = layernorm(params["out_norm"], h)
+    return resmlp(params["out_proj"], h)
+
+
+def run():
+    train = [darcy_batch(0, i, 4, grid=16, cg_iters=120) for i in range(4)]
+    test = [darcy_batch(0, 70 + i, 4, grid=16, cg_iters=120) for i in range(2)]
+    loss_fn = lambda p, b: pde.relative_l2(_hybrid_forward(p, b["x"]), b["y"])
+
+    grid = {}
+    for b_blocks in (1, 2):
+        for l_blocks in (0, 1, 2):
+            params = _init_hybrid(jax.random.fold_in(KEY, b_blocks * 10 + l_blocks),
+                                  b_blocks, l_blocks)
+            params, _ = train_small(loss_fn, params, train, steps=STEPS)
+            err = eval_loss(loss_fn, params, test)
+            grid[(b_blocks, l_blocks)] = err
+            emit(f"fig11/B{b_blocks}_LB{l_blocks}", 0.0,
+                 f"rel_l2={err:.4f};params={param_count(params)}")
+    best = min(grid, key=grid.get)
+    emit("fig11/best_cell", 0.0,
+         f"B={best[0]};LB={best[1]};zero_latent_blocks_best={best[1] == 0}")
+    return grid
+
+
+if __name__ == "__main__":
+    run()

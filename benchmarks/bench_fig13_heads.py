@@ -1,0 +1,38 @@
+"""Figure 13 (CPU-scaled): head dimension sweep at fixed width C. Paper
+claim: FLARE prefers MANY SMALL heads (D in {4, 8}) — the reverse of
+standard transformers.
+"""
+from __future__ import annotations
+
+import jax
+
+from benchmarks.common import emit, eval_loss, train_small
+from repro.data.pde_data import darcy_batch
+from repro.models import pde
+
+KEY = jax.random.PRNGKey(6)
+DIM, LATENTS, STEPS = 32, 16, 90
+
+
+def run():
+    train = [darcy_batch(0, i, 4, grid=16, cg_iters=120) for i in range(4)]
+    test = [darcy_batch(0, 90 + i, 4, grid=16, cg_iters=120) for i in range(2)]
+
+    errs = {}
+    for heads in (1, 2, 4, 8):  # D = 32, 16, 8, 4
+        d = DIM // heads
+        params = pde.init_surrogate(jax.random.fold_in(KEY, heads), "flare",
+                                    in_dim=3, out_dim=1, dim=DIM, num_blocks=2,
+                                    num_heads=heads, num_latents=LATENTS)
+        loss_fn = lambda p, b, h=heads: pde.surrogate_loss(p, b, mixer="flare", num_heads=h)
+        params, _ = train_small(loss_fn, params, train, steps=STEPS)
+        err = eval_loss(loss_fn, params, test)
+        errs[d] = err
+        emit(f"fig13/D{d}", 0.0, f"rel_l2={err:.4f};heads={heads}")
+    best_d = min(errs, key=errs.get)
+    emit("fig13/best_head_dim", 0.0, f"D={best_d};small_heads_best={best_d <= 8}")
+    return errs
+
+
+if __name__ == "__main__":
+    run()

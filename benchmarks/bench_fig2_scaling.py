@@ -1,0 +1,56 @@
+"""Figure 2 (CPU-scaled): time scaling of FLARE vs vanilla attention with
+sequence length. The paper's claim is O(NM) vs O(N^2): we measure wall time
+of a single mixer layer at growing N and fit the scaling exponent — FLARE
+must come out ~linear (<1.3), vanilla ~quadratic (>1.6) — and report the
+analytic FLOP counts per the complexity model.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, time_fn
+from repro.core.flare import flare_mixer, sdpa
+
+KEY = jax.random.PRNGKey(0)
+NS = (256, 512, 1024, 2048, 4096)
+H, M, D = 4, 64, 16
+
+
+def _mk(n):
+    ks = jax.random.split(jax.random.fold_in(KEY, n), 3)
+    q = jax.random.normal(ks[0], (H, M, D), jnp.float32)
+    k = jax.random.normal(ks[1], (1, H, n, D), jnp.float32)
+    v = jax.random.normal(ks[2], (1, H, n, D), jnp.float32)
+    return q, k, v
+
+
+def run():
+    flare = jax.jit(lambda q, k, v: flare_mixer(q, k, v))
+    vanilla = jax.jit(lambda k, v: sdpa(k, k, v, scale=0.25))
+
+    t_f, t_v = [], []
+    for n in NS:
+        q, k, v = _mk(n)
+        us_f = time_fn(flare, q, k, v)
+        us_v = time_fn(vanilla, k, v)
+        t_f.append(us_f)
+        t_v.append(us_v)
+        flops_f = 4 * n * M * D * H  # two SDPA calls, O(N M)
+        flops_v = 4 * n * n * D * H  # O(N^2)
+        emit(f"fig2/flare/N{n}", us_f, f"flops={flops_f}")
+        emit(f"fig2/vanilla/N{n}", us_v, f"flops={flops_v}")
+
+    ln = np.log(np.asarray(NS, float))
+    exp_f = float(np.polyfit(ln, np.log(t_f), 1)[0])
+    exp_v = float(np.polyfit(ln, np.log(t_v), 1)[0])
+    speedup = t_v[-1] / t_f[-1]
+    emit("fig2/scaling_exponents", 0.0,
+         f"flare={exp_f:.2f};vanilla={exp_v:.2f};speedup@N{NS[-1]}={speedup:.1f}x")
+    assert exp_f < exp_v, "FLARE must scale better than vanilla"
+    return exp_f, exp_v
+
+
+if __name__ == "__main__":
+    run()

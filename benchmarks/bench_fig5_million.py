@@ -1,0 +1,45 @@
+"""Figure 5 (CPU-scaled): million-point regime trends — time grows ~linearly
+with the latent count M while the sequence-length-dependent memory stays
+flat (paper: "increasing M does not come at the cost of greater memory").
+
+We time a single FLARE block forward at a large point count for
+M in {64, 256, 1024} and report wall time + the analytic activation
+footprint (the N-dependent part is M-independent). The true 1M-point x
+M=2048 configuration is exercised by the dry-run cell flare_pde x pde_1m
+(see EXPERIMENTS.md §Dry-run) — here we verify the *shape* of the paper's
+curves where we can actually execute.
+"""
+from __future__ import annotations
+
+import jax
+
+from benchmarks.common import emit, time_fn
+from repro.core.flare import flare_block, init_flare_block
+
+KEY = jax.random.PRNGKey(7)
+N = 32768
+DIM, HEADS = 32, 4
+
+
+def run():
+    x = jax.random.normal(KEY, (1, N, DIM))
+    times = {}
+    for m in (64, 256, 1024):
+        p = init_flare_block(jax.random.fold_in(KEY, m), DIM, HEADS, m)
+        us = time_fn(jax.jit(lambda pp, xx: flare_block(pp, xx)), p, x, iters=3)
+        times[m] = us
+        # N-dependent activation bytes (residual stream + K/V projections)
+        # are M-independent; the only M-term is the latent Z: H*M*D floats.
+        act_n = 6 * N * DIM * 4          # per-block N-scaled fp32 stream
+        act_m = HEADS * m * (DIM // HEADS) * 4
+        emit(f"fig5/M{m}", us, f"N={N};act_N_bytes={act_n};act_M_bytes={act_m};"
+             f"mem_M_fraction={act_m / (act_n + act_m):.4f}")
+    growth = times[1024] / times[64]
+    emit("fig5/time_vs_M", 0.0,
+         f"t(M=1024)/t(M=64)={growth:.2f}x;M_ratio=16x;"
+         f"sublinear_in_M={growth < 16}")
+    return times
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,43 @@
+"""Figure 8 (CPU-scaled): single-layer execution time — vanilla
+self-attention vs Transolver physics attention vs FLARE across N.
+"""
+from __future__ import annotations
+
+import jax
+
+from benchmarks.common import emit, time_fn
+from repro.models import pde
+
+KEY = jax.random.PRNGKey(3)
+DIM, HEADS, LATENTS = 32, 4, 16
+NS = (512, 1024, 2048, 4096)
+
+
+def run():
+    out = {}
+    for n in NS:
+        x = jax.random.normal(jax.random.fold_in(KEY, n), (1, n, DIM))
+        for mixer, init in (
+            ("vanilla", lambda k: pde.init_vanilla_block(k, DIM, HEADS)),
+            ("transolver", lambda k: pde.init_transolver_block(k, DIM, HEADS, LATENTS)),
+        ):
+            p = init(KEY)
+            fn = {"vanilla": pde.vanilla_block, "transolver": pde.transolver_block}[mixer]
+            us = time_fn(jax.jit(lambda pp, xx: fn(pp, xx, HEADS)), p, x)
+            out[(mixer, n)] = us
+            emit(f"fig8/{mixer}/N{n}", us, "")
+        from repro.core.flare import flare_block, init_flare_block
+
+        p = init_flare_block(KEY, DIM, HEADS, LATENTS)
+        us = time_fn(jax.jit(lambda pp, xx: flare_block(pp, xx)), p, x)
+        out[("flare", n)] = us
+        emit(f"fig8/flare/N{n}", us, "")
+    grow = lambda m: out[(m, NS[-1])] / out[(m, NS[0])]
+    emit("fig8/growth_ratio", 0.0,
+         f"flare={grow('flare'):.1f}x;vanilla={grow('vanilla'):.1f}x;"
+         f"transolver={grow('transolver'):.1f}x;N_ratio={NS[-1] // NS[0]}x")
+    return out
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,57 @@
+"""Roofline report: renders the dry-run artifacts (experiments/artifacts/)
+as the per-(arch x shape x mesh) three-term table. This is the benchmark
+backing EXPERIMENTS.md §Dry-run / §Roofline.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from benchmarks.common import emit
+
+ART = os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+                   "experiments", "artifacts")
+
+
+def load_records(mesh=None):
+    recs = []
+    for p in sorted(glob.glob(os.path.join(ART, "*.json"))):
+        r = json.load(open(p))
+        if mesh and r["mesh"] != mesh:
+            continue
+        recs.append(r)
+    return recs
+
+
+def run():
+    recs = load_records()
+    if not recs:
+        emit("roofline/missing", 0.0,
+             "run `python -m repro.launch.dryrun --all --mesh both` first")
+        return
+    n_ok = n_skip = n_err = 0
+    for r in recs:
+        if r["status"] == "ok":
+            n_ok += 1
+            roof = r["roofline"]
+            mem = r.get("memory_analysis", {})
+            gib = mem.get("peak_bytes_per_device_est", 0) / 2**30
+            emit(
+                f"roofline/{r['arch']}/{r['shape']}/{r['mesh']}",
+                roof["bound_overlap_s"] * 1e6,
+                f"dom={roof['dominant']};comp_s={roof['compute_s']:.3f};"
+                f"mem_s={roof['memory_s']:.3f};coll_s={roof['collective_s']:.3f};"
+                f"useful={roof['useful_compute_ratio']:.3f};"
+                f"mfu_bound={roof.get('mfu_overlap_bound', 0):.4f};"
+                f"peak_GiB={gib:.2f}",
+            )
+        elif r["status"] == "skipped":
+            n_skip += 1
+        else:
+            n_err += 1
+    emit("roofline/summary", 0.0, f"ok={n_ok};skipped={n_skip};errors={n_err}")
+
+
+if __name__ == "__main__":
+    run()

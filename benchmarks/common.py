@@ -1,0 +1,54 @@
+"""Shared benchmark utilities: timing, tiny trainers, CSV emission."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.optim.adamw import adamw_update, init_adamw
+
+
+def time_fn(fn, *args, warmup: int = 2, iters: int = 5) -> float:
+    """Median wall-time per call in microseconds (blocks on outputs)."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts) * 1e6)
+
+
+def train_small(loss_fn, params, batches, *, steps: int, lr: float = 2e-3,
+                grad_clip: float = 1.0):
+    """Tiny AdamW loop; returns (params, losses)."""
+    opt = init_adamw(params)
+
+    @jax.jit
+    def step(p, o, b):
+        l, g = jax.value_and_grad(loss_fn)(p, b)
+        p, o, _ = adamw_update(p, g, o, lr=lr, grad_clip=grad_clip)
+        return p, o, l
+
+    losses = []
+    for i in range(steps):
+        params, opt, l = step(params, opt, batches[i % len(batches)])
+        losses.append(float(l))
+    return params, losses
+
+
+def eval_loss(loss_fn, params, batches) -> float:
+    f = jax.jit(loss_fn)
+    return float(np.mean([float(f(params, b)) for b in batches]))
+
+
+def emit(name: str, us_per_call: float, derived: str) -> None:
+    """The harness contract: ``name,us_per_call,derived`` CSV rows."""
+    print(f"{name},{us_per_call:.1f},{derived}")
+
+
+def param_count(params) -> int:
+    return sum(int(x.size) for x in jax.tree.leaves(params))

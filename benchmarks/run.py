@@ -1,0 +1,49 @@
+"""Benchmark harness entry point — one module per paper table/figure.
+
+Usage:
+    PYTHONPATH=src python -m benchmarks.run             # everything
+    PYTHONPATH=src python -m benchmarks.run table1 fig2 # subset
+
+Each row is ``name,us_per_call,derived`` CSV (harness contract).
+"""
+from __future__ import annotations
+
+import sys
+import time
+import traceback
+
+MODULES = {
+    "table1": "benchmarks.bench_table1_pde",       # Table 1: PDE accuracy
+    "fig2": "benchmarks.bench_fig2_scaling",       # Fig 2: time scaling
+    "fig8": "benchmarks.bench_fig8_layer_time",    # Fig 8: layer exec time
+    "fig5": "benchmarks.bench_fig5_million",       # Fig 5: M-scaling, large N
+    "fig9": "benchmarks.bench_fig9_blocks_latents",  # Figs 5/9: B & M sweeps
+    "fig11": "benchmarks.bench_fig11_latent_blocks",  # Fig 11: latent blocks
+    "fig12": "benchmarks.bench_fig12_shared_latents",  # Fig 12: shared latents
+    "fig13": "benchmarks.bench_fig13_heads",       # Fig 13: head dimension
+    "table2": "benchmarks.bench_table2_lra",       # Table 2: LRA proxy
+    "roofline": "benchmarks.bench_roofline",       # dry-run roofline table
+}
+
+
+def main() -> None:
+    names = sys.argv[1:] or list(MODULES)
+    print("name,us_per_call,derived")
+    failures = []
+    for name in names:
+        mod_name = MODULES[name]
+        t0 = time.time()
+        try:
+            mod = __import__(mod_name, fromlist=["run"])
+            mod.run()
+            print(f"{name}/_wall,{(time.time() - t0) * 1e6:.0f},ok")
+        except Exception as e:  # noqa: BLE001
+            traceback.print_exc()
+            print(f"{name}/_wall,{(time.time() - t0) * 1e6:.0f},FAILED:{type(e).__name__}")
+            failures.append(name)
+    if failures:
+        raise SystemExit(f"benchmark failures: {failures}")
+
+
+if __name__ == "__main__":
+    main()

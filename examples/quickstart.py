@@ -1,0 +1,60 @@
+"""Quickstart: build a FLARE surrogate, train it on real (CG-solved) Darcy
+data for a few dozen steps, and inspect the induced low-rank operator.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.flare import _split_heads, flare_mixer
+from repro.core.spectral import effective_rank, spectrum_by_head
+from repro.data.pde_data import darcy_batch
+from repro.models import pde
+from repro.nn.modules import layernorm, resmlp
+from repro.optim.adamw import adamw_update, init_adamw
+
+KEY = jax.random.PRNGKey(0)
+HEADS, LATENTS, BLOCKS, DIM = 4, 16, 2, 32
+
+
+def main():
+    print("== FLARE quickstart ==")
+    print("generating Darcy data (coefficient field -> CG Poisson solve)...")
+    train = [darcy_batch(0, i, 4, grid=16, cg_iters=120) for i in range(3)]
+    test = darcy_batch(0, 50, 4, grid=16, cg_iters=120)
+
+    params = pde.init_surrogate(KEY, "flare", in_dim=3, out_dim=1, dim=DIM,
+                                num_blocks=BLOCKS, num_heads=HEADS,
+                                num_latents=LATENTS)
+    loss_fn = lambda p, b: pde.surrogate_loss(p, b, mixer="flare", num_heads=HEADS)
+    opt = init_adamw(params)
+
+    @jax.jit
+    def step(p, o, b):
+        l, g = jax.value_and_grad(loss_fn)(p, b)
+        p, o, _ = adamw_update(p, g, o, lr=2e-3, grad_clip=1.0)
+        return p, o, l
+
+    for i in range(80):
+        params, opt, l = step(params, opt, train[i % len(train)])
+        if i % 20 == 0:
+            print(f"  step {i:3d}  train rel-L2 {float(l):.4f}")
+    print(f"held-out rel-L2: {float(loss_fn(params, test)):.4f}  "
+          "(1.0 == predict-zero baseline)")
+
+    # peek at the induced rank-<=M operator of block 0 (paper Fig. 12)
+    bp = params["blocks"][0]
+    x = resmlp(params["in_proj"], test["x"])
+    y = layernorm(bp["ln1"], x)
+    k = _split_heads(resmlp(bp["mixer"]["k_proj"], y), HEADS)[0]
+    vals = np.asarray(spectrum_by_head(bp["mixer"]["q_latent"], k))
+    print("\nper-head spectra of W = W_dec @ W_enc (top 5 eigenvalues):")
+    for h in range(HEADS):
+        er = int(effective_rank(jnp.asarray(vals[h])))
+        top = ", ".join(f"{v:.3f}" for v in vals[h][:5])
+        print(f"  head {h}: [{top}, ...]  effective rank (99%): {er}/{LATENTS}")
+
+
+if __name__ == "__main__":
+    main()

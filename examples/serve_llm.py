@@ -1,0 +1,61 @@
+"""Serve a small FLARE-LM (causal/streaming FLARE decoder) with batched
+requests: quick-train on the synthetic Markov stream so generations are
+non-trivial, then run the serving engine (prefill + step decode).
+
+    PYTHONPATH=src python examples/serve_llm.py
+"""
+import time
+
+import jax
+import numpy as np
+
+from repro.config import AttnConfig, ModelConfig, TrainConfig
+from repro.data.synthetic import TokenStream
+from repro.models.api import get_model
+from repro.serve.engine import ServeEngine
+from repro.train.steps import make_train_step
+from repro.optim.adamw import init_adamw
+
+VOCAB = 128
+
+
+def main():
+    cfg = ModelConfig(
+        name="flare-lm-serve", family="flare_lm", num_layers=2, d_model=64,
+        d_ff=128, vocab=VOCAB,
+        attn=AttnConfig(kind="flare_stream", num_heads=4, head_dim=16,
+                        flare_latents=8, flare_chunk=8),
+        remat="none",
+    )
+    model = get_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+
+    print("quick-training on the Markov stream (so decode outputs structure)...")
+    stream = TokenStream(VOCAB, 32, seed=0)
+    tcfg = TrainConfig(steps=60, learning_rate=3e-3)
+    step = jax.jit(make_train_step(model.loss, tcfg))
+    opt = init_adamw(params)
+    for i in range(60):
+        batch = {k: jax.numpy.asarray(v) for k, v in stream.batch(i, 0, 1, 8).items()}
+        params, opt, metrics = step(params, opt, batch)
+    print(f"  final train loss: {float(metrics['loss']):.3f}")
+
+    engine = ServeEngine(model, params, capacity=128, temperature=0.0)
+    prompts = [stream.batch(1000 + i, 0, 1, 1)["tokens"][0, :12] for i in range(5)]
+    for p in prompts:
+        engine.submit(p, max_new_tokens=16)
+
+    t0 = time.time()
+    outs = engine.run_all(max_batch=4)
+    dt = time.time() - t0
+    for i, (p, o) in enumerate(zip(prompts, outs)):
+        print(f"req {i}: prompt={p.tolist()[:8]}... -> generated={o.tolist()}")
+    s = engine.stats
+    print(f"\n{s['requests']} requests, {s['tokens_generated']} tokens in {dt:.2f}s "
+          f"(prefill {s['prefill_s']:.2f}s, decode {s['decode_s']:.2f}s)")
+    print("note: the FLARE decode state is O(M x D) per layer — constant in "
+          "context length (the long_500k path).")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,70 @@
+"""Reproduce the paper's spectral analysis (Fig. 12 / App. C): train FLARE
+on Darcy, then eigendecompose every head's communication operator with
+Algorithm 1 and print the decay profiles + effective ranks per block.
+
+    PYTHONPATH=src python examples/spectral_analysis.py
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.flare import _split_heads
+from repro.core.spectral import effective_rank, flare_spectrum_dense, spectrum_by_head
+from repro.data.pde_data import darcy_batch
+from repro.models import pde
+from repro.nn.modules import layernorm, resmlp
+from repro.optim.adamw import adamw_update, init_adamw
+
+KEY = jax.random.PRNGKey(0)
+HEADS, LATENTS, BLOCKS, DIM = 4, 16, 3, 32
+
+
+def main():
+    train = [darcy_batch(0, i, 4, grid=16, cg_iters=120) for i in range(3)]
+    params = pde.init_surrogate(KEY, "flare", in_dim=3, out_dim=1, dim=DIM,
+                                num_blocks=BLOCKS, num_heads=HEADS,
+                                num_latents=LATENTS)
+    loss_fn = lambda p, b: pde.surrogate_loss(p, b, mixer="flare", num_heads=HEADS)
+    opt = init_adamw(params)
+    step = jax.jit(lambda p, o, b: _step(loss_fn, p, o, b))
+    for i in range(80):
+        params, opt, _ = step(params, opt, train[i % 3])
+
+    # per-block per-head spectra via Algorithm 1 (O(M^3 + M^2 N))
+    x = resmlp(params["in_proj"], train[0]["x"])
+    print(f"spectra of W_h = W_dec @ W_enc, M={LATENTS} latents, {HEADS} heads")
+    h_states = x
+    for bi, bp in enumerate(params["blocks"]):
+        y = layernorm(bp["ln1"], h_states)
+        k = _split_heads(resmlp(bp["mixer"]["k_proj"], y), HEADS)[0]
+        vals = np.asarray(spectrum_by_head(bp["mixer"]["q_latent"], k))
+        print(f"\nblock {bi}:")
+        for h in range(HEADS):
+            er = int(effective_rank(jnp.asarray(vals[h])))
+            bar = "#" * max(1, int(20 * vals[h][1] / max(vals[h][0], 1e-9)))
+            print(f"  head {h}: top5 = {np.round(vals[h][:5], 3)}  "
+                  f"eff.rank(99%) = {er:2d}/{LATENTS}  decay {bar}")
+        # advance the residual stream through the block
+        from repro.core.flare import flare_block
+
+        h_states = flare_block(bp, h_states)
+
+    # verify Algorithm 1 against the dense O(N^3) oracle on one head
+    bp = params["blocks"][0]
+    y = layernorm(bp["ln1"], x)
+    k = _split_heads(resmlp(bp["mixer"]["k_proj"], y), HEADS)[0]
+    fast, _ = __import__("repro.core.spectral", fromlist=["flare_spectrum"]).flare_spectrum(
+        bp["mixer"]["q_latent"][0], k[0])
+    dense, _ = flare_spectrum_dense(bp["mixer"]["q_latent"][0], k[0])
+    err = float(jnp.max(jnp.abs(fast - dense[:LATENTS])))
+    print(f"\nAlgorithm 1 vs dense eigendecomposition: max|diff| = {err:.2e}")
+
+
+def _step(loss_fn, p, o, b):
+    l, g = jax.value_and_grad(loss_fn)(p, b)
+    p, o, _ = adamw_update(p, g, o, lr=2e-3, grad_clip=1.0)
+    return p, o, l
+
+
+if __name__ == "__main__":
+    main()

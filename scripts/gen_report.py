@@ -1,0 +1,103 @@
+"""Render EXPERIMENTS.md §Dry-run / §Roofline tables from dry-run artifacts.
+
+    PYTHONPATH=src python scripts/gen_report.py [--dir experiments/artifacts]
+Writes experiments/dryrun_table.md and experiments/roofline_table.md.
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+
+def load(art_dir):
+    recs = []
+    for p in sorted(glob.glob(os.path.join(art_dir, "*.json"))):
+        recs.append(json.load(open(p)))
+    order = {"train_4k": 0, "prefill_32k": 1, "decode_32k": 2, "long_500k": 3,
+             "pde_40k": 4, "pde_1m": 5}
+    recs.sort(key=lambda r: (r["arch"], order.get(r["shape"], 9), r["mesh"]))
+    return recs
+
+
+def dryrun_table(recs):
+    lines = [
+        "| arch | shape | mesh | status | devices | compile (s) | peak GiB/dev | HLO GFLOPs/dev | HLO GB/dev | coll. GB/dev | top collectives |",
+        "|---|---|---|---|---|---|---|---|---|---|---|",
+    ]
+    for r in recs:
+        if r["status"] != "ok":
+            reason = (r.get("reason") or r.get("error") or "")[:60]
+            lines.append(f"| {r['arch']} | {r['shape']} | {r['mesh']} | **{r['status']}** "
+                         f"| | | | | | | {reason} |")
+            continue
+        h = r["hlo_analysis"]
+        mem = r["memory_analysis"]
+        gib = mem.get("peak_bytes_per_device_est", 0) / 2**30
+        colls = h.get("collectives", {})
+        top = ", ".join(f"{k}:{v / 1e9:.1f}GB" for k, v in
+                        sorted(colls.items(), key=lambda kv: -kv[1])[:2])
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} | ok | {r['devices']} "
+            f"| {r['compile_s']} | {gib:.1f} | {h['flops'] / 1e9:.0f} "
+            f"| {h['mem_bytes'] / 1e9:.0f} | {h['collective_bytes'] / 1e9:.1f} | {top} |")
+    return "\n".join(lines)
+
+
+def roofline_table(recs, mesh="single"):
+    lines = [
+        "| arch | shape | T_compute (s) | T_memory (s) | T_collective (s) | dominant | MODEL_FLOPS/dev | useful ratio | MFU bound | one-line: what moves the dominant term |",
+        "|---|---|---|---|---|---|---|---|---|---|",
+    ]
+    for r in recs:
+        if r["status"] != "ok" or r["mesh"] != mesh:
+            continue
+        ro = r["roofline"]
+        note = _note(r)
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {ro['compute_s']:.3f} | {ro['memory_s']:.3f} "
+            f"| {ro['collective_s']:.3f} | **{ro['dominant']}** "
+            f"| {ro.get('model_flops_per_device', 0):.2e} "
+            f"| {ro.get('useful_compute_ratio', 0):.3f} "
+            f"| {ro.get('mfu_overlap_bound', 0):.4f} | {note} |")
+    return "\n".join(lines)
+
+
+def _note(r):
+    ro = r["roofline"]
+    dom = ro["dominant"]
+    arch, shape = r["arch"], r["shape"]
+    if dom == "collective":
+        return "replace GSPMD activation reshards with the O(M*C) latent-stat psum (shard_map SP-FLARE)"
+    if shape.startswith("decode") or shape == "long_500k":
+        return "decode is weight/cache-streaming bound: shard params over model only; batch more requests per step"
+    if arch == "rwkv6_3b":
+        return "factor the intra-chunk [T,T,D] decay-ratio tensor into clamped [T,D]x[D,T] matmuls"
+    if arch.startswith("flare_lm"):
+        return "shrink flare_chunk + pin head sharding so the [B,H,M,T,D] scan buffer stays per-device-small"
+    if arch == "mixtral_8x7b":
+        return "reshard the [G,S,E,cap] dispatch tensors (EP-aligned) to kill the all-gather storm"
+    return "fuse softmax/score traffic into the attention kernel (Pallas flash path on TPU); raise microbatch arithmetic intensity"
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="experiments/artifacts")
+    ap.add_argument("--suffix", default="")
+    args = ap.parse_args()
+    recs = load(args.dir)
+    os.makedirs("experiments", exist_ok=True)
+    with open(f"experiments/dryrun_table{args.suffix}.md", "w") as f:
+        f.write(dryrun_table(recs) + "\n")
+    with open(f"experiments/roofline_table{args.suffix}.md", "w") as f:
+        f.write("### single-pod (16x16 = 256 chips)\n\n")
+        f.write(roofline_table(recs, "single") + "\n\n")
+        f.write("### multi-pod (2x16x16 = 512 chips)\n\n")
+        f.write(roofline_table(recs, "multi") + "\n")
+    n_ok = sum(r["status"] == "ok" for r in recs)
+    print(f"rendered {n_ok} ok cells -> experiments/*_table{args.suffix}.md")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,52 @@
+"""Analytic MODEL_FLOPS and parameter accounting per (arch, shape).
+
+MODEL_FLOPS convention (DESIGN.md §7): 6 * N_params * tokens for training
+(dense), 6 * N_active * tokens for MoE; 2 * N(_active) per generated token
+for decode; 2 * N * tokens for prefill. Attention FLOPs are excluded by the
+convention — the ratio MODEL_FLOPS / HLO_FLOPs therefore reads as "fraction
+of compiled compute that is parameter math" and catches remat/redundancy.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig, ShapeConfig
+
+
+def param_counts(cfg: ModelConfig) -> dict:
+    """Exact (total, active) parameter counts via eval_shape — no allocation."""
+    from repro.models.api import get_model
+
+    model = get_model(cfg)
+    shapes = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    flat = jax.tree_util.tree_flatten_with_path(shapes)[0]
+    total = 0
+    routed = 0
+    for kpath, leaf in flat:
+        path = "/".join(str(getattr(p, "key", getattr(p, "idx", getattr(p, "name", p)))) for p in kpath)
+        n = 1
+        for d in leaf.shape:
+            n *= d
+        total += n
+        if cfg.moe is not None and leaf.ndim >= 3 and "mlp/w_" in path:
+            routed += n
+    active = total
+    if cfg.moe is not None and routed:
+        frac = cfg.moe.top_k / cfg.moe.num_experts
+        active = total - routed + int(routed * frac)
+    return {"total": int(total), "active": int(active)}
+
+
+def model_flops(cfg: ModelConfig, shape: ShapeConfig, counts: dict | None = None) -> float:
+    counts = counts or param_counts(cfg)
+    n_active = counts["active"]
+    # embeddings do ~no matmul flops; keep convention simple (6ND) as stated.
+    if shape.step == "train":
+        tokens = shape.seq_len * shape.global_batch
+        return 6.0 * n_active * tokens
+    if shape.step == "prefill":
+        tokens = shape.seq_len * shape.global_batch
+        return 2.0 * n_active * tokens
+    # decode: one token per sequence in the batch
+    return 2.0 * n_active * shape.global_batch

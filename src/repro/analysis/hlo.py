@@ -1,0 +1,269 @@
+"""Trip-count-aware scheduled-HLO analyzer.
+
+Why: ``compiled.cost_analysis()`` counts each ``while`` body ONCE (verified
+in DESIGN.md §7), so scan-over-layers models under-report FLOPs/bytes by
+~num_layers x. This parser walks the scheduled post-SPMD HLO text —
+shapes there are already PER-DEVICE — and accumulates, per computation:
+
+  - dot FLOPs         2 * prod(result dims) * prod(lhs contracting dims)
+  - memory traffic    sum of operand+result bytes over "executable" ops
+                      (fusions count at their boundary = post-fusion HBM
+                      traffic; bookkeeping ops are free)
+  - collective bytes  sum of operand bytes of all-reduce / all-gather /
+                      reduce-scatter / all-to-all / collective-permute
+
+then scales through the call graph, multiplying ``while`` callees by their
+``backend_config known_trip_count``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import re
+from collections import defaultdict
+from typing import Optional
+
+DTYPE_BYTES = {
+    "pred": 1, "s4": 0.5, "u4": 0.5, "s8": 1, "u8": 1,
+    "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3b11fnuz": 1, "f8e4m3fnuz": 1, "f8e5m2fnuz": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16,
+}
+
+COLLECTIVES = (
+    "all-reduce", "all-gather", "reduce-scatter", "all-to-all", "collective-permute",
+)
+# bookkeeping opcodes that cost no HBM traffic at the top level
+FREE_OPS = {
+    "parameter", "constant", "tuple", "get-tuple-element", "bitcast",
+    "while", "call", "conditional", "after-all", "partition-id", "replica-id",
+    "iota",
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_OPLINE_RE = re.compile(r"^\s*(?:ROOT\s+)?%([\w\.\-]+)\s*=\s*(.*)$")
+_TRIP_RE = re.compile(r'known_trip_count[^\d]*(\d+)')
+
+
+def _shape_bytes_and_dims(spec: str):
+    """Sum bytes over every dtype[dims] occurrence; also return first dims."""
+    total = 0.0
+    first_dims = None
+    for dt, dims in _SHAPE_RE.findall(spec):
+        if dt not in DTYPE_BYTES:
+            continue
+        size = 1
+        if dims:
+            for d in dims.split(","):
+                size *= int(d)
+        total += DTYPE_BYTES[dt] * size
+        if first_dims is None:
+            first_dims = [int(d) for d in dims.split(",")] if dims else []
+    return total, (first_dims or [])
+
+
+@dataclasses.dataclass
+class _Comp:
+    name: str
+    flops: float = 0.0
+    mem_bytes: float = 0.0
+    coll_bytes: float = 0.0
+    coll_by_kind: dict = dataclasses.field(default_factory=lambda: defaultdict(float))
+    coll_count: dict = dataclasses.field(default_factory=lambda: defaultdict(int))
+    # call edges: (callee computation name, multiplier)
+    calls: list = dataclasses.field(default_factory=list)
+
+
+def _split_computations(text: str):
+    comps = {}
+    current = None
+    entry = None
+    for line in text.splitlines():
+        m = re.match(r"^(ENTRY\s+)?%([\w\.\-]+)\s*\(.*->.*\{\s*$", line)
+        if m:
+            current = _CompLines(m.group(2), bool(m.group(1)))
+            comps[current.name] = current
+            if m.group(1):
+                entry = current.name
+            continue
+        if current is not None:
+            if line.startswith("}"):
+                current = None
+            else:
+                current.lines.append(line)
+    return comps, entry
+
+
+class _CompLines:
+    def __init__(self, name, is_entry):
+        self.name = name
+        self.is_entry = is_entry
+        self.lines = []
+
+
+def _first_paren_group(s: str) -> str:
+    """Contents of the first balanced (...) group in s."""
+    i = s.find("(")
+    if i < 0:
+        return ""
+    depth = 0
+    for j in range(i, len(s)):
+        if s[j] == "(":
+            depth += 1
+        elif s[j] == ")":
+            depth -= 1
+            if depth == 0:
+                return s[i + 1 : j]
+    return s[i + 1 :]
+
+
+def _root_opcode(cl: _CompLines) -> str:
+    """Opcode of a computation's ROOT instruction."""
+    for line in cl.lines:
+        if line.lstrip().startswith("ROOT "):
+            m = re.search(r"=\s*[^=]*?([\w\-]+)\(", line)
+            if m:
+                return m.group(1)
+    return ""
+
+
+def _parse_comp(cl: _CompLines, fusion_roots: Optional[dict] = None) -> _Comp:
+    comp = _Comp(cl.name)
+    fusion_roots = fusion_roots or {}
+    symtab: dict[str, tuple[float, list]] = {}
+    for line in cl.lines:
+        m = _OPLINE_RE.match(line)
+        if not m:
+            continue
+        name, rest = m.group(1), m.group(2)
+        # result spec: up to the opcode token. The opcode is the first bare
+        # word followed by '(' after the shape spec. Find it by locating the
+        # first occurrence of ' <opcode>(' where <opcode> is [\w-]+.
+        om = re.search(r"([\w\-]+)\(", rest)
+        if om is None:
+            continue
+        opcode = om.group(1)
+        result_spec = rest[: om.start()]
+        rbytes, rdims = _shape_bytes_and_dims(result_spec)
+        symtab[name] = (rbytes, rdims)
+        base = opcode.replace("-start", "")
+        operands_str = _first_paren_group(rest[om.start():])
+        opnames = re.findall(r"%([\w\.\-]+)", operands_str)
+        op_bytes = sum(symtab.get(o, (0.0, []))[0] for o in opnames)
+
+        if opcode.endswith("-done"):
+            continue
+        if base in COLLECTIVES:
+            comp.coll_bytes += op_bytes
+            comp.coll_by_kind[base] += op_bytes
+            comp.coll_count[base] += 1
+            comp.mem_bytes += op_bytes + rbytes
+            continue
+        if opcode == "dynamic-slice":
+            # true traffic = read + write of the slice, not the source buffer
+            comp.mem_bytes += 2 * rbytes
+            continue
+        if opcode == "dynamic-update-slice":
+            # XLA aliases the buffer in place: traffic = the update region
+            upd = symtab.get(opnames[1], (0.0, []))[0] if len(opnames) > 1 else rbytes
+            comp.mem_bytes += 2 * upd
+            continue
+        if opcode == "dot":
+            lhs_dims = symtab.get(opnames[0], (0.0, []))[1] if opnames else []
+            cm = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", rest)
+            cdims = [int(x) for x in cm.group(1).split(",")] if cm and cm.group(1) else []
+            contract = 1
+            for c in cdims:
+                if c < len(lhs_dims):
+                    contract *= lhs_dims[c]
+            out_elems = 1
+            for d in rdims:
+                out_elems *= d
+            comp.flops += 2.0 * out_elems * contract
+            comp.mem_bytes += op_bytes + rbytes
+            continue
+        if opcode == "while":
+            body = re.search(r"body=%([\w\.\-]+)", rest)
+            cond = re.search(r"condition=%([\w\.\-]+)", rest)
+            tm = _TRIP_RE.search(rest)
+            trips = int(tm.group(1)) if tm else 1
+            if body:
+                comp.calls.append((body.group(1), trips))
+            if cond:
+                comp.calls.append((cond.group(1), trips))
+            continue
+        if opcode == "call":
+            to = re.search(r"to_apply=%([\w\.\-]+)", rest)
+            if to:
+                comp.calls.append((to.group(1), 1))
+            continue
+        if opcode == "conditional":
+            for b in re.findall(r"branch_computations=\{([^}]*)\}", rest):
+                for nm in re.findall(r"%([\w\.\-]+)", b):
+                    comp.calls.append((nm, 1))
+            continue
+        if opcode in FREE_OPS:
+            continue
+        if opcode == "fusion":
+            callee = re.search(r"calls=%([\w\.\-]+)", rest)
+            root = fusion_roots.get(callee.group(1)) if callee else ""
+            if root == "dynamic-update-slice":
+                # in-place update fusion: XLA aliases the big buffer operand;
+                # true traffic = the update region + the small inputs.
+                per_op = [symtab.get(o, (0.0, []))[0] for o in opnames]
+                big = max(per_op) if per_op else 0.0
+                comp.mem_bytes += 2.0 * max(0.0, sum(per_op) - big)
+                continue
+            if root == "dynamic-slice":
+                # slice-read fusion: reads a slice of the big operand only
+                comp.mem_bytes += 2.0 * rbytes
+                continue
+        # fusion / elementwise / reduce / copy / custom-call...
+        comp.mem_bytes += op_bytes + rbytes
+    return comp
+
+
+def analyze_hlo(text: str) -> dict:
+    """Returns per-device totals (HLO shapes are post-SPMD):
+    {flops, mem_bytes, collective_bytes, collectives: {kind: bytes},
+     collective_counts: {kind: n}}."""
+    comp_lines, entry = _split_computations(text)
+    fusion_roots = {name: _root_opcode(cl) for name, cl in comp_lines.items()}
+    comps = {name: _parse_comp(cl, fusion_roots) for name, cl in comp_lines.items()}
+    memo: dict[str, tuple] = {}
+
+    def total(name: str):
+        if name in memo:
+            return memo[name]
+        c = comps.get(name)
+        if c is None:
+            return (0.0, 0.0, 0.0, {}, {})
+        memo[name] = (c.flops, c.mem_bytes, c.coll_bytes,
+                      dict(c.coll_by_kind), dict(c.coll_count))  # provisional (cycle guard)
+        f, mb, cb = c.flops, c.mem_bytes, c.coll_bytes
+        kinds = defaultdict(float, c.coll_by_kind)
+        counts = defaultdict(int, c.coll_count)
+        for callee, mult in c.calls:
+            cf, cmb, ccb, ck, cc = total(callee)
+            f += mult * cf
+            mb += mult * cmb
+            cb += mult * ccb
+            for k, v in ck.items():
+                kinds[k] += mult * v
+            for k, v in cc.items():
+                counts[k] += mult * v
+        memo[name] = (f, mb, cb, dict(kinds), dict(counts))
+        return memo[name]
+
+    if entry is None:
+        raise ValueError("no ENTRY computation found")
+    f, mb, cb, kinds, counts = total(entry)
+    return {
+        "flops": f,
+        "mem_bytes": mb,
+        "collective_bytes": cb,
+        "collectives": kinds,
+        "collective_counts": counts,
+    }

@@ -1,0 +1,50 @@
+"""Three-term roofline model for TPU v5e (DESIGN.md §7).
+
+    T_compute    = HLO_FLOPs_per_device / PEAK_FLOPS
+    T_memory     = HLO_bytes_per_device / HBM_BW
+    T_collective = collective_bytes_per_device / ICI_BW
+
+All inputs are per-device (post-SPMD HLO shapes). The dominant term is the
+bottleneck; roofline fraction for the step = max_term / sum-approximation is
+reported alongside (we report terms, dominant, and the useful-compute ratio;
+no single-number gaming).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+
+@dataclass(frozen=True)
+class HW:
+    name: str
+    peak_flops: float   # FLOP/s (bf16)
+    hbm_bw: float       # B/s
+    ici_bw: float       # B/s per link
+
+
+V5E = HW(name="tpu-v5e", peak_flops=197e12, hbm_bw=819e9, ici_bw=50e9)
+
+
+def roofline_terms(analysis: dict, *, hw: HW = V5E, model_flops_per_device: float | None = None) -> dict:
+    t_comp = analysis["flops"] / hw.peak_flops
+    t_mem = analysis["mem_bytes"] / hw.hbm_bw
+    t_coll = analysis["collective_bytes"] / hw.ici_bw
+    terms = {"compute_s": t_comp, "memory_s": t_mem, "collective_s": t_coll}
+    dom = max(terms, key=terms.get)
+    out = {
+        **terms,
+        "dominant": dom.replace("_s", ""),
+        # overlap-free lower bound on step time and the ideal (perfect
+        # overlap) bound; true utilization lies between.
+        "bound_serial_s": t_comp + t_mem + t_coll,
+        "bound_overlap_s": max(terms.values()),
+    }
+    if model_flops_per_device is not None:
+        out["model_flops_per_device"] = model_flops_per_device
+        out["useful_compute_ratio"] = (
+            model_flops_per_device / analysis["flops"] if analysis["flops"] else 0.0
+        )
+        # MFU at the overlap bound: useful flops / (time * peak)
+        t = out["bound_overlap_s"]
+        out["mfu_overlap_bound"] = model_flops_per_device / (t * hw.peak_flops) if t else 0.0
+    return out

@@ -1,0 +1,54 @@
+"""Architecture registry: --arch <id> resolves here.
+
+Each module exports ``config()`` (the exact assigned configuration) and
+``smoke_config()`` (a reduced same-family configuration for CPU tests).
+"""
+from __future__ import annotations
+
+import importlib
+
+ARCH_IDS = [
+    "phi3_mini_3_8b",
+    "qwen2_5_32b",
+    "minicpm3_4b",
+    "qwen2_1_5b",
+    "qwen2_vl_72b",
+    "seamless_m4t_large_v2",
+    "deepseek_v2_lite_16b",
+    "mixtral_8x7b",
+    "rwkv6_3b",
+    "zamba2_7b",
+    # the paper's own architectures
+    "flare_lm",
+    "flare_pde",
+]
+
+_ALIASES = {
+    "phi3-mini-3.8b": "phi3_mini_3_8b",
+    "qwen2.5-32b": "qwen2_5_32b",
+    "minicpm3-4b": "minicpm3_4b",
+    "qwen2-1.5b": "qwen2_1_5b",
+    "qwen2-vl-72b": "qwen2_vl_72b",
+    "seamless-m4t-large-v2": "seamless_m4t_large_v2",
+    "deepseek-v2-lite-16b": "deepseek_v2_lite_16b",
+    "mixtral-8x7b": "mixtral_8x7b",
+    "rwkv6-3b": "rwkv6_3b",
+    "zamba2-7b": "zamba2_7b",
+    "flare-lm": "flare_lm",
+    "flare-pde": "flare_pde",
+}
+
+
+def _module(name: str):
+    name = _ALIASES.get(name, name)
+    if name not in ARCH_IDS:
+        raise KeyError(f"unknown arch {name!r}; known: {ARCH_IDS}")
+    return importlib.import_module(f"repro.configs.{name}")
+
+
+def get_config(name: str):
+    return _module(name).config()
+
+
+def get_smoke_config(name: str):
+    return _module(name).smoke_config()

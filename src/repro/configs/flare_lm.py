@@ -1,0 +1,42 @@
+"""flare-lm [paper-native, beyond-paper variant] — a ~2.6B decoder-only LM
+whose token mixer is causal/streaming FLARE (the paper's future-work item 4,
+built in core/flare_stream.py).
+
+24L d_model=2048, 16 heads x 128, M=512 latents per layer (32 per head
+slice... M is the *total* latent count, split across heads as in the paper),
+SwiGLU FFN 8192, vocab 65536. Decode state is O(M x D) per layer — constant
+in sequence length — so ALL FOUR shapes including long_500k run.
+"""
+from repro.config import AttnConfig, ModelConfig
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="flare-lm",
+        family="flare_lm",
+        num_layers=24,
+        d_model=2048,
+        d_ff=8192,
+        vocab=65536,
+        attn=AttnConfig(kind="flare_stream", num_heads=16, num_kv_heads=16,
+                        head_dim=128, flare_latents=512, flare_chunk=1024),
+        norm="rmsnorm",
+        tie_embeddings=False,
+        remat="full",
+        microbatch=1,
+    )
+
+
+def smoke_config() -> ModelConfig:
+    return ModelConfig(
+        name="flare-lm-smoke",
+        family="flare_lm",
+        num_layers=2,
+        d_model=64,
+        d_ff=128,
+        vocab=128,
+        attn=AttnConfig(kind="flare_stream", num_heads=4, num_kv_heads=4,
+                        head_dim=16, flare_latents=8, flare_chunk=8),
+        norm="rmsnorm",
+        remat="none",
+    )

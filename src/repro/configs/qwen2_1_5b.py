@@ -1,0 +1,38 @@
+"""qwen2-1.5b [dense] — 28L d_model=1536 12H (GQA kv=2) d_ff=8960
+vocab=151936; GQA, QKV bias, tied embeddings. [arXiv:2407.10671]
+"""
+from repro.config import AttnConfig, ModelConfig
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="qwen2-1.5b",
+        family="dense",
+        num_layers=28,
+        d_model=1536,
+        d_ff=8960,
+        vocab=151936,
+        attn=AttnConfig(
+            kind="gqa", num_heads=12, num_kv_heads=2, head_dim=128,
+            rope_theta=1000000.0, qkv_bias=True,
+        ),
+        norm="rmsnorm",
+        tie_embeddings=True,
+        remat="full",
+        microbatch=1,
+    )
+
+
+def smoke_config() -> ModelConfig:
+    return ModelConfig(
+        name="qwen2-smoke",
+        family="dense",
+        num_layers=2,
+        d_model=48,
+        d_ff=128,
+        vocab=128,
+        attn=AttnConfig(kind="gqa", num_heads=6, num_kv_heads=2, head_dim=8, qkv_bias=True),
+        norm="rmsnorm",
+        tie_embeddings=True,
+        remat="none",
+    )

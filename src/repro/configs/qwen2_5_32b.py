@@ -1,0 +1,37 @@
+"""qwen2.5-32b [dense] — 64L d_model=5120 40H (GQA kv=8) d_ff=27648
+vocab=152064; GQA with QKV bias. [hf:Qwen/Qwen2.5-*]
+"""
+from repro.config import AttnConfig, ModelConfig
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="qwen2.5-32b",
+        family="dense",
+        num_layers=64,
+        d_model=5120,
+        d_ff=27648,
+        vocab=152064,
+        attn=AttnConfig(
+            kind="gqa", num_heads=40, num_kv_heads=8, head_dim=128,
+            rope_theta=1000000.0, qkv_bias=True,
+        ),
+        norm="rmsnorm",
+        tie_embeddings=False,
+        remat="full",
+        microbatch=1,
+    )
+
+
+def smoke_config() -> ModelConfig:
+    return ModelConfig(
+        name="qwen2.5-smoke",
+        family="dense",
+        num_layers=2,
+        d_model=80,
+        d_ff=192,
+        vocab=128,
+        attn=AttnConfig(kind="gqa", num_heads=5, num_kv_heads=1, head_dim=16, qkv_bias=True),
+        norm="rmsnorm",
+        remat="none",
+    )

@@ -1,0 +1,42 @@
+"""qwen2-vl-72b [vlm] — 80L d_model=8192 64H (GQA kv=8) d_ff=29568
+vocab=152064; M-RoPE (sections 16/24/24 half-dims), dynamic resolution.
+BACKBONE only: the vision frontend is a stub — input_specs() provides
+precomputed patch/text embeddings [B, S, C]. [arXiv:2409.12191]
+"""
+from repro.config import AttnConfig, ModelConfig
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="qwen2-vl-72b",
+        family="vlm",
+        num_layers=80,
+        d_model=8192,
+        d_ff=29568,
+        vocab=152064,
+        attn=AttnConfig(
+            kind="gqa", num_heads=64, num_kv_heads=8, head_dim=128,
+            rope_theta=1000000.0, qkv_bias=True, mrope_sections=(16, 24, 24),
+        ),
+        norm="rmsnorm",
+        tie_embeddings=False,
+        inputs_are_embeddings=True,
+        remat="full",
+        microbatch=1,
+    )
+
+
+def smoke_config() -> ModelConfig:
+    return ModelConfig(
+        name="qwen2-vl-smoke",
+        family="vlm",
+        num_layers=2,
+        d_model=64,
+        d_ff=128,
+        vocab=128,
+        attn=AttnConfig(kind="gqa", num_heads=4, num_kv_heads=2, head_dim=16,
+                        qkv_bias=True, mrope_sections=(2, 3, 3)),
+        norm="rmsnorm",
+        inputs_are_embeddings=True,
+        remat="none",
+    )

@@ -1,0 +1,40 @@
+"""rwkv6-3b [ssm] — "Finch": 32L d_model=2560 (40 heads x 64) d_ff=8960
+vocab=65536; attention-free, data-dependent per-channel decay.
+[arXiv:2404.05892]
+
+FLARE applicability: none — there is no attention operator to replace
+(DESIGN.md §5); implemented without the technique.
+"""
+from repro.config import AttnConfig, ModelConfig, SSMConfig
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="rwkv6-3b",
+        family="ssm",
+        num_layers=32,
+        d_model=2560,
+        d_ff=8960,
+        vocab=65536,
+        attn=AttnConfig(kind="none"),
+        ssm=SSMConfig(kind="rwkv6", head_dim=64, chunk=64),
+        norm="layernorm",
+        tie_embeddings=False,
+        remat="full",
+        microbatch=1,
+    )
+
+
+def smoke_config() -> ModelConfig:
+    return ModelConfig(
+        name="rwkv6-smoke",
+        family="ssm",
+        num_layers=2,
+        d_model=64,
+        d_ff=160,
+        vocab=128,
+        attn=AttnConfig(kind="none"),
+        ssm=SSMConfig(kind="rwkv6", head_dim=16, chunk=8),
+        norm="layernorm",
+        remat="none",
+    )

@@ -1,0 +1,51 @@
+"""seamless-m4t-large-v2 [audio] — enc-dec, 24L encoder + 24L decoder,
+d_model=1024 16H (kv=16) d_ff=8192 vocab=256206. The speech/text frontend is
+a stub: input_specs() provides precomputed frame embeddings for the encoder.
+[arXiv:2308.11596]
+
+The encoder is bidirectional — the one assigned architecture where the
+paper's FLARE block applies *faithfully* (encoder_mixer="flare" variant,
+used by the hillclimb cell).
+"""
+from repro.config import AttnConfig, ModelConfig
+
+
+def config(encoder_mixer: str = "attn") -> ModelConfig:
+    return ModelConfig(
+        name="seamless-m4t-large-v2" + ("-flare" if encoder_mixer == "flare" else ""),
+        family="audio",
+        num_layers=24,
+        num_encoder_layers=24,
+        d_model=1024,
+        d_ff=8192,
+        vocab=256206,
+        attn=AttnConfig(
+            kind="gqa", num_heads=16, num_kv_heads=16, head_dim=64,
+            rope_theta=10000.0, qkv_bias=True,
+        ),
+        norm="layernorm",
+        tie_embeddings=False,
+        encoder_mixer=encoder_mixer,
+        flare_latents=256,
+        flare_heads=16,
+        remat="full",
+        microbatch=1,
+    )
+
+
+def smoke_config(encoder_mixer: str = "attn") -> ModelConfig:
+    return ModelConfig(
+        name="seamless-smoke",
+        family="audio",
+        num_layers=2,
+        num_encoder_layers=2,
+        d_model=64,
+        d_ff=128,
+        vocab=128,
+        attn=AttnConfig(kind="gqa", num_heads=4, num_kv_heads=4, head_dim=16, qkv_bias=True),
+        norm="layernorm",
+        encoder_mixer=encoder_mixer,
+        flare_latents=16,
+        flare_heads=4,
+        remat="none",
+    )

@@ -1,0 +1,29 @@
+"""FLARE core: the paper's contribution as composable JAX modules.
+
+- flare.py        faithful operator / layer / block (two-SDPA factorization)
+- spectral.py     Algorithm 1 linear-time eigenanalysis of W = W_dec @ W_enc
+- flare_stream.py causal/streaming variant (paper future-work item 4)
+- flare_sp.py     sequence-parallel operator (O(M*C) collectives per layer)
+"""
+from repro.core.flare import (
+    flare_block,
+    flare_dense_operator,
+    flare_layer,
+    flare_mixer,
+    init_flare_block,
+    init_flare_layer,
+    sdpa,
+)
+from repro.core.spectral import flare_spectrum, flare_spectrum_dense
+
+__all__ = [
+    "flare_block",
+    "flare_dense_operator",
+    "flare_layer",
+    "flare_mixer",
+    "init_flare_block",
+    "init_flare_layer",
+    "sdpa",
+    "flare_spectrum",
+    "flare_spectrum_dense",
+]

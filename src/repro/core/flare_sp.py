@@ -1,0 +1,105 @@
+"""Sequence-parallel FLARE via shard_map — O(M*C) collectives per layer.
+
+FLARE's latent bottleneck is also a *communication* bottleneck: under
+sequence parallelism (tokens sharded over an axis), the encode softmax
+
+    z_m = (sum_n e^{s_mn} v_n) / (sum_n e^{s_mn})
+
+is a sum over the sharded axis. Each shard computes partial
+(max, numerator, denominator) statistics over its local tokens; one
+``pmax`` of [M] and one ``psum`` of [M, D] + [M] per head reconstitute the
+exact global encode. The decode is pointwise over tokens — no communication.
+
+Total collective volume per layer: H * (M*D + 2*M) fp32 words, independent
+of N — vs O(N*C) for ring/flash sequence-parallel softmax attention. This is
+the TPU-native distributed form of the paper's "gather-scatter" reading of
+FLARE (App. F calls the encode an all-reduce; here it literally is one).
+
+Used inside ``shard_map`` bodies: callers pass the mesh axis name that the
+token dimension is sharded over.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def flare_mixer_seqparallel(
+    q: jax.Array,  # [H, M, D] (replicated)
+    k: jax.Array,  # [B, H, N_local, D] (sequence-sharded)
+    v: jax.Array,  # [B, H, N_local, D]
+    *,
+    axis_name: str,
+) -> jax.Array:
+    """Exact FLARE mixer with the token dim sharded over `axis_name`.
+
+    Returns the local output shard [B, H, N_local, D].
+    """
+    qf = q.astype(jnp.float32)
+    s = jnp.einsum("hmd,bhnd->bhmn", qf, k.astype(jnp.float32))  # local scores
+    local_max = jnp.max(s, axis=-1)  # [B, H, M]
+    # The stabilizer is a constant shift (cancels in softmax) -> stop_gradient
+    # is exact. pmax has no JVP rule, so gather the per-shard maxima (tiny:
+    # [W, B, H, M]) and reduce locally — all_gather is differentiable.
+    gathered = jax.lax.all_gather(jax.lax.stop_gradient(local_max), axis_name)
+    global_max = jnp.max(gathered, axis=0)
+    e = jnp.exp(s - global_max[..., None])  # [B, H, M, N_local]
+    local_num = jnp.einsum("bhmn,bhnd->bhmd", e, v.astype(jnp.float32))
+    local_den = jnp.sum(e, axis=-1)  # [B, H, M]
+    # The only sequence-length-independent collectives in the layer:
+    num = jax.lax.psum(local_num, axis_name)  # [B, H, M, D]
+    den = jax.lax.psum(local_den, axis_name)  # [B, H, M]
+    z = num / jnp.maximum(den, 1e-30)[..., None]
+    # Decode: local tokens attend over M latents — embarrassingly parallel.
+    w = jax.nn.softmax(s, axis=-2)  # softmax over M for each local token
+    y = jnp.einsum("bhmn,bhmd->bhnd", w, z)
+    return y.astype(v.dtype)
+
+
+def flare_mixer_seqlat(
+    q: jax.Array,  # [H, M_local, D] — latents sharded over lat_axis
+    k: jax.Array,  # [B, H, N_local, D] — tokens sharded over seq_axis
+    v: jax.Array,  # [B, H, N_local, D]
+    *,
+    seq_axis,
+    lat_axis,
+) -> jax.Array:
+    """2D-parallel FLARE: tokens sharded over `seq_axis`, latents over
+    `lat_axis` (beyond-paper; EXPERIMENTS.md §Perf iteration 2).
+
+    Exactness: the encode softmax (over N) psums per-latent stats over
+    seq_axis; the decode softmax (over M) psums per-token stats over
+    lat_axis. Score memory per device shrinks by |seq|x|lat|; the lat-axis
+    collective is one activation-sized psum — the same volume as a standard
+    TP layer all-reduce.
+    """
+    qf = q.astype(jnp.float32)
+    s = jnp.einsum("hmd,bhnd->bhmn", qf, k.astype(jnp.float32))  # [B,H,Ml,Nl]
+    # ---- encode: softmax over the (seq-sharded) N axis, per local latent
+    enc_lmax = jnp.max(s, axis=-1)
+    enc_gmax = jnp.max(jax.lax.all_gather(jax.lax.stop_gradient(enc_lmax), seq_axis), axis=0)
+    e = jnp.exp(s - enc_gmax[..., None])
+    num = jax.lax.psum(jnp.einsum("bhmn,bhnd->bhmd", e, v.astype(jnp.float32)), seq_axis)
+    den = jax.lax.psum(jnp.sum(e, axis=-1), seq_axis)
+    z = num / jnp.maximum(den, 1e-30)[..., None]  # [B, H, M_local, D]
+    # ---- decode: softmax over the (lat-sharded) M axis, per local token
+    dec_lmax = jnp.max(s, axis=-2)  # [B, H, N_local]
+    dec_gmax = jnp.max(jax.lax.all_gather(jax.lax.stop_gradient(dec_lmax), lat_axis), axis=0)
+    ed = jnp.exp(s - dec_gmax[..., None, :])  # [B, H, Ml, Nl]
+    dnum = jax.lax.psum(jnp.einsum("bhmn,bhmd->bhnd", ed, z), lat_axis)
+    dden = jax.lax.psum(jnp.sum(ed, axis=-2), lat_axis)  # [B, H, N_local]
+    y = dnum / jnp.maximum(dden, 1e-30)[..., None]
+    return y.astype(v.dtype)
+
+
+def flare_encode_stats(q: jax.Array, k: jax.Array, v: jax.Array):
+    """Local encode statistics (max, num, den) — building block for custom
+    collective schedules (e.g. overlapping the psum with the decode einsum
+    of the previous layer)."""
+    qf = q.astype(jnp.float32)
+    s = jnp.einsum("hmd,bhnd->bhmn", qf, k.astype(jnp.float32))
+    m = jnp.max(s, axis=-1)
+    e = jnp.exp(s - m[..., None])
+    num = jnp.einsum("bhmn,bhnd->bhmd", e, v.astype(jnp.float32))
+    den = jnp.sum(e, axis=-1)
+    return s, m, num, den

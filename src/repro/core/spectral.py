@@ -1,0 +1,79 @@
+"""Spectral analysis of the FLARE communication operator (paper App. C).
+
+Algorithm 1: eigenvalues/eigenvectors of W = W_dec @ W_enc in
+O(M^3 + M^2 N) without forming the N x N matrix, via
+
+    A   = exp(Q K^T)                       [M, N]
+    L_M = diag(1 / row-sums of A)          [M, M]
+    L_N = diag(1 / col-sums of A)          [N, N]
+    J   = L_M^{1/2} A L_N^{1/2}            [M, N]
+    J J^T = U S^2 U^T (eig of M x M)  =>   eigvals(W) = S^2,
+    eigvecs(W) = L_N^{1/2} J^T U S^{-1}    [N, M]
+
+Stability: we subtract a single GLOBAL max from Q K^T before exponentiating.
+A global shift rescales A by e^{-c}, L_M and L_N by e^{+c}, so J (and hence
+W's spectrum) is exactly invariant — unlike per-row shifts, which would
+change the decode normalization. (DESIGN.md §9.)
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def flare_spectrum(q: jax.Array, k: jax.Array, *, return_vectors: bool = True):
+    """Eigen-decomposition of W for one head.
+
+    Args:
+      q: [M, D] latent queries for one head.
+      k: [N, D] keys for one head.
+
+    Returns:
+      (eigvals [M] descending, eigvecs [N, M] or None)
+    """
+    q = q.astype(jnp.float32)
+    k = k.astype(jnp.float32)
+    scores = q @ k.T  # [M, N]
+    scores = scores - jax.lax.stop_gradient(jnp.max(scores))  # global shift: spectrum-invariant
+    a = jnp.exp(scores)
+    row_sums = jnp.sum(a, axis=1)  # [M]
+    col_sums = jnp.sum(a, axis=0)  # [N]
+    lm_half = jax.lax.rsqrt(row_sums)  # L_M^{1/2} diagonal
+    ln_half = jax.lax.rsqrt(col_sums)  # L_N^{1/2} diagonal
+    j = lm_half[:, None] * a * ln_half[None, :]  # [M, N]
+    jjt = j @ j.T  # [M, M]
+    # JJ^T is symmetric PSD: eigh gives ascending eigvals.
+    s2, u = jnp.linalg.eigh(jjt)
+    order = jnp.argsort(s2)[::-1]
+    s2 = s2[order]
+    u = u[:, order]
+    if not return_vectors:
+        return s2, None
+    s = jnp.sqrt(jnp.maximum(s2, 1e-30))
+    vecs = ln_half[:, None] * (j.T @ (u / s[None, :]))  # [N, M]
+    return s2, vecs
+
+
+def flare_spectrum_dense(q: jax.Array, k: jax.Array):
+    """O(N^3) oracle: eigendecomposition of the materialized W (tests only)."""
+    q = q.astype(jnp.float32)
+    k = k.astype(jnp.float32)
+    scores = q @ k.T
+    w_enc = jax.nn.softmax(scores, axis=-1)  # [M, N]
+    w_dec = jax.nn.softmax(scores, axis=0).T  # [N, M]
+    w = w_dec @ w_enc  # [N, N]
+    eigvals = jnp.linalg.eigvals(w)  # W is similar to PSD => real spectrum
+    return jnp.sort(jnp.real(eigvals))[::-1], w
+
+
+def effective_rank(eigvals: jax.Array, *, threshold: float = 0.99) -> jax.Array:
+    """#modes capturing `threshold` of total spectral energy (paper App. C.2)."""
+    e = jnp.maximum(eigvals, 0.0)
+    c = jnp.cumsum(e) / jnp.maximum(jnp.sum(e), 1e-30)
+    return jnp.sum(c < threshold) + 1
+
+
+def spectrum_by_head(q_latent: jax.Array, k: jax.Array):
+    """Vectorized over heads: q_latent [H, M, D], k [H, N, D] -> eigvals [H, M]."""
+    vals, _ = jax.vmap(lambda qh, kh: flare_spectrum(qh, kh, return_vectors=False))(q_latent, k)
+    return vals

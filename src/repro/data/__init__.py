@@ -1,0 +1,4 @@
+from repro.data.synthetic import TokenStream
+from repro.data.pde_data import darcy_batch, darcy_dataset, pointcloud_batch
+
+__all__ = ["TokenStream", "darcy_batch", "darcy_dataset", "pointcloud_batch"]

@@ -1,0 +1,8 @@
+from repro.distributed.sharding import (
+    batch_spec,
+    cache_shardings,
+    param_shardings,
+    spec_for_leaf,
+)
+
+__all__ = ["batch_spec", "cache_shardings", "param_shardings", "spec_for_leaf"]

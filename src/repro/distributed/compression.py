@@ -1,0 +1,54 @@
+"""Int8 error-feedback gradient compression for the DP all-reduce.
+
+Wire format: each worker quantizes its local gradient shard to int8 with a
+per-tensor fp32 scale, all-gathers the (int8, scale) pairs over the data
+axis, dequantizes and averages locally. Bytes on the DP links drop ~4x vs
+fp32 all-reduce (1 byte/elem + one scalar). The quantization residual is
+carried in an error-feedback accumulator so the *averaged* update remains
+unbiased over steps (Karimireddy et al.-style EF-SGD argument).
+
+Used inside a shard_map'd gradient-sync region when
+TrainConfig.grad_compression is on; convergence is unit-tested on a
+quadratic in tests/test_compression.py.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def quantize_int8(g: jax.Array):
+    scale = jnp.max(jnp.abs(g)) / 127.0
+    scale = jnp.maximum(scale, 1e-30)
+    q = jnp.clip(jnp.round(g / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_int8(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return q.astype(jnp.float32) * scale
+
+
+def compressed_mean(g: jax.Array, axis_name: str, *, error: jax.Array | None = None):
+    """Mean of g across `axis_name` using the int8 wire format.
+
+    Returns (mean_gradient fp32, new_error fp32). Call inside shard_map/pmap.
+    """
+    g32 = g.astype(jnp.float32)
+    if error is not None:
+        g32 = g32 + error
+    q, scale = quantize_int8(g32)
+    new_error = g32 - dequantize_int8(q, scale)
+    qs = jax.lax.all_gather(q, axis_name)            # [W, ...] int8 on the wire
+    scales = jax.lax.all_gather(scale, axis_name)    # [W]
+    deq = qs.astype(jnp.float32) * scales.reshape((-1,) + (1,) * g.ndim)
+    return jnp.mean(deq, axis=0), new_error
+
+
+def compressed_mean_tree(grads, axis_name: str, errors=None):
+    """Tree version; errors tree matches grads (or None)."""
+    if errors is None:
+        errors = jax.tree.map(lambda g: jnp.zeros(g.shape, jnp.float32), grads)
+    pairs = jax.tree.map(lambda g, e: compressed_mean(g, axis_name, error=e), grads, errors)
+    mean = jax.tree.map(lambda p: p[0], pairs, is_leaf=lambda x: isinstance(x, tuple))
+    new_err = jax.tree.map(lambda p: p[1], pairs, is_leaf=lambda x: isinstance(x, tuple))
+    return mean, new_err

@@ -1,0 +1,123 @@
+"""Pallas TPU flash-attention (forward) — the vanilla-attention baseline the
+paper compares against (Fig. 2 / Fig. 8), with causal + sliding-window masks.
+
+Standard flash schedule: grid (G, Q_blocks, KV_blocks), KV innermost with
+running (max, den, acc) scratch; causal/window tiles that are fully masked
+are skipped via ``pl.when`` on the block indices.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _vmem(shape, dtype):
+    from jax.experimental.pallas import tpu as pltpu
+
+    return pltpu.VMEM(shape, dtype)
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, max_scr, den_scr, acc_scr, *,
+                  scale, causal, window, block_q, block_kv, kv_blocks):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        max_scr[...] = jnp.full_like(max_scr, NEG_INF)
+        den_scr[...] = jnp.zeros_like(den_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q_start = qi * block_q
+    k_start = ki * block_kv
+
+    # Tile-level skip: block is entirely masked out.
+    live = True
+    if causal:
+        live = k_start <= q_start + block_q - 1
+    if window is not None:
+        live = jnp.logical_and(live, k_start + block_kv - 1 > q_start - window)
+
+    @pl.when(live if not isinstance(live, bool) else True)
+    def _compute():
+        q = q_ref[0]
+        k = k_ref[0]
+        v = v_ref[0]
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+        ) * scale  # [bq, bkv]
+        rows = q_start + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
+        cols = k_start + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        ok = jnp.ones(s.shape, bool)
+        if causal:
+            ok &= cols <= rows
+        if window is not None:
+            ok &= cols > rows - window
+        s = jnp.where(ok, s, NEG_INF)
+
+        m_prev = max_scr[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+        alpha = jnp.exp(m_prev - m_new)
+        # Zero masked entries explicitly: when an entire row is masked,
+        # m_new == NEG_INF and exp(s - m_new) would be exp(0) = 1 for every
+        # masked column (tests/test_kernels.py causal+window, sq > skv).
+        p = jnp.where(ok, jnp.exp(s - m_new[:, None]), 0.0)
+        den_scr[...] = den_scr[...] * alpha + jnp.sum(p, axis=-1)
+        acc_scr[...] = acc_scr[...] * alpha[:, None] + jax.lax.dot_general(
+            p.astype(v.dtype), v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+        )
+        max_scr[...] = m_new
+
+    @pl.when(ki == kv_blocks - 1)
+    def _finish():
+        den = jnp.maximum(den_scr[...], 1e-30)
+        o_ref[0] = (acc_scr[...] / den[:, None]).astype(o_ref.dtype)
+
+
+def flash_attention_pallas(
+    q: jax.Array,  # [G, Sq, D]
+    k: jax.Array,  # [G, Skv, D]
+    v: jax.Array,  # [G, Skv, D]
+    *,
+    scale: float,
+    causal: bool = True,
+    window: Optional[int] = None,
+    block_q: int = 256,
+    block_kv: int = 512,
+    interpret: bool = False,
+) -> jax.Array:
+    g, sq, d = q.shape
+    skv = k.shape[1]
+    block_q = min(block_q, sq)
+    block_kv = min(block_kv, skv)
+    if sq % block_q or skv % block_kv:
+        raise ValueError(f"Sq={sq}, Skv={skv} must tile by ({block_q},{block_kv})")
+    kv_blocks = skv // block_kv
+    grid = (g, sq // block_q, kv_blocks)
+    kernel = functools.partial(
+        _flash_kernel, scale=scale, causal=causal, window=window,
+        block_q=block_q, block_kv=block_kv, kv_blocks=kv_blocks,
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_q, d), lambda g_, q_, k_: (g_, q_, 0)),
+            pl.BlockSpec((1, block_kv, d), lambda g_, q_, k_: (g_, k_, 0)),
+            pl.BlockSpec((1, block_kv, d), lambda g_, q_, k_: (g_, k_, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, d), lambda g_, q_, k_: (g_, q_, 0)),
+        out_shape=jax.ShapeDtypeStruct((g, sq, d), v.dtype),
+        scratch_shapes=[
+            _vmem((block_q,), jnp.float32),
+            _vmem((block_q,), jnp.float32),
+            _vmem((block_q, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,162 @@
+"""Pallas TPU kernels for the FLARE mixer (encode + decode).
+
+TPU adaptation of the paper's "express the O(NM) bottleneck purely as SDPA"
+insight (DESIGN.md §2):
+
+  * ENCODE is a reduction over the N (token) axis — the only place online
+    softmax is needed. The kernel tiles N into VMEM blocks and keeps
+    flash-style running (max, numerator, denominator) scratch per latent
+    block, writing Z once on the last N tile.
+
+  * DECODE has its softmax over M (latents). M fits VMEM whole (M <= 2048 in
+    every paper/assigned config), so decode is a single pass over N tiles —
+    no rescaling, no second reduction. This asymmetry (only one of the two
+    SDPA calls pays for online softmax) is the TPU-native win; the GPU
+    formulation runs two identical fused-SDPA kernels.
+
+Block shapes: the N/M tile sizes default to 512/128 (MXU-aligned multiples
+of 128 in the contracting layout); D is expected lane-aligned — ops.py pads
+D to a multiple of 128 (zero-padding is exact for both dot products; padded
+output columns are sliced off). For the paper's small-D/many-head regime
+(D in {4, 8}) this padding costs MXU efficiency; the packed-heads layout is
+tracked as a further optimization in EXPERIMENTS.md §Perf.
+
+Grid layout (encode): (G, M_blocks, N_blocks), N innermost so the scratch
+accumulators live across the N sweep. G = B * H flattened by ops.py.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# Encode: Z = softmax(q k^T) v with online softmax over N tiles
+# ---------------------------------------------------------------------------
+
+
+def _encode_kernel(q_ref, k_ref, v_ref, z_ref, max_scr, den_scr, num_scr, *, n_blocks):
+    n_idx = pl.program_id(2)
+
+    @pl.when(n_idx == 0)
+    def _init():
+        max_scr[...] = jnp.full_like(max_scr, NEG_INF)
+        den_scr[...] = jnp.zeros_like(den_scr)
+        num_scr[...] = jnp.zeros_like(num_scr)
+
+    q = q_ref[0]  # [bm, D]
+    k = k_ref[0]  # [bn, D]
+    v = v_ref[0]  # [bn, D]
+    s = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    )  # [bm, bn], scale = 1 (paper §3.2)
+
+    m_prev = max_scr[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+    alpha = jnp.exp(m_prev - m_new)
+    p = jnp.exp(s - m_new[:, None])  # [bm, bn]
+    den_scr[...] = den_scr[...] * alpha + jnp.sum(p, axis=-1)
+    num_scr[...] = num_scr[...] * alpha[:, None] + jax.lax.dot_general(
+        p.astype(v.dtype), v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )
+    max_scr[...] = m_new
+
+    @pl.when(n_idx == n_blocks - 1)
+    def _finish():
+        z_ref[0] = (num_scr[...] / den_scr[...][:, None]).astype(z_ref.dtype)
+
+
+def flare_encode_pallas(
+    q: jax.Array,  # [G, M, D]
+    k: jax.Array,  # [G, N, D]
+    v: jax.Array,  # [G, N, D]
+    *,
+    block_m: int = 128,
+    block_n: int = 512,
+    interpret: bool = False,
+) -> jax.Array:
+    g, m, d = q.shape
+    n = k.shape[1]
+    block_m = min(block_m, m)
+    block_n = min(block_n, n)
+    if m % block_m or n % block_n:
+        raise ValueError(f"M={m} N={n} must tile by ({block_m},{block_n})")
+    n_blocks = n // block_n
+    grid = (g, m // block_m, n_blocks)
+    kernel = functools.partial(_encode_kernel, n_blocks=n_blocks)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_m, d), lambda g_, m_, n_: (g_, m_, 0)),
+            pl.BlockSpec((1, block_n, d), lambda g_, m_, n_: (g_, n_, 0)),
+            pl.BlockSpec((1, block_n, d), lambda g_, m_, n_: (g_, n_, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_m, d), lambda g_, m_, n_: (g_, m_, 0)),
+        out_shape=jax.ShapeDtypeStruct((g, m, d), v.dtype),
+        scratch_shapes=[
+            _vmem((block_m,), jnp.float32),   # running max
+            _vmem((block_m,), jnp.float32),   # running denominator
+            _vmem((block_m, d), jnp.float32),  # running numerator
+        ],
+        interpret=interpret,
+    )(q, k, v)
+
+
+def _vmem(shape, dtype):
+    from jax.experimental.pallas import tpu as pltpu
+
+    return pltpu.VMEM(shape, dtype)
+
+
+# ---------------------------------------------------------------------------
+# Decode: Y = softmax(k q^T) z — softmax over M (fits VMEM), single pass
+# ---------------------------------------------------------------------------
+
+
+def _decode_kernel(k_ref, q_ref, z_ref, y_ref):
+    k = k_ref[0]  # [bn, D]
+    q = q_ref[0]  # [M, D] — whole latent set in VMEM
+    z = z_ref[0]  # [M, D]
+    s = jax.lax.dot_general(
+        k, q, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    )  # [bn, M]
+    m = jnp.max(s, axis=-1, keepdims=True)
+    p = jnp.exp(s - m)
+    p = p / jnp.sum(p, axis=-1, keepdims=True)
+    y_ref[0] = jax.lax.dot_general(
+        p.astype(z.dtype), z, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    ).astype(y_ref.dtype)
+
+
+def flare_decode_pallas(
+    q: jax.Array,  # [G, M, D]
+    k: jax.Array,  # [G, N, D]
+    z: jax.Array,  # [G, M, D]
+    *,
+    block_n: int = 512,
+    interpret: bool = False,
+) -> jax.Array:
+    g, m, d = q.shape
+    n = k.shape[1]
+    block_n = min(block_n, n)
+    if n % block_n:
+        raise ValueError(f"N={n} must tile by {block_n}")
+    grid = (g, n // block_n)
+    return pl.pallas_call(
+        _decode_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_n, d), lambda g_, n_: (g_, n_, 0)),
+            pl.BlockSpec((1, m, d), lambda g_, n_: (g_, 0, 0)),
+            pl.BlockSpec((1, m, d), lambda g_, n_: (g_, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_n, d), lambda g_, n_: (g_, n_, 0)),
+        out_shape=jax.ShapeDtypeStruct((g, n, d), z.dtype),
+        interpret=interpret,
+    )(k, q, z)

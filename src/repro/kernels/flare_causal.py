@@ -1,0 +1,119 @@
+"""Pallas TPU kernel for the factored causal-FLARE chunk (§Perf cell D).
+
+Implements `core.flare_stream.stream_chunk_factored`'s math with VMEM
+tiling: the sequence is swept in T-tiles while per-latent running softmax
+state (max, numerator, denominator) lives in scratch — so the [T, M]
+score tiles and the [bt, bt] intra-tile mixing matrix never touch HBM
+(the memory stream that dominated flare_lm's roofline in XLA form).
+
+Per (group g, tile t) step, with latent state (m, num, den) carried:
+
+    s   = q @ k_t^T                       [M, bt]
+    ref = max(m, rowmax(s));  f1 = e^{s - ref}            (<= 1)
+    cden_j = den * e^{m - ref} + cumsum_j(f1)             [M, bt]
+    w   = softmax_M(s)   (decode weights, per position)
+    f2  = w / cden                                        [M, bt]
+    y_t = f2^T (num * e^{m - ref}) + (f2^T f1  masked j<=i) v_t
+    num <- num * e^{m - ref} + f1 @ v_t;  den <- cden[:, -1];  m <- ref
+
+Same bounded-score contract as the jnp reference (exactness up to cden
+underflow for >~85-nat future score spikes). Layout expectations: D lane-
+aligned via ops.py padding; M and the tile size are sublane-friendly
+multiples of 8 (MXU-aligned multiples of 128 recommended).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _vmem(shape, dtype):
+    from jax.experimental.pallas import tpu as pltpu
+
+    return pltpu.VMEM(shape, dtype)
+
+
+def _causal_chunk_kernel(q_ref, k_ref, v_ref, y_ref, m_scr, num_scr, den_scr, *,
+                         tile: int):
+    t_idx = pl.program_id(1)
+
+    @pl.when(t_idx == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        num_scr[...] = jnp.zeros_like(num_scr)
+        den_scr[...] = jnp.zeros_like(den_scr)
+
+    q = q_ref[0]  # [M, D]
+    k = k_ref[0]  # [bt, D]
+    v = v_ref[0]  # [bt, D]
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32)  # [M, bt]
+
+    m_prev = m_scr[...]                      # [M]
+    ref = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+    carry_scale = jnp.exp(m_prev - ref)      # [M]
+    f1 = jnp.exp(s - ref[:, None])           # [M, bt], <= 1
+    cden = den_scr[...][:, None] * carry_scale[:, None] + jnp.cumsum(f1, axis=1)
+    # decode weights: softmax over the LATENT axis per position
+    smax = jnp.max(s, axis=0)                # [bt]
+    w = jnp.exp(s - smax[None, :])
+    w = w / jnp.sum(w, axis=0)[None, :]
+    f2 = w / jnp.maximum(cden, 1e-30)        # [M, bt]
+
+    carry_num = num_scr[...] * carry_scale[:, None]          # [M, D]
+    y_carry = jax.lax.dot_general(f2, carry_num, (((0,), (0,)), ((), ())),
+                                  preferred_element_type=jnp.float32)  # [bt, D]
+    a = jax.lax.dot_general(f2, f1, (((0,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32)  # [bt(i), bt(j)]
+    rows = jax.lax.broadcasted_iota(jnp.int32, a.shape, 0)
+    cols = jax.lax.broadcasted_iota(jnp.int32, a.shape, 1)
+    a = jnp.where(cols <= rows, a, 0.0)
+    y = y_carry + jax.lax.dot_general(a, v, (((1,), (0,)), ((), ())),
+                                      preferred_element_type=jnp.float32)
+    y_ref[0] = y.astype(y_ref.dtype)
+
+    num_scr[...] = carry_num + jax.lax.dot_general(
+        f1.astype(v.dtype), v, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    den_scr[...] = cden[:, -1]
+    m_scr[...] = ref
+
+
+def flare_causal_chunk_pallas(
+    q: jax.Array,  # [G, M, D]
+    k: jax.Array,  # [G, T, D]
+    v: jax.Array,  # [G, T, D]
+    *,
+    tile: int = 256,
+    interpret: bool = False,
+) -> jax.Array:
+    """Causal FLARE over the whole sequence, tiled; returns [G, T, D]."""
+    g, m, d = q.shape
+    t = k.shape[1]
+    tile = min(tile, t)
+    while t % tile:
+        tile //= 2
+    grid = (g, t // tile)
+    kernel = functools.partial(_causal_chunk_kernel, tile=tile)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, m, d), lambda g_, t_: (g_, 0, 0)),
+            pl.BlockSpec((1, tile, d), lambda g_, t_: (g_, t_, 0)),
+            pl.BlockSpec((1, tile, d), lambda g_, t_: (g_, t_, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, tile, d), lambda g_, t_: (g_, t_, 0)),
+        out_shape=jax.ShapeDtypeStruct((g, t, d), v.dtype),
+        scratch_shapes=[
+            _vmem((m,), jnp.float32),      # running max
+            _vmem((m, d), jnp.float32),    # running numerator
+            _vmem((m,), jnp.float32),      # running denominator
+        ],
+        interpret=interpret,
+    )(q, k, v)

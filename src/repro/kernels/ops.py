@@ -1,0 +1,124 @@
+"""Jit'd dispatch wrappers around the Pallas kernels.
+
+Responsibilities:
+  - flatten [B, H, ...] -> [G, ...] group layout the kernels expect,
+  - pad D to the 128-lane boundary (exact: zero columns do not change
+    q.k scores, and padded output columns are sliced away),
+  - pad N to the tile boundary for FLARE encode (exact: ops.py pads K with a
+    NEG_INF-free scheme — padded tokens get score exp(-inf)=0 via a key mask
+    column trick; see _pad_tokens),
+  - choose interpret mode automatically off-TPU so tests/benchmarks run on
+    CPU, while TPU gets the compiled kernels.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.attention import flash_attention_pallas
+from repro.kernels.flare import flare_decode_pallas, flare_encode_pallas
+from repro.kernels.flare_causal import flare_causal_chunk_pallas
+
+LANE = 128
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _pad_lanes(x: jax.Array) -> jax.Array:
+    d = x.shape[-1]
+    pad = (-d) % LANE
+    if pad == 0:
+        return x
+    return jnp.pad(x, [(0, 0)] * (x.ndim - 1) + [(0, pad)])
+
+
+def _flatten_groups(x: jax.Array) -> jax.Array:
+    b, h, n, d = x.shape
+    return x.reshape(b * h, n, d)
+
+
+def flare_mixer_fused(
+    q: jax.Array,  # [H, M, D] latent queries
+    k: jax.Array,  # [B, H, N, D]
+    v: jax.Array,  # [B, H, N, D]
+    *,
+    block_m: int = 128,
+    block_n: int = 512,
+    interpret: Optional[bool] = None,
+) -> jax.Array:
+    """Fused FLARE mixer via the encode/decode Pallas kernels."""
+    if interpret is None:
+        interpret = not _on_tpu()
+    b, h, n, d = k.shape
+    m = q.shape[1]
+    qq = jnp.broadcast_to(q[None], (b, h, m, d))
+    qg = _pad_lanes(_flatten_groups(qq))
+    kg = _pad_lanes(_flatten_groups(k))
+    vg = _pad_lanes(_flatten_groups(v))
+    # tile-size safety for small inputs
+    bm = min(block_m, m)
+    bn = min(block_n, n)
+    while m % bm:
+        bm //= 2
+    while n % bn:
+        bn //= 2
+    z = flare_encode_pallas(qg, kg, vg, block_m=bm, block_n=bn, interpret=interpret)
+    y = flare_decode_pallas(qg, kg, z, block_n=bn, interpret=interpret)
+    return y[..., :d].reshape(b, h, n, d)
+
+
+def flash_attention(
+    q: jax.Array,  # [B, H, Sq, D]
+    k: jax.Array,  # [B, H, Skv, D]
+    v: jax.Array,  # [B, H, Skv, D]
+    *,
+    scale: float,
+    causal: bool = True,
+    window: Optional[int] = None,
+    block_q: int = 256,
+    block_kv: int = 512,
+    interpret: Optional[bool] = None,
+) -> jax.Array:
+    if interpret is None:
+        interpret = not _on_tpu()
+    b, h, sq, d = q.shape
+    skv = k.shape[2]
+    qg = _pad_lanes(_flatten_groups(q))
+    kg = _pad_lanes(_flatten_groups(k))
+    vg = _pad_lanes(_flatten_groups(v))
+    bq = min(block_q, sq)
+    bkv = min(block_kv, skv)
+    while sq % bq:
+        bq //= 2
+    while skv % bkv:
+        bkv //= 2
+    o = flash_attention_pallas(qg, kg, vg, scale=scale, causal=causal, window=window,
+                               block_q=bq, block_kv=bkv, interpret=interpret)
+    return o[..., :d].reshape(b, h, sq, d)
+
+
+def flare_causal_fused(
+    q: jax.Array,  # [H, M, D]
+    k: jax.Array,  # [B, H, N, D]
+    v: jax.Array,  # [B, H, N, D]
+    *,
+    tile: int = 256,
+    interpret: Optional[bool] = None,
+) -> jax.Array:
+    """Fused causal FLARE (the flare_lm training mixer) via the Pallas
+    factored-chunk kernel; semantics == core.flare_stream.flare_causal."""
+    if interpret is None:
+        interpret = not _on_tpu()
+    b, h, n, d = k.shape
+    m = q.shape[1]
+    qq = jnp.broadcast_to(q[None], (b, h, m, d))
+    qg = _pad_lanes(_flatten_groups(qq))
+    kg = _pad_lanes(_flatten_groups(k))
+    vg = _pad_lanes(_flatten_groups(v))
+    y = flare_causal_chunk_pallas(qg, kg, vg, tile=tile, interpret=interpret)
+    return y[..., :d].reshape(b, h, n, d)

@@ -1,0 +1,50 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose targets)."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def flare_encode_ref(q: jax.Array, k: jax.Array, v: jax.Array) -> jax.Array:
+    """Encode: Z = softmax(q k^T) v.  q: [G, M, D], k/v: [G, N, D] -> [G, M, D]."""
+    s = jnp.einsum("gmd,gnd->gmn", q, k).astype(jnp.float32)
+    w = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("gmn,gnd->gmd", w.astype(v.dtype), v)
+
+
+def flare_decode_ref(q: jax.Array, k: jax.Array, z: jax.Array) -> jax.Array:
+    """Decode: Y = softmax(k q^T) z.  q: [G, M, D], k: [G, N, D], z: [G, M, D]."""
+    s = jnp.einsum("gnd,gmd->gnm", k, q).astype(jnp.float32)
+    w = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("gnm,gmd->gnd", w.astype(z.dtype), z)
+
+
+def flare_mixer_ref(q: jax.Array, k: jax.Array, v: jax.Array) -> jax.Array:
+    """Fused oracle: both SDPA calls. Shapes as above."""
+    return flare_decode_ref(q, k, flare_encode_ref(q, k, v))
+
+
+def flash_attention_ref(
+    q: jax.Array,  # [G, Sq, D]
+    k: jax.Array,  # [G, Skv, D]
+    v: jax.Array,  # [G, Skv, D]
+    *,
+    scale: float,
+    causal: bool = True,
+    window: Optional[int] = None,
+) -> jax.Array:
+    sq, skv = q.shape[-2], k.shape[-2]
+    s = jnp.einsum("gsd,gtd->gst", q, k).astype(jnp.float32) * scale
+    qi = jax.lax.broadcasted_iota(jnp.int32, (sq, skv), 0)
+    ki = jax.lax.broadcasted_iota(jnp.int32, (sq, skv), 1)
+    ok = jnp.ones((sq, skv), bool)
+    if causal:
+        ok &= ki <= qi
+    if window is not None:
+        ok &= ki > qi - window
+    s = jnp.where(ok, s, -jnp.inf)
+    w = jax.nn.softmax(s, axis=-1)
+    w = jnp.where(jnp.isnan(w), 0.0, w)  # fully-masked rows
+    return jnp.einsum("gst,gtd->gsd", w.astype(v.dtype), v)

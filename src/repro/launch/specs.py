@@ -1,0 +1,222 @@
+"""input_specs() + step builders for every (arch x shape) dry-run cell.
+
+ShapeDtypeStruct stand-ins only — nothing allocates. Each builder returns
+    (step_fn, example_args, in_shardings, donate_argnums, meta)
+ready for ``jax.jit(...).lower(*example_args)``.
+
+Step kinds:
+  train_4k    -> train_step(params, opt_state, batch)   [microbatched accum]
+  prefill_32k -> prefill(params_bf16, batch)            [builds KV cache]
+  decode_*    -> serve_step(params_bf16, token, caches)  [one new token]
+
+Decode caches get capacity seq_len + 128 (headroom keeps the sharded seq dim
+divisible by the mesh axes).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.config import ModelConfig, ShapeConfig, TrainConfig
+from repro.distributed.sharding import batch_spec, fsdp_axes, param_shardings
+from repro.models.api import get_model
+from repro.optim.adamw import init_adamw
+from repro.train.steps import make_train_step
+
+CAP_PAD = 128
+
+
+def dp_size(mesh: Mesh) -> int:
+    n = 1
+    for a in fsdp_axes(mesh):
+        n *= mesh.shape[a]
+    return n
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig) -> dict:
+    """ShapeDtypeStruct stand-ins for the model inputs of this shape."""
+    b, s = shape.global_batch, shape.seq_len
+    tok = jax.ShapeDtypeStruct((b, s), jnp.int32)
+    if cfg.family == "pde":
+        return {
+            "x": jax.ShapeDtypeStruct((b, s, 3), jnp.float32),
+            "y": jax.ShapeDtypeStruct((b, s, 1), jnp.float32),
+        }
+    if cfg.family in ("encdec", "audio"):
+        return {
+            "embeds": jax.ShapeDtypeStruct((b, s, cfg.d_model), jnp.bfloat16),
+            "tokens": tok,
+            "labels": tok,
+        }
+    if cfg.inputs_are_embeddings:
+        return {
+            "embeds": jax.ShapeDtypeStruct((b, s, cfg.d_model), jnp.bfloat16),
+            "labels": tok,
+        }
+    return {"tokens": tok, "labels": tok}
+
+
+def _pde_point_axes(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh):
+    """Axes the PDE point dimension shards over: all of (pod, data, model)
+    when divisible (pde_1m), else just the batch/FSDP axes (pde_40k)."""
+    full = tuple(fsdp_axes(mesh)) + ("model",)
+    n_full = 1
+    for a in full:
+        n_full *= mesh.shape[a]
+    if shape.seq_len % n_full == 0:
+        return full
+    return tuple(fsdp_axes(mesh))
+
+
+def batch_shardings(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh) -> dict:
+    fsdp = fsdp_axes(mesh)
+    if cfg.family == "pde":
+        # batch may be < dp (paper-scale point clouds): shard the POINT dim —
+        # sequence-parallel FLARE (O(M*C) psum per layer, DESIGN.md §2).
+        spec = P(None, _pde_point_axes(cfg, shape, mesh), None)
+        return {"x": NamedSharding(mesh, spec), "y": NamedSharding(mesh, spec)}
+    out = {}
+    specs = input_specs(cfg, shape)
+    for k, v in specs.items():
+        out[k] = NamedSharding(mesh, P(fsdp, *([None] * (v.ndim - 1))))
+    return out
+
+
+def _bf16_params(shapes):
+    return jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct(
+            s.shape, jnp.bfloat16 if jnp.issubdtype(s.dtype, jnp.floating) else s.dtype),
+        shapes)
+
+
+def _cache_shardings(caches_shape, mesh: Mesh, batch_size: int, report=None):
+    """Heuristic decode-cache shardings: batch dim over (pod,data); the
+    largest model-axis-divisible dim (kv-heads if possible, else seq/state)
+    over "model". Stacked-layer leading dims (ndim>=4, dim0) are skipped."""
+    fsdp = fsdp_axes(mesh)
+    f_sz = dp_size(mesh)
+    m_sz = mesh.shape["model"]
+
+    def one(leaf):
+        shape = leaf.shape
+        nd = len(shape)
+        if nd == 0:
+            return NamedSharding(mesh, P())
+        spec = [None] * nd
+        batch_idx = None
+        start = 1 if nd >= 4 else 0  # skip stacked [L] prefix
+        for i in range(start, nd):
+            if shape[i] == batch_size and batch_size % f_sz == 0:
+                spec[i] = fsdp
+                batch_idx = i
+                break
+        cands = sorted(
+            (j for j in range(start, nd)
+             if j != batch_idx and shape[j] % m_sz == 0 and shape[j] >= m_sz),
+            key=lambda j: -shape[j])
+        if cands:
+            spec[cands[0]] = "model"
+        elif report is not None:
+            report.append(f"cache leaf replicated over model: {shape}")
+        return NamedSharding(mesh, P(*spec))
+
+    return jax.tree.map(one, caches_shape)
+
+
+@dataclasses.dataclass
+class Cell:
+    fn: Any
+    args: tuple
+    in_shardings: tuple
+    donate: tuple
+    meta: dict
+    out_shardings: Any = None
+
+
+def build_cell(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh,
+               tcfg: TrainConfig | None = None) -> Cell:
+    flare_impl = None
+    if cfg.family == "pde":
+        # Sequence-parallel FLARE: tokens sharded over the same axes as the
+        # batch spec below (O(M*C) psum per layer, §Perf iteration 1). When
+        # the point count only divides the data axes, go 2D: latents shard
+        # over "model" so that axis is not idle (§Perf iteration 2).
+        point_axes = _pde_point_axes(cfg, shape, mesh)
+        if "model" in point_axes:
+            flare_impl = ("sp", mesh, point_axes)
+        else:
+            flare_impl = ("sp2d", mesh, point_axes, "model")
+    model = get_model(cfg, flare_impl=flare_impl)
+    key = jax.random.PRNGKey(0)
+    params_shape = jax.eval_shape(model.init, key)
+    report: list = []
+    meta = {"sharding_report": report}
+
+    if shape.step == "train":
+        p_sh = param_shardings(params_shape, mesh, report)
+        opt_shape = jax.eval_shape(init_adamw, params_shape)
+        opt_sh = type(opt_shape)(
+            m=param_shardings(opt_shape.m, mesh, None),
+            v=param_shardings(opt_shape.v, mesh, None),
+            step=NamedSharding(mesh, P()),
+        )
+        dp = dp_size(mesh)
+        per_dev = max(1, shape.global_batch // dp)
+        num_mb = max(1, per_dev // max(1, cfg.microbatch))
+        if shape.global_batch % (dp * num_mb):
+            num_mb = 1
+        meta["num_microbatches"] = num_mb
+        tcfg = tcfg or TrainConfig(steps=1000)
+        step = make_train_step(model.loss, tcfg, num_microbatches=num_mb)
+        batch = input_specs(cfg, shape)
+        b_sh = batch_shardings(cfg, shape, mesh)
+        return Cell(
+            fn=step,
+            args=(params_shape, opt_shape, batch),
+            in_shardings=(p_sh, opt_sh, b_sh),
+            donate=(0, 1),
+            meta=meta,
+        )
+
+    serve_params = _bf16_params(params_shape)
+    p_sh = param_shardings(serve_params, mesh, report)
+    capacity = shape.seq_len + CAP_PAD
+
+    if shape.step == "prefill":
+        fn = lambda p, b: model.prefill(p, b, capacity)
+        batch = input_specs(cfg, shape)
+        b_sh = batch_shardings(cfg, shape, mesh)
+        # out_shardings matter: without them GSPMD replicates the returned
+        # KV caches over the model axis (phi3 prefill output was 24 GiB/dev
+        # instead of ~3; EXPERIMENTS.md §Perf prefill note).
+        out_shape = jax.eval_shape(fn, serve_params, batch)
+        logits_sh = NamedSharding(mesh, P(fsdp_axes(mesh), None)) \
+            if shape.global_batch % dp_size(mesh) == 0 else NamedSharding(mesh, P())
+        caches_sh = _cache_shardings(out_shape[1], mesh, shape.global_batch, report)
+        return Cell(fn=fn, args=(serve_params, batch), in_shardings=(p_sh, b_sh),
+                    donate=(), meta=meta, out_shardings=(logits_sh, caches_sh))
+
+    # decode: one new token against a seq_len cache
+    b = shape.global_batch
+    if model.init_caches is not None:
+        caches_shape = jax.eval_shape(lambda: model.init_caches(b, capacity))
+    else:  # enc-dec: caches come from an (abstract) prefill of seq_len tokens
+        pre_batch = input_specs(cfg, dataclasses.replace(shape, step="prefill"))
+        caches_shape = jax.eval_shape(
+            lambda p, bb: model.prefill(p, bb, capacity)[1], serve_params, pre_batch)
+    c_sh = _cache_shardings(caches_shape, mesh, b, report)
+    if cfg.inputs_are_embeddings:
+        token = jax.ShapeDtypeStruct((b, 1, cfg.d_model), jnp.bfloat16)
+        t_sh = NamedSharding(mesh, P(fsdp_axes(mesh), None, None)) if b % dp_size(mesh) == 0 \
+            else NamedSharding(mesh, P())
+    else:
+        token = jax.ShapeDtypeStruct((b, 1), jnp.int32)
+        t_sh = NamedSharding(mesh, P(fsdp_axes(mesh), None)) if b % dp_size(mesh) == 0 \
+            else NamedSharding(mesh, P())
+    fn = lambda p, t, c: model.decode_step(p, t, c)
+    return Cell(fn=fn, args=(serve_params, token, caches_shape),
+                in_shardings=(p_sh, t_sh, c_sh), donate=(2,), meta=meta)

@@ -1,0 +1,120 @@
+"""Uniform model API: every architecture exposes init/loss/prefill/decode.
+
+The launcher, dry-run and trainer talk only to this interface:
+
+    m = get_model(cfg)
+    params = m.init(key)                        # or jax.eval_shape(m.init, key)
+    loss = m.loss(params, batch)                # train_4k
+    logits, caches = m.prefill(params, batch, capacity)   # prefill_32k
+    caches0 = m.init_caches(batch_size, capacity)
+    logits, caches = m.decode_step(params, token, caches)  # decode_* / long_*
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig
+
+
+@dataclass(frozen=True)
+class Model:
+    cfg: ModelConfig
+    init: Callable[..., Any]
+    loss: Callable[..., jax.Array]
+    forward: Callable[..., Any]
+    prefill: Optional[Callable[..., Any]] = None
+    decode_step: Optional[Callable[..., Any]] = None
+    init_caches: Optional[Callable[..., Any]] = None
+
+
+def get_model(cfg: ModelConfig, *, flare_impl=None) -> Model:
+    """flare_impl: override for the FLARE mixer implementation ("sdpa" |
+    "materialized" | "pallas" | ("sp", mesh, seq_axes) sequence-parallel)."""
+    fam = cfg.family
+    if fam in ("dense", "moe", "vlm", "flare_lm"):
+        from repro.models import transformer as t
+
+        def _fwd(p, b):
+            # public API: slice the TP-padded vocab back to the true vocab
+            logits, aux = t.lm_forward(p, b, cfg)
+            return logits[..., : cfg.vocab], aux
+
+        return Model(
+            cfg=cfg,
+            init=lambda key: t.init_lm(key, cfg),
+            loss=lambda p, b: t.lm_loss(p, b, cfg),
+            forward=_fwd,
+            prefill=lambda p, b, cap: t.lm_prefill(p, b, cfg, cap),
+            decode_step=lambda p, tok, c: t.lm_decode_step(p, tok, c, cfg),
+            init_caches=lambda bs, cap: t.init_lm_caches(bs, cfg, cap),
+        )
+    if fam in ("encdec", "audio"):
+        from repro.models import transformer as t
+
+        def _efwd(p, b):
+            logits, aux = t.encdec_forward(p, b, cfg)
+            return logits[..., : cfg.vocab], aux
+
+        return Model(
+            cfg=cfg,
+            init=lambda key: t.init_encdec(key, cfg),
+            loss=lambda p, b: t.encdec_loss(p, b, cfg),
+            forward=_efwd,
+            prefill=lambda p, b, cap: t.encdec_prefill(p, b, cfg, cap),
+            decode_step=lambda p, tok, c: t.encdec_decode_step(p, tok, c, cfg),
+            init_caches=None,  # enc-dec caches come from prefill (need memory)
+        )
+    if fam == "ssm":
+        from repro.models import rwkv_lm as r
+
+        def _rfwd(p, b):
+            logits, aux = r.rwkv_forward(p, b, cfg)
+            return logits[..., : cfg.vocab], aux
+
+        return Model(
+            cfg=cfg,
+            init=lambda key: r.init_rwkv_lm(key, cfg),
+            loss=lambda p, b: r.rwkv_loss(p, b, cfg),
+            forward=_rfwd,
+            prefill=lambda p, b, cap: r.rwkv_prefill(p, b, cfg, cap),
+            decode_step=lambda p, tok, c: r.rwkv_decode_step(p, tok, c, cfg),
+            init_caches=lambda bs, cap: r.init_rwkv_caches(bs, cfg),
+        )
+    if fam == "hybrid":
+        from repro.models import zamba as z
+
+        def _zfwd(p, b):
+            logits, aux = z.zamba_forward(p, b, cfg)
+            return logits[..., : cfg.vocab], aux
+
+        return Model(
+            cfg=cfg,
+            init=lambda key: z.init_zamba(key, cfg),
+            loss=lambda p, b: z.zamba_loss(p, b, cfg),
+            forward=_zfwd,
+            prefill=lambda p, b, cap: z.zamba_prefill(p, b, cfg, cap),
+            decode_step=lambda p, tok, c: z.zamba_decode_step(p, tok, c, cfg),
+            init_caches=lambda bs, cap: z.init_zamba_caches(bs, cfg, cap),
+        )
+    if fam == "pde":
+        from repro.models import pde
+
+        def _init(key):
+            return pde.init_surrogate(
+                key, "flare", in_dim=3, out_dim=1, dim=cfg.d_model,
+                num_blocks=cfg.num_layers, num_heads=cfg.flare_heads,
+                num_latents=cfg.flare_latents,
+            )
+
+        impl = flare_impl or "sdpa"
+        return Model(
+            cfg=cfg,
+            init=_init,
+            loss=lambda p, b: pde.surrogate_loss(p, b, num_heads=cfg.flare_heads, impl=impl),
+            forward=lambda p, b: pde.surrogate_forward(p, b["x"], num_heads=cfg.flare_heads, impl=impl),
+        )
+    raise ValueError(f"unknown family {fam!r}")

@@ -1,0 +1,403 @@
+"""Attention family: GQA (RoPE / M-RoPE, bias, sliding window) and MLA.
+
+Three execution modes per layer:
+  - train:   full sequence, causal (or bidirectional for encoders)
+  - prefill: like train but also returns the populated KV cache
+  - decode:  single new token against a fixed-capacity cache
+
+SDPA dispatch (``attn_sdpa``):
+  - "xla":     materialized scores (fine for short S)
+  - "chunked": lax.scan over query blocks with online softmax — the XLA
+               expression of FlashAttention; O(S * block) live memory. Used
+               automatically for long sequences and by the 32k prefill cells.
+  - "pallas":  fused TPU kernel (repro.kernels); validated via interpret=True.
+
+Sliding-window decode uses a ring-buffer cache of size ``window`` — this is
+what keeps mixtral's long_500k cache bounded.
+
+MLA follows DeepSeek-V2: compressed c_kv cache (kv_lora_rank + rope dims) and
+the *absorbed* decode path (W_uk folded into the query, W_uv applied after
+attention over latents), so decode reads only the compressed cache.
+"""
+from __future__ import annotations
+
+import math
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import AttnConfig
+from repro.models.rope import apply_rope, mrope_angles, rope_angles
+from repro.nn.modules import dense, init_dense, init_rmsnorm, rmsnorm
+
+# ---------------------------------------------------------------------------
+# SDPA dispatch
+# ---------------------------------------------------------------------------
+
+
+def _causal_window_bias(sq: int, skv: int, *, causal: bool, window: Optional[int],
+                        q_offset: int = 0) -> Optional[jax.Array]:
+    """Additive fp32 bias [sq, skv] built from iota comparisons (XLA fuses it)."""
+    if not causal and window is None:
+        return None
+    qi = jax.lax.broadcasted_iota(jnp.int32, (sq, skv), 0) + q_offset
+    ki = jax.lax.broadcasted_iota(jnp.int32, (sq, skv), 1)
+    ok = jnp.ones((sq, skv), bool)
+    if causal:
+        ok &= ki <= qi
+    if window is not None:
+        ok &= ki > qi - window
+    return jnp.where(ok, 0.0, -jnp.inf).astype(jnp.float32)
+
+
+def attn_sdpa(
+    q: jax.Array,  # [B, H, Sq, D]
+    k: jax.Array,  # [B, H, Skv, D]
+    v: jax.Array,  # [B, H, Skv, D]
+    *,
+    scale: float,
+    causal: bool = True,
+    window: Optional[int] = None,
+    q_offset: int = 0,
+    impl: str = "auto",
+    chunk: int = 512,
+) -> jax.Array:
+    sq, skv = q.shape[-2], k.shape[-2]
+    if impl == "auto":
+        impl = "chunked" if (sq > 2048 and skv > 2048) else "xla"
+    if impl == "pallas":
+        from repro.kernels.ops import flash_attention
+
+        return flash_attention(q, k, v, scale=scale, causal=causal, window=window)
+    if impl == "xla":
+        scores = jnp.einsum("bhsd,bhtd->bhst", q, k).astype(jnp.float32) * scale
+        bias = _causal_window_bias(sq, skv, causal=causal, window=window, q_offset=q_offset)
+        if bias is not None:
+            scores = scores + bias
+        w = jax.nn.softmax(scores, axis=-1)
+        return jnp.einsum("bhst,bhtd->bhsd", w.astype(v.dtype), v)
+    if impl == "chunked":
+        return _chunked_attention(q, k, v, scale=scale, causal=causal, window=window,
+                                  q_offset=q_offset, chunk=chunk)
+    raise ValueError(f"unknown attention impl {impl!r}")
+
+
+def _chunked_attention(q, k, v, *, scale, causal, window, q_offset, chunk):
+    """Flash-style online-softmax over query blocks, expressed in XLA.
+
+    Scans query blocks; each block computes scores against the full K/V but
+    the [chunk, Skv] score tile is the only large intermediate alive.
+    """
+    b, h, sq, d = q.shape
+    skv = k.shape[-2]
+    pad = (-sq) % chunk
+    if pad:
+        q = jnp.pad(q, ((0, 0), (0, 0), (0, pad), (0, 0)))
+    nblocks = q.shape[-2] // chunk
+    qb = q.reshape(b, h, nblocks, chunk, d).transpose(2, 0, 1, 3, 4)
+    kv_idx = jax.lax.broadcasted_iota(jnp.int32, (1, skv), 1)
+
+    def body(_, args):
+        blk_i, qblk = args
+        scores = jnp.einsum("bhsd,bhtd->bhst", qblk, k).astype(jnp.float32) * scale
+        q_idx = blk_i * chunk + jax.lax.broadcasted_iota(jnp.int32, (chunk, 1), 0) + q_offset
+        ok = jnp.ones((chunk, skv), bool)
+        if causal:
+            ok &= kv_idx <= q_idx
+        if window is not None:
+            ok &= kv_idx > q_idx - window
+        scores = jnp.where(ok, scores, -jnp.inf)
+        m = jnp.max(scores, axis=-1, keepdims=True)
+        m = jnp.maximum(m, -1e30)  # rows that are fully masked
+        e = jnp.exp(scores - m)
+        num = jnp.einsum("bhst,bhtd->bhsd", e.astype(v.dtype), v)
+        den = jnp.sum(e, axis=-1, keepdims=True).astype(v.dtype)
+        return None, num / jnp.maximum(den, 1e-30)
+
+    _, out = jax.lax.scan(body, None, (jnp.arange(nblocks), qb))
+    dv = v.shape[-1]  # may differ from the q/k head dim (e.g. MLA)
+    out = out.transpose(1, 2, 0, 3, 4).reshape(b, h, nblocks * chunk, dv)
+    return out[:, :, :sq]
+
+
+# ---------------------------------------------------------------------------
+# GQA
+# ---------------------------------------------------------------------------
+
+
+class KVCache(NamedTuple):
+    k: jax.Array      # [B, Hkv, S_cap, D] (ring buffer when windowed)
+    v: jax.Array      # [B, Hkv, S_cap, D]
+    length: jax.Array  # [] int32 — total tokens seen so far
+
+
+def init_kv_cache(batch: int, cfg: AttnConfig, capacity: int, dtype=jnp.bfloat16) -> KVCache:
+    cap = capacity if cfg.sliding_window is None else min(capacity, cfg.sliding_window)
+    return KVCache(
+        k=jnp.zeros((batch, cfg.num_kv_heads, cap, cfg.head_dim), dtype),
+        v=jnp.zeros((batch, cfg.num_kv_heads, cap, cfg.head_dim), dtype),
+        length=jnp.zeros((), jnp.int32),
+    )
+
+
+def init_gqa(key, cfg: AttnConfig, d_model: int, *, param_dtype=jnp.float32) -> dict:
+    kq, kk, kv, ko = jax.random.split(key, 4)
+    return {
+        "wq": init_dense(kq, d_model, cfg.q_dim, use_bias=cfg.qkv_bias, param_dtype=param_dtype),
+        "wk": init_dense(kk, d_model, cfg.kv_dim, use_bias=cfg.qkv_bias, param_dtype=param_dtype),
+        "wv": init_dense(kv, d_model, cfg.kv_dim, use_bias=cfg.qkv_bias, param_dtype=param_dtype),
+        "wo": init_dense(ko, cfg.q_dim, d_model, use_bias=False, param_dtype=param_dtype),
+    }
+
+
+def _heads(x, n):  # [B, S, n*D] -> [B, n, S, D]
+    b, s, _ = x.shape
+    return x.reshape(b, s, n, -1).transpose(0, 2, 1, 3)
+
+
+def _unheads(x):  # [B, n, S, D] -> [B, S, n*D]
+    b, n, s, d = x.shape
+    return x.transpose(0, 2, 1, 3).reshape(b, s, n * d)
+
+
+def _expand_kv(k: jax.Array, groups: int) -> jax.Array:
+    """[B, Hkv, S, D] -> [B, Hkv*groups, S, D] by repeat (GQA group expand)."""
+    if groups == 1:
+        return k
+    b, hkv, s, d = k.shape
+    return jnp.broadcast_to(k[:, :, None], (b, hkv, groups, s, d)).reshape(b, hkv * groups, s, d)
+
+
+def gqa_forward(
+    params: dict,
+    x: jax.Array,  # [B, S, C]
+    cfg: AttnConfig,
+    *,
+    positions: jax.Array,  # [B, S] or [3, B, S] for M-RoPE
+    causal: bool = True,
+    impl: str = "auto",
+    return_kv: bool = False,
+):
+    """Train / prefill path."""
+    q = _heads(dense(params["wq"], x), cfg.num_heads)
+    k = _heads(dense(params["wk"], x), cfg.num_kv_heads)
+    v = _heads(dense(params["wv"], x), cfg.num_kv_heads)
+    if cfg.mrope_sections is not None:
+        ang = mrope_angles(positions, cfg.head_dim, cfg.rope_theta, cfg.mrope_sections)
+    else:
+        ang = rope_angles(positions, cfg.head_dim, cfg.rope_theta)
+    q = apply_rope(q, ang)
+    k = apply_rope(k, ang)
+    groups = cfg.num_heads // cfg.num_kv_heads
+    out = attn_sdpa(
+        q, _expand_kv(k, groups), _expand_kv(v, groups),
+        scale=1.0 / math.sqrt(cfg.head_dim), causal=causal,
+        window=cfg.sliding_window, impl=impl,
+    )
+    y = dense(params["wo"], _unheads(out))
+    if return_kv:
+        return y, (k, v)
+    return y
+
+
+def gqa_decode(
+    params: dict,
+    x: jax.Array,  # [B, 1, C] the new token
+    cfg: AttnConfig,
+    cache: KVCache,
+    *,
+    positions: jax.Array,  # [B, 1] or [3, B, 1] — absolute position of the new token
+):
+    """Single-token decode against a (possibly ring-buffered) cache."""
+    b = x.shape[0]
+    q = _heads(dense(params["wq"], x), cfg.num_heads)  # [B, H, 1, D]
+    k = _heads(dense(params["wk"], x), cfg.num_kv_heads)
+    v = _heads(dense(params["wv"], x), cfg.num_kv_heads)
+    if cfg.mrope_sections is not None:
+        ang = mrope_angles(positions, cfg.head_dim, cfg.rope_theta, cfg.mrope_sections)
+    else:
+        ang = rope_angles(positions, cfg.head_dim, cfg.rope_theta)
+    q = apply_rope(q, ang)
+    k = apply_rope(k, ang)
+
+    cap = cache.k.shape[2]
+    slot = jnp.mod(cache.length, cap)  # ring position (== length when unwindowed)
+    new_k = jax.lax.dynamic_update_slice(cache.k, k.astype(cache.k.dtype), (0, 0, slot, 0))
+    new_v = jax.lax.dynamic_update_slice(cache.v, v.astype(cache.v.dtype), (0, 0, slot, 0))
+    new_len = cache.length + 1
+
+    groups = cfg.num_heads // cfg.num_kv_heads
+    kk = _expand_kv(new_k, groups).astype(q.dtype)
+    vv = _expand_kv(new_v, groups).astype(q.dtype)
+    scores = jnp.einsum("bhsd,bhtd->bhst", q, kk).astype(jnp.float32)
+    scores = scores / math.sqrt(cfg.head_dim)
+    # valid slots: index < min(length+1, cap)
+    valid = jax.lax.broadcasted_iota(jnp.int32, (1, 1, 1, cap), 3) < jnp.minimum(new_len, cap)
+    scores = jnp.where(valid, scores, -jnp.inf)
+    w = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhst,bhtd->bhsd", w.astype(vv.dtype), vv)
+    y = dense(params["wo"], _unheads(out))
+    return y, KVCache(new_k, new_v, new_len)
+
+
+def prefill_kv_cache(k: jax.Array, v: jax.Array, cfg: AttnConfig, capacity: int) -> KVCache:
+    """Pack prefill K/V [B, Hkv, S, D] into a fresh cache of `capacity`."""
+    b, hkv, s, d = k.shape
+    cap = capacity if cfg.sliding_window is None else min(capacity, cfg.sliding_window)
+    if s >= cap:
+        return KVCache(k[:, :, s - cap:].astype(jnp.bfloat16),
+                       v[:, :, s - cap:].astype(jnp.bfloat16),
+                       jnp.asarray(s, jnp.int32))
+    pad = ((0, 0), (0, 0), (0, cap - s), (0, 0))
+    return KVCache(jnp.pad(k, pad).astype(jnp.bfloat16),
+                   jnp.pad(v, pad).astype(jnp.bfloat16),
+                   jnp.asarray(s, jnp.int32))
+
+
+# ---------------------------------------------------------------------------
+# MLA — DeepSeek-V2 multi-head latent attention
+# ---------------------------------------------------------------------------
+
+
+class MLACache(NamedTuple):
+    c_kv: jax.Array    # [B, S_cap, kv_lora_rank]  compressed latents
+    k_rope: jax.Array  # [B, S_cap, qk_rope_head_dim]  shared rotary key
+    length: jax.Array  # [] int32
+
+
+def init_mla_cache(batch: int, cfg: AttnConfig, capacity: int, dtype=jnp.bfloat16) -> MLACache:
+    m = cfg.mla
+    return MLACache(
+        c_kv=jnp.zeros((batch, capacity, m.kv_lora_rank), dtype),
+        k_rope=jnp.zeros((batch, capacity, m.qk_rope_head_dim), dtype),
+        length=jnp.zeros((), jnp.int32),
+    )
+
+
+def init_mla(key, cfg: AttnConfig, d_model: int, *, param_dtype=jnp.float32) -> dict:
+    m = cfg.mla
+    h = cfg.num_heads
+    qk_dim = m.qk_nope_head_dim + m.qk_rope_head_dim
+    keys = jax.random.split(key, 8)
+    params = {
+        "w_dkv": init_dense(keys[0], d_model, m.kv_lora_rank, param_dtype=param_dtype),
+        "kv_norm": init_rmsnorm(m.kv_lora_rank, param_dtype=param_dtype),
+        "w_kr": init_dense(keys[1], d_model, m.qk_rope_head_dim, param_dtype=param_dtype),
+        "w_uk": init_dense(keys[2], m.kv_lora_rank, h * m.qk_nope_head_dim, param_dtype=param_dtype),
+        "w_uv": init_dense(keys[3], m.kv_lora_rank, h * m.v_head_dim, param_dtype=param_dtype),
+        "w_o": init_dense(keys[4], h * m.v_head_dim, d_model, param_dtype=param_dtype),
+    }
+    if m.q_lora_rank:
+        params["w_dq"] = init_dense(keys[5], d_model, m.q_lora_rank, param_dtype=param_dtype)
+        params["q_norm"] = init_rmsnorm(m.q_lora_rank, param_dtype=param_dtype)
+        params["w_uq"] = init_dense(keys[6], m.q_lora_rank, h * qk_dim, param_dtype=param_dtype)
+    else:
+        params["w_q"] = init_dense(keys[7], d_model, h * qk_dim, param_dtype=param_dtype)
+    return params
+
+
+def _mla_queries(params, x, cfg: AttnConfig, positions):
+    m = cfg.mla
+    h = cfg.num_heads
+    if m.q_lora_rank:
+        q = dense(params["w_uq"], rmsnorm(params["q_norm"], dense(params["w_dq"], x)))
+    else:
+        q = dense(params["w_q"], x)
+    q = _heads(q, h)  # [B, H, S, qk_nope + qk_rope]
+    q_nope, q_rope = jnp.split(q, [m.qk_nope_head_dim], axis=-1)
+    ang = rope_angles(positions, m.qk_rope_head_dim, cfg.rope_theta)
+    q_rope = apply_rope(q_rope, ang)
+    return q_nope, q_rope
+
+
+def mla_forward(
+    params: dict,
+    x: jax.Array,
+    cfg: AttnConfig,
+    *,
+    positions: jax.Array,
+    causal: bool = True,
+    impl: str = "auto",
+    return_kv: bool = False,
+):
+    """Train / prefill: materializes per-head K/V from the latent (cheap at
+    train time; the compressed cache is what serving stores)."""
+    m = cfg.mla
+    h = cfg.num_heads
+    q_nope, q_rope = _mla_queries(params, x, cfg, positions)
+    c_kv = rmsnorm(params["kv_norm"], dense(params["w_dkv"], x))  # [B, S, r]
+    k_rope = dense(params["w_kr"], x)  # [B, S, rope_dim] shared single head
+    ang = rope_angles(positions, m.qk_rope_head_dim, cfg.rope_theta)
+    k_rope = apply_rope(k_rope, ang)
+    k_nope = _heads(dense(params["w_uk"], c_kv), h)  # [B, H, S, nope]
+    v = _heads(dense(params["w_uv"], c_kv), h)       # [B, H, S, v_dim]
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)
+    k = jnp.concatenate([k_nope, jnp.broadcast_to(k_rope[:, None], k_nope.shape[:3] + (m.qk_rope_head_dim,))], axis=-1)
+    scale = 1.0 / math.sqrt(m.qk_nope_head_dim + m.qk_rope_head_dim)
+    out = attn_sdpa(q, k, v, scale=scale, causal=causal, window=None, impl=impl)
+    y = dense(params["w_o"], _unheads(out))
+    if return_kv:
+        return y, (c_kv, k_rope)
+    return y
+
+
+def mla_decode(
+    params: dict,
+    x: jax.Array,  # [B, 1, C]
+    cfg: AttnConfig,
+    cache: MLACache,
+    *,
+    positions: jax.Array,  # [B, 1]
+):
+    """Absorbed decode: attention runs directly in the compressed latent space.
+
+      score_t = q_nope^T W_uk c_t + q_rope^T k_rope_t
+      out     = W_o W_uv (sum_t w_t c_t)
+
+    so the per-step reads are O(S * (r + rope_dim)) — the MLA serving win.
+    """
+    m = cfg.mla
+    h = cfg.num_heads
+    q_nope, q_rope = _mla_queries(params, x, cfg, positions)  # [B,H,1,*]
+    # Fold W_uk into the query: q_abs [B, H, 1, r]
+    w_uk = params["w_uk"]["kernel"].astype(x.dtype).reshape(m.kv_lora_rank, h, m.qk_nope_head_dim)
+    q_abs = jnp.einsum("bhsd,rhd->bhsr", q_nope, w_uk)
+
+    c_new = rmsnorm(params["kv_norm"], dense(params["w_dkv"], x))  # [B, 1, r]
+    kr_new = dense(params["w_kr"], x)
+    ang = rope_angles(positions, m.qk_rope_head_dim, cfg.rope_theta)
+    kr_new = apply_rope(kr_new, ang)
+
+    cap = cache.c_kv.shape[1]
+    slot = jnp.mod(cache.length, cap)
+    c_all = jax.lax.dynamic_update_slice(cache.c_kv, c_new.astype(cache.c_kv.dtype), (0, slot, 0))
+    kr_all = jax.lax.dynamic_update_slice(cache.k_rope, kr_new.astype(cache.k_rope.dtype), (0, slot, 0))
+    new_len = cache.length + 1
+
+    scale = 1.0 / math.sqrt(m.qk_nope_head_dim + m.qk_rope_head_dim)
+    s_nope = jnp.einsum("bhsr,btr->bhst", q_abs, c_all.astype(x.dtype))
+    s_rope = jnp.einsum("bhsd,btd->bhst", q_rope, kr_all.astype(x.dtype))
+    scores = (s_nope + s_rope).astype(jnp.float32) * scale
+    valid = jax.lax.broadcasted_iota(jnp.int32, (1, 1, 1, cap), 3) < jnp.minimum(new_len, cap)
+    scores = jnp.where(valid, scores, -jnp.inf)
+    w = jax.nn.softmax(scores, axis=-1)
+    ctx = jnp.einsum("bhst,btr->bhsr", w.astype(x.dtype), c_all.astype(x.dtype))  # latent context
+    # Absorb W_uv on the way out: v_h = W_uv_h c  =>  out_h = ctx_h @ W_uv_h
+    w_uv = params["w_uv"]["kernel"].astype(x.dtype).reshape(m.kv_lora_rank, h, m.v_head_dim)
+    out = jnp.einsum("bhsr,rhd->bhsd", ctx, w_uv)
+    y = dense(params["w_o"], _unheads(out))
+    return y, MLACache(c_all, kr_all, new_len)
+
+
+def prefill_mla_cache(c_kv: jax.Array, k_rope: jax.Array, capacity: int) -> MLACache:
+    b, s, r = c_kv.shape
+    if s >= capacity:
+        return MLACache(c_kv[:, s - capacity:].astype(jnp.bfloat16),
+                        k_rope[:, s - capacity:].astype(jnp.bfloat16),
+                        jnp.asarray(s, jnp.int32))
+    return MLACache(
+        jnp.pad(c_kv, ((0, 0), (0, capacity - s), (0, 0))).astype(jnp.bfloat16),
+        jnp.pad(k_rope, ((0, 0), (0, capacity - s), (0, 0))).astype(jnp.bfloat16),
+        jnp.asarray(s, jnp.int32),
+    )

@@ -1,0 +1,119 @@
+"""Mixture-of-Experts FFN: top-k routing with GShard-style dense dispatch.
+
+TPU-native formulation: tokens are grouped, each group builds a
+[group, experts, capacity] one-hot dispatch tensor and the expert matmuls run
+as batched einsums over the expert axis — which shards over the "model" mesh
+axis (expert parallelism). GSPMD then materializes the token shuffle as
+all-to-alls, visible in the dry-run collective table.
+
+Supports mixtral-style (softmax over selected top-k) and deepseek-style
+(softmax over all experts, renormalized top-k + shared experts + routed
+scaling). Capacity-dropped tokens fall through the residual connection
+(standard Switch behaviour); an aux load-balancing loss is returned.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import MoEConfig
+from repro.nn.modules import dense, init_dense
+
+# Default token-group size for dispatch (tokens are reshaped to
+# [groups, group_size]); groups shard over the data axis.
+GROUP_SIZE = 1024
+
+
+def init_moe(key, cfg: MoEConfig, d_model: int, *, param_dtype=jnp.float32) -> dict:
+    kr, ke, ks = jax.random.split(key, 3)
+    e, f = cfg.num_experts, cfg.expert_ffn
+    std = 1.0 / math.sqrt(d_model)
+    kg, ku, kd = jax.random.split(ke, 3)
+    params = {
+        "router": init_dense(kr, d_model, e, param_dtype=param_dtype),
+        # Stacked expert weights: [E, d_model, f] / [E, f, d_model] (SwiGLU experts)
+        "w_gate": (jax.random.truncated_normal(kg, -2, 2, (e, d_model, f), jnp.float32) * std).astype(param_dtype),
+        "w_up": (jax.random.truncated_normal(ku, -2, 2, (e, d_model, f), jnp.float32) * std).astype(param_dtype),
+        "w_down": (jax.random.truncated_normal(kd, -2, 2, (e, f, d_model), jnp.float32) * (1.0 / math.sqrt(f))).astype(param_dtype),
+    }
+    if cfg.num_shared:
+        sf = cfg.shared_ffn or cfg.expert_ffn * cfg.num_shared
+        k1, k2, k3 = jax.random.split(ks, 3)
+        params["shared"] = {
+            "w_gate": init_dense(k1, d_model, sf, param_dtype=param_dtype),
+            "w_up": init_dense(k2, d_model, sf, param_dtype=param_dtype),
+            "w_down": init_dense(k3, sf, d_model, param_dtype=param_dtype),
+        }
+    return params
+
+
+def _router_probs(logits: jax.Array, cfg: MoEConfig):
+    """Return (combine weights over top-k, expert index) both [T, k]."""
+    if cfg.norm_topk_prob:
+        # deepseek/qwen style: softmax over all experts, take top-k, renormalize
+        probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+        gate, idx = jax.lax.top_k(probs, cfg.top_k)
+        gate = gate / jnp.maximum(gate.sum(-1, keepdims=True), 1e-9)
+    else:
+        # mixtral style: top-k on logits then softmax over the selected
+        val, idx = jax.lax.top_k(logits.astype(jnp.float32), cfg.top_k)
+        gate = jax.nn.softmax(val, axis=-1)
+    return gate * cfg.routed_scale, idx
+
+
+def moe_ffn(params: dict, x: jax.Array, cfg: MoEConfig, *, group_size: int = GROUP_SIZE):
+    """x: [B, S, C] -> (y, aux_loss). Routed + optional shared experts."""
+    b, s, c = x.shape
+    t = b * s
+    xf = x.reshape(t, c)
+    gs = min(group_size, t)
+    if t % gs:
+        gs = t  # degenerate small inputs: single group
+    g = t // gs
+    xg = xf.reshape(g, gs, c)
+
+    logits = dense(params["router"], xg)  # [G, gs, E]
+    gate, idx = _router_probs(logits, cfg)  # [G, gs, k]
+
+    e = cfg.num_experts
+    cap = max(1, int(gs * cfg.capacity_factor * cfg.top_k / e))
+
+    # position of each token within its expert queue, per routing slot
+    onehot = jax.nn.one_hot(idx, e, dtype=jnp.int32)  # [G, gs, k, E]
+    # priority: earlier tokens and higher-rank slots first
+    flat = onehot.reshape(g, gs * cfg.top_k, e)
+    pos_in_expert = jnp.cumsum(flat, axis=1) - flat  # [G, gs*k, E]
+    pos = jnp.einsum("gte,gte->gt", pos_in_expert, flat.astype(jnp.int32))
+    pos = pos.reshape(g, gs, cfg.top_k)
+    keep = pos < cap  # capacity check
+
+    # dispatch: [G, gs, E, cap] one-hot (bf16), combine: same with gate weights
+    pos_oh = jax.nn.one_hot(jnp.where(keep, pos, cap), cap + 1, dtype=x.dtype)[..., :cap]
+    exp_oh = jax.nn.one_hot(idx, e, dtype=x.dtype)  # [G, gs, k, E]
+    dispatch = jnp.einsum("gske,gskp->gsep", exp_oh, pos_oh)
+    combine = jnp.einsum("gsk,gske,gskp->gsep", gate.astype(x.dtype), exp_oh, pos_oh)
+
+    # expert inputs: [G, E, cap, C]
+    xin = jnp.einsum("gsep,gsc->gepc", dispatch, xg)
+    wg = params["w_gate"].astype(x.dtype)
+    wu = params["w_up"].astype(x.dtype)
+    wd = params["w_down"].astype(x.dtype)
+    h = jax.nn.silu(jnp.einsum("gepc,ecf->gepf", xin, wg)) * jnp.einsum("gepc,ecf->gepf", xin, wu)
+    xout = jnp.einsum("gepf,efc->gepc", h, wd)
+    y = jnp.einsum("gsep,gepc->gsc", combine, xout)
+
+    # Switch aux load-balance loss: E * sum_e f_e * p_e
+    probs_full = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+    frac_tokens = jnp.mean((jax.nn.one_hot(idx[..., 0], e)), axis=(0, 1))  # top-1 assignment share
+    frac_probs = jnp.mean(probs_full, axis=(0, 1))
+    aux = e * jnp.sum(frac_tokens * frac_probs)
+
+    y = y.reshape(b, s, c)
+    if "shared" in params:
+        sh = params["shared"]
+        hsh = jax.nn.silu(dense(sh["w_gate"], x)) * dense(sh["w_up"], x)
+        y = y + dense(sh["w_down"], hsh)
+    return y, aux

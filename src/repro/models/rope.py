@@ -1,0 +1,73 @@
+"""Rotary position embeddings: standard RoPE and Qwen2-VL M-RoPE."""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def rope_frequencies(head_dim: int, theta: float) -> jax.Array:
+    """Inverse frequencies for the rotating half-dims: [head_dim // 2]."""
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def rope_angles(positions: jax.Array, head_dim: int, theta: float) -> jax.Array:
+    """positions [..., S] -> angles [..., S, head_dim//2] (fp32)."""
+    inv = rope_frequencies(head_dim, theta)
+    return positions.astype(jnp.float32)[..., None] * inv
+
+
+def apply_rope(x: jax.Array, angles: jax.Array) -> jax.Array:
+    """Rotate pairs (x[2i], x[2i+1]). x: [..., S, D], angles: [..., S, D//2].
+
+    Uses the interleaved-pair convention; internally consistent across the
+    whole repo (cache + query use the same convention).
+    """
+    x32 = x.astype(jnp.float32)
+    x1 = x32[..., 0::2]
+    x2 = x32[..., 1::2]
+    cos = jnp.cos(angles)
+    sin = jnp.sin(angles)
+    # broadcast angles over head axis if x is [..., H, S, D] and angles [..., S, D//2]
+    if x1.ndim == angles.ndim + 1:
+        cos = cos[..., None, :, :]
+        sin = sin[..., None, :, :]
+    r1 = x1 * cos - x2 * sin
+    r2 = x1 * sin + x2 * cos
+    out = jnp.stack([r1, r2], axis=-1).reshape(x.shape)
+    return out.astype(x.dtype)
+
+
+def mrope_angles(
+    positions: jax.Array,  # [3, ..., S] (temporal, height, width) position ids
+    head_dim: int,
+    theta: float,
+    sections: Tuple[int, int, int],
+) -> jax.Array:
+    """Qwen2-VL multimodal RoPE: the head_dim//2 frequency slots are split
+    into three sections driven by (t, h, w) positions respectively.
+
+    sections are in half-dim units and must sum to head_dim // 2.
+    Returns angles [..., S, head_dim//2].
+    """
+    if sum(sections) != head_dim // 2:
+        raise ValueError(f"M-RoPE sections {sections} must sum to {head_dim // 2}")
+    inv = rope_frequencies(head_dim, theta)  # [D/2]
+    ang = positions.astype(jnp.float32)[..., None] * inv  # [3, ..., S, D/2]
+    parts = []
+    start = 0
+    for i, sec in enumerate(sections):
+        parts.append(ang[i, ..., start : start + sec])
+        start += sec
+    return jnp.concatenate(parts, axis=-1)
+
+
+def text_positions(batch: int, seq: int, *, offset: int = 0) -> jax.Array:
+    return jnp.broadcast_to(jnp.arange(seq, dtype=jnp.int32) + offset, (batch, seq))
+
+
+def text_mrope_positions(batch: int, seq: int, *, offset: int = 0) -> jax.Array:
+    """For pure text, all three M-RoPE position streams coincide."""
+    p = text_positions(batch, seq, offset=offset)
+    return jnp.broadcast_to(p, (3, batch, seq))

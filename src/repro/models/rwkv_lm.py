@@ -1,0 +1,117 @@
+"""RWKV6 ("Finch") language model assembly — attention-free.
+
+Structure: embed -> LN0 -> N x (time-mix + channel-mix) -> LN -> head.
+Decode carries (tm_last, cm_last, wkv) per layer — O(1) state in sequence
+length, which is what makes the long_500k cell runnable for this family.
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig
+from repro.models.ssm import (
+    RWKVState,
+    init_rwkv6_layer,
+    rwkv6_block,
+)
+from repro.models.transformer import _remat, mask_padded_logits, padded_vocab, stack_layers
+from repro.nn.modules import (
+    dense,
+    init_dense,
+    init_embedding,
+    init_layernorm,
+    layernorm,
+)
+
+
+def init_rwkv_lm(key, cfg: ModelConfig) -> dict:
+    pd = jnp.dtype(cfg.param_dtype)
+    keys = jax.random.split(key, 3)
+    return {
+        "embed": init_embedding(keys[0], padded_vocab(cfg.vocab), cfg.d_model, param_dtype=pd),
+        "ln0": init_layernorm(cfg.d_model, param_dtype=pd),
+        "layers": stack_layers(
+            lambda k: init_rwkv6_layer(k, cfg.d_model, cfg.ssm, cfg.d_ff, param_dtype=pd),
+            keys[1], cfg.num_layers),
+        "final_norm": init_layernorm(cfg.d_model, param_dtype=pd),
+        "lm_head": init_dense(keys[2], cfg.d_model, padded_vocab(cfg.vocab), param_dtype=pd),
+    }
+
+
+def rwkv_forward(params, batch, cfg: ModelConfig, *, impl: str = "chunked"):
+    cd = jnp.dtype(cfg.compute_dtype)
+    x = params["embed"]["table"].astype(cd)[batch["tokens"]]
+    x = layernorm(params["ln0"], x)
+
+    def body(x, layer):
+        x, _ = rwkv6_block(layer, x, cfg.ssm, impl=impl)
+        return x, None
+
+    x, _ = jax.lax.scan(_remat(body, cfg.remat), x, params["layers"])
+    x = layernorm(params["final_norm"], x)
+    logits = mask_padded_logits(dense(params["lm_head"], x).astype(jnp.float32), cfg.vocab)
+    return logits, jnp.zeros((), jnp.float32)
+
+
+def rwkv_loss(params, batch, cfg: ModelConfig, *, impl: str = "chunked"):
+    logits, _ = rwkv_forward(params, batch, cfg, impl=impl)
+    labels = batch["labels"]
+    logz = jax.scipy.special.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    return jnp.mean(logz - gold)
+
+
+class RWKVCaches(NamedTuple):
+    states: Any      # stacked RWKVState [L, ...]
+    pos: jax.Array
+
+
+def init_rwkv_caches(batch: int, cfg: ModelConfig) -> RWKVCaches:
+    d = cfg.ssm.head_dim
+    h = cfg.d_model // d
+
+    def one(_):
+        return RWKVState(
+            tm_last=jnp.zeros((batch, cfg.d_model), jnp.float32),
+            cm_last=jnp.zeros((batch, cfg.d_model), jnp.float32),
+            wkv=jnp.zeros((batch, h, d, d), jnp.float32),
+        )
+
+    states = jax.tree.map(lambda *xs: jnp.stack(xs), *[one(i) for i in range(cfg.num_layers)])
+    return RWKVCaches(states, jnp.zeros((), jnp.int32))
+
+
+def rwkv_prefill(params, batch, cfg: ModelConfig, capacity: int = 0, *, impl: str = "chunked"):
+    """Run the prompt, collect per-layer recurrent states."""
+    cd = jnp.dtype(cfg.compute_dtype)
+    tokens = batch["tokens"]
+    x = params["embed"]["table"].astype(cd)[tokens]
+    x = layernorm(params["ln0"], x)
+
+    def body(x, layer):
+        x, st = rwkv6_block(layer, x, cfg.ssm, impl=impl)
+        return x, st
+
+    x, states = jax.lax.scan(body, x, params["layers"])
+    x = layernorm(params["final_norm"], x[:, -1:])
+    logits = dense(params["lm_head"], x)[:, 0, : cfg.vocab].astype(jnp.float32)
+    return logits, RWKVCaches(states, jnp.asarray(tokens.shape[1], jnp.int32))
+
+
+def rwkv_decode_step(params, token, caches: RWKVCaches, cfg: ModelConfig):
+    cd = jnp.dtype(cfg.compute_dtype)
+    x = params["embed"]["table"].astype(cd)[token]  # [B, 1, C]
+    x = layernorm(params["ln0"], x)
+
+    def body(x, inp):
+        layer, st = inp
+        x, st = rwkv6_block(layer, x, cfg.ssm, state=st, impl="scan")
+        return x, st
+
+    x, new_states = jax.lax.scan(body, x, (params["layers"], caches.states))
+    x = layernorm(params["final_norm"], x)
+    logits = dense(params["lm_head"], x)[:, 0, : cfg.vocab].astype(jnp.float32)
+    return logits, RWKVCaches(new_states, caches.pos + 1)

@@ -1,0 +1,405 @@
+"""Attention-free token mixers: RWKV6 (Finch) and Mamba2 (SSD).
+
+Both come in two mathematically identical forms:
+  - ``*_scan``:    sequential recurrence (reference; also the decode step)
+  - ``*_chunked``: chunk-parallel form (intra-chunk matrix + inter-chunk
+                   state), the TPU-friendly training path.
+
+Stability: all decay products are computed in log space and only ratios
+exp(lc_a - lc_b) with a >= b (hence <= 1) are ever exponentiated.
+
+RWKV6 recurrence per head (k-dim = v-dim = D):
+    S_t = diag(w_t) S_{t-1} + k_t^T v_t          S: [D, D]
+    y_t = r_t . (S_{t-1} + diag(u) k_t^T v_t)
+with data-dependent per-channel decay w_t in (0,1).
+
+Mamba2/SSD per head (scalar decay a_t = exp(dt_t * A)):
+    S_t = a_t S_{t-1} + (dt_t x_t) (x) B_t       S: [P, N]
+    y_t = S_t C_t + D_skip * x_t
+"""
+from __future__ import annotations
+
+import math
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import SSMConfig
+from repro.nn.modules import dense, init_dense, init_layernorm, layernorm
+
+# ===========================================================================
+# RWKV6
+# ===========================================================================
+
+
+def rwkv6_wkv_scan(r, k, v, w, u, s0=None):
+    """Reference WKV recurrence.
+
+    r,k,w: [B, T, H, D]; v: [B, T, H, D]; u: [H, D]; s0: [B, H, D, D].
+    Returns (y [B, T, H, D], s_final).
+    """
+    b, t, h, d = r.shape
+    if s0 is None:
+        s0 = jnp.zeros((b, h, d, d), jnp.float32)
+
+    def step(s, inp):
+        rt, kt, vt, wt = inp  # [B, H, D] each
+        kv = jnp.einsum("bhk,bhv->bhkv", kt, vt)
+        # bonus: current token contributes with diag(u) instead of the decay
+        y = jnp.einsum("bhk,bhkv->bhv", rt, s + u[None, :, :, None] * kv)
+        s = wt[..., None] * s + kv
+        return s, y
+
+    rs, ks, vs, ws = (x.transpose(1, 0, 2, 3).astype(jnp.float32) for x in (r, k, v, w))
+    s, ys = jax.lax.scan(step, s0, (rs, ks, vs, ws))
+    return ys.transpose(1, 0, 2, 3), s
+
+
+def rwkv6_wkv_chunked(r, k, v, w, u, s0=None, *, chunk: int = 32,
+                      intra: str = "factored", clamp: float = 40.0):
+    """Chunk-parallel WKV. Same signature/semantics as the scan form.
+
+    intra="exact":    materializes the [L, L, D] decay-ratio tensor — exact
+                      for arbitrary decays but O(L^2 D) HBM traffic.
+    intra="factored": A[t,i] = <r_t * e^{lc_excl_t - lc_last},
+                               k_i * e^{lc_last - lc_i}>, a plain [L,D]x[D,L]
+                      matmul (EXPERIMENTS.md §Perf cell B) — O(L^2 + L*D)
+                      traffic instead of O(L^2 D).
+
+    Bounded-decay contract for "factored": exact while the decay accumulated
+    over any chunk suffix stays under `clamp` nats (the r-factor exponent is
+    clipped there). RWKV6's parameterization w = exp(-exp(ww)) with the
+    standard decay_base keeps per-step decay ~0.0025-0.5 nats, so 64-token
+    chunks sit far below clamp=40; pathological w < e^{-clamp/chunk} would
+    bias *early-chunk* pairs (tests pin both regimes). Use intra="exact" for
+    adversarial decay ranges.
+    """
+    b, t, h, d = r.shape
+    if t % chunk:
+        raise ValueError(f"T={t} not divisible by chunk={chunk}")
+    if s0 is None:
+        s0 = jnp.zeros((b, h, d, d), jnp.float32)
+    nc = t // chunk
+    f32 = jnp.float32
+
+    def resh(x, dtype):  # [B,T,H,D] -> [nc, B, H, L, D]
+        return x.astype(dtype).reshape(b, nc, chunk, h, d).transpose(1, 0, 3, 2, 4)
+
+    # Scan-carried buffers are a dominant HBM stream of this layer
+    # (EXPERIMENTS.md §Perf cell B, iteration 4): carry only (r, k, v, lc) —
+    # the exclusive cumsum is a shift recomputed in-body, and the raw decay
+    # buffer is not needed past the cumsum. (Carrying r/k/v in bf16 was tried
+    # and REFUTED: the in-body upcasts cost more than the buffer halving.)
+    rc, kc, vc = resh(r, f32), resh(k, f32), resh(v, f32)
+    wc = resh(w, f32)
+    lw = jnp.log(jnp.maximum(wc, 1e-38))  # [nc,B,H,L,D], <= 0
+    lc = jnp.cumsum(lw, axis=-2)          # inclusive
+
+    mask_lt = jnp.tril(jnp.ones((chunk, chunk), bool), k=-1)  # strictly lower: i < t
+
+    def body(s, inp):
+        rt, kt, vt, lci = inp
+        lce = jnp.pad(lci[:, :, :-1, :], ((0, 0), (0, 0), (1, 0), (0, 0)))  # exclusive
+        lc_last = lci[:, :, -1:, :]  # [B,H,1,D]
+        # inter-chunk: y_t += (r_t * exp(lc_excl_t)) . S_in
+        r_dec = rt * jnp.exp(lce)
+        y_inter = jnp.einsum("bhld,bhdv->bhlv", r_dec, s)
+        # decayed keys (also reused by the state update below)
+        k_dec = kt * jnp.exp(lc_last - lci)  # exponent <= 0: safe
+        if intra == "factored":
+            r_fac = rt * jnp.exp(jnp.minimum(lce - lc_last, clamp))
+            a_intra = jnp.einsum("bhtd,bhid->bhti", r_fac, k_dec)
+            a_intra = jnp.where(mask_lt[None, None], a_intra, 0.0)
+        else:
+            # ratio[t,i,d] = exp(lc_excl[t,d] - lc[i,d]) <= 1 for i < t
+            ratio = jnp.exp(
+                jnp.where(
+                    mask_lt[None, None, :, :, None],
+                    lce[:, :, :, None, :] - lci[:, :, None, :, :],
+                    -jnp.inf,
+                )
+            )  # [B,H,L(t),L(i),D]
+            a_intra = jnp.einsum("bhtd,bhid,bhtid->bhti", rt, kt, ratio)
+        y_intra = jnp.einsum("bhti,bhiv->bhtv", a_intra, vt)
+        # diagonal bonus term: current token enters through diag(u)
+        a_diag = jnp.einsum("bhtd,hd,bhtd->bht", rt, u.astype(f32), kt)
+        y_diag = a_diag[..., None] * vt
+        # state update: S_out = diag(exp(lc_last)) S_in + sum_i exp(lc_last - lc_i) k_i (x) v_i
+        s = jnp.exp(lc_last[:, :, 0, :])[..., None] * s + jnp.einsum("bhld,bhlv->bhdv", k_dec, vt)
+        return s, y_inter + y_intra + y_diag
+
+    s, ys = jax.lax.scan(body, s0, (rc, kc, vc, lc))
+    y = ys.transpose(1, 0, 3, 2, 4).reshape(b, t, h, d)
+    return y, s
+
+
+def init_rwkv6_layer(key, d_model: int, cfg: SSMConfig, d_ff: int, *, param_dtype=jnp.float32) -> dict:
+    d = cfg.head_dim
+    h = d_model // d
+    keys = jax.random.split(key, 16)
+    lora_r = 32
+    decay_r = 64
+    std = 1.0 / math.sqrt(d_model)
+
+    def mat(k_, shape, s=std):
+        return (jax.random.truncated_normal(k_, -2, 2, shape, jnp.float32) * s).astype(param_dtype)
+
+    return {
+        "ln1": init_layernorm(d_model, param_dtype=param_dtype),
+        "ln2": init_layernorm(d_model, param_dtype=param_dtype),
+        # time-mix ddlerp params
+        "mu_x": jnp.zeros((d_model,), param_dtype),
+        "mu": jnp.zeros((5, d_model), param_dtype),  # w,k,v,r,g deltas base
+        "lora_a": mat(keys[0], (d_model, 5 * lora_r)),
+        "lora_b": mat(keys[1], (5, lora_r, d_model), s=0.01),
+        # projections
+        "w_r": init_dense(keys[2], d_model, d_model, param_dtype=param_dtype),
+        "w_k": init_dense(keys[3], d_model, d_model, param_dtype=param_dtype),
+        "w_v": init_dense(keys[4], d_model, d_model, param_dtype=param_dtype),
+        "w_g": init_dense(keys[5], d_model, d_model, param_dtype=param_dtype),
+        "w_o": init_dense(keys[6], d_model, d_model, param_dtype=param_dtype),
+        # data-dependent decay
+        "decay_base": jnp.full((d_model,), -6.0, param_dtype),
+        "decay_a": mat(keys[7], (d_model, decay_r)),
+        "decay_b": mat(keys[8], (decay_r, d_model), s=0.01),
+        "u": mat(keys[9], (h, d), s=0.5),  # time_faaaa bonus
+        "ln_x": init_layernorm(d_model, param_dtype=param_dtype),  # per-head group norm
+        # channel mix
+        "cm_mu_k": jnp.zeros((d_model,), param_dtype),
+        "cm_mu_r": jnp.zeros((d_model,), param_dtype),
+        "cm_k": init_dense(keys[10], d_model, d_ff, param_dtype=param_dtype),
+        "cm_v": init_dense(keys[11], d_ff, d_model, param_dtype=param_dtype),
+        "cm_r": init_dense(keys[12], d_model, d_model, param_dtype=param_dtype),
+    }
+
+
+def _token_shift(x: jax.Array, last: jax.Array | None = None) -> jax.Array:
+    """shift(x)[t] = x[t-1]; position 0 gets `last` (or zeros)."""
+    sx = jnp.roll(x, 1, axis=1)
+    first = jnp.zeros_like(x[:, :1]) if last is None else last[:, None, :].astype(x.dtype)
+    return sx.at[:, :1].set(first)
+
+
+class RWKVState(NamedTuple):
+    tm_last: jax.Array   # [B, C] last input of time-mix
+    cm_last: jax.Array   # [B, C] last input of channel-mix
+    wkv: jax.Array       # [B, H, D, D]
+
+
+def rwkv6_time_mix(params: dict, x: jax.Array, cfg: SSMConfig, *,
+                   state: RWKVState | None = None, impl: str = "chunked"):
+    """x: [B, T, C] (already LN'd). Returns (y, new (tm_last, wkv))."""
+    b, t, c = x.shape
+    d = cfg.head_dim
+    h = c // d
+    # ddlerp / token-shift arithmetic runs in the compute dtype (bf16): it is
+    # pure elementwise streaming and was the dominant HBM term after the
+    # factored WKV landed (EXPERIMENTS.md §Perf cell B, iteration 2). Decay
+    # (exp(-exp(.))) and the WKV statistics stay fp32.
+    cd = x.dtype
+    sx = _token_shift(x, None if state is None else state.tm_last)
+    dx = sx - x
+    xxx = x + dx * params["mu_x"].astype(cd)
+    lr = jnp.tanh(xxx @ params["lora_a"].astype(cd)).reshape(b, t, 5, -1)
+    deltas = jnp.einsum("btfr,frc->fbtc", lr, params["lora_b"].astype(cd))
+    mu = params["mu"].astype(cd)
+    xw, xk, xv, xr, xg = (x + dx * (mu[i] + deltas[i]) for i in range(5))
+
+    r = dense(params["w_r"], xr).reshape(b, t, h, d)
+    k = dense(params["w_k"], xk).reshape(b, t, h, d)
+    v = dense(params["w_v"], xv).reshape(b, t, h, d)
+    g = jax.nn.silu(dense(params["w_g"], xg))
+
+    ww = params["decay_base"].astype(jnp.float32) + (
+        jnp.tanh(xw.astype(jnp.float32) @ params["decay_a"].astype(jnp.float32))
+        @ params["decay_b"].astype(jnp.float32)
+    )
+    w = jnp.exp(-jnp.exp(ww)).reshape(b, t, h, d)  # in (0,1)
+
+    s0 = None if state is None else state.wkv
+    if impl == "chunked" and t % cfg.chunk == 0 and t > 1:
+        y, s = rwkv6_wkv_chunked(r, k, v, w, params["u"], s0, chunk=cfg.chunk)
+    else:
+        y, s = rwkv6_wkv_scan(r, k, v, w, params["u"], s0)
+    y = y.reshape(b, t, c)
+    # per-head group norm == layernorm applied per head slice
+    yh = y.reshape(b, t, h, d)
+    mean = yh.mean(-1, keepdims=True)
+    var = jnp.var(yh, axis=-1, keepdims=True)
+    yh = (yh - mean) * jax.lax.rsqrt(var + 64e-5)
+    y = yh.reshape(b, t, c) * params["ln_x"]["scale"].astype(jnp.float32) + params["ln_x"]["bias"].astype(jnp.float32)
+    y = y.astype(x.dtype) * g
+    out = dense(params["w_o"], y)
+    return out, (x[:, -1, :].astype(jnp.float32), s)
+
+
+def rwkv6_channel_mix(params: dict, x: jax.Array, *, last: jax.Array | None = None):
+    """x: [B, T, C] (already LN'd). Returns (y, new last-token).
+    Elementwise lerp runs in the compute dtype (§Perf cell B iteration 2)."""
+    sx = _token_shift(x, last)
+    dx = sx - x
+    xk = x + dx * params["cm_mu_k"].astype(x.dtype)
+    xr = x + dx * params["cm_mu_r"].astype(x.dtype)
+    kk = jnp.square(jax.nn.relu(dense(params["cm_k"], xk)))
+    out = jax.nn.sigmoid(dense(params["cm_r"], xr)) * dense(params["cm_v"], kk)
+    return out, x[:, -1, :].astype(jnp.float32)
+
+
+def rwkv6_block(params: dict, x: jax.Array, cfg: SSMConfig, *,
+                state: RWKVState | None = None, impl: str = "chunked"):
+    """Full RWKV6 layer: x + TimeMix(LN1(x)); x + ChannelMix(LN2(x))."""
+    tm_in = layernorm(params["ln1"], x)
+    tm_out, (tm_last, wkv) = rwkv6_time_mix(params, tm_in, cfg, state=state, impl=impl)
+    x = x + tm_out
+    cm_in = layernorm(params["ln2"], x)
+    cm_out, cm_last = rwkv6_channel_mix(params, cm_in, last=None if state is None else state.cm_last)
+    x = x + cm_out
+    return x, RWKVState(tm_last, cm_last, wkv)
+
+
+# ===========================================================================
+# Mamba2 (SSD)
+# ===========================================================================
+
+
+class Mamba2State(NamedTuple):
+    conv: jax.Array  # [B, conv_dim, K-1] last inputs for the causal conv
+    ssm: jax.Array   # [B, H, P, N]
+
+
+def init_mamba2_layer(key, d_model: int, cfg: SSMConfig, *, param_dtype=jnp.float32) -> dict:
+    d_inner = cfg.expand * d_model
+    p = cfg.head_dim
+    h = cfg.num_heads or d_inner // p
+    n = cfg.state_dim
+    conv_dim = d_inner + 2 * n  # x + B + C go through the conv
+    keys = jax.random.split(key, 6)
+    in_dim = 2 * d_inner + 2 * n + h  # z, xBC, dt
+    return {
+        "norm": init_layernorm(d_model, param_dtype=param_dtype),
+        "in_proj": init_dense(keys[0], d_model, in_dim, param_dtype=param_dtype),
+        "conv_w": (jax.random.normal(keys[1], (conv_dim, cfg.conv_kernel), jnp.float32) * 0.1).astype(param_dtype),
+        "conv_b": jnp.zeros((conv_dim,), param_dtype),
+        "a_log": jnp.log(jnp.linspace(1.0, 16.0, h)).astype(param_dtype),  # A = -exp(a_log)
+        "dt_bias": jnp.zeros((h,), param_dtype),
+        "d_skip": jnp.ones((h,), param_dtype),
+        "out_norm": init_layernorm(d_inner, param_dtype=param_dtype),
+        "out_proj": init_dense(keys[2], d_inner, d_model, param_dtype=param_dtype),
+    }
+
+
+def _causal_conv1d(x: jax.Array, w: jax.Array, b: jax.Array,
+                   state: jax.Array | None = None):
+    """Depthwise causal conv. x: [B, T, C], w: [C, K]. Returns (y, new_state)."""
+    kk = w.shape[1]
+    xf = x.astype(jnp.float32).transpose(0, 2, 1)  # [B, C, T]
+    if state is None:
+        pad = jnp.zeros((xf.shape[0], xf.shape[1], kk - 1), jnp.float32)
+    else:
+        pad = state.astype(jnp.float32)
+    xp = jnp.concatenate([pad, xf], axis=-1)  # [B, C, T+K-1]
+    y = sum(xp[:, :, i : i + xf.shape[-1]] * w[:, i].astype(jnp.float32)[None, :, None] for i in range(kk))
+    y = y + b.astype(jnp.float32)[None, :, None]
+    new_state = xp[:, :, -(kk - 1):]
+    return y.transpose(0, 2, 1).astype(x.dtype), new_state
+
+
+def ssd_scan(x, dt, a_log, bmat, cmat, d_skip, s0=None):
+    """Reference SSD recurrence.
+
+    x: [B,T,H,P], dt: [B,T,H], bmat/cmat: [B,T,N], d_skip: [H], s0: [B,H,P,N].
+    """
+    b, t, h, p = x.shape
+    n = bmat.shape[-1]
+    if s0 is None:
+        s0 = jnp.zeros((b, h, p, n), jnp.float32)
+    a = -jnp.exp(a_log.astype(jnp.float32))  # [H], negative
+    decay = jnp.exp(dt.astype(jnp.float32) * a[None, None, :])  # [B,T,H]
+
+    def step(s, inp):
+        xt, dtt, dect, bt, ct = inp
+        s = dect[..., None, None] * s + jnp.einsum("bhp,bn->bhpn", dtt[..., None] * xt, bt)
+        y = jnp.einsum("bhpn,bn->bhp", s, ct)
+        return s, y
+
+    xs = x.transpose(1, 0, 2, 3).astype(jnp.float32)
+    s, ys = jax.lax.scan(
+        step, s0,
+        (xs, dt.transpose(1, 0, 2).astype(jnp.float32), decay.transpose(1, 0, 2),
+         bmat.transpose(1, 0, 2).astype(jnp.float32), cmat.transpose(1, 0, 2).astype(jnp.float32)),
+    )
+    y = ys.transpose(1, 0, 2, 3) + d_skip.astype(jnp.float32)[None, None, :, None] * x.astype(jnp.float32)
+    return y, s
+
+
+def ssd_chunked(x, dt, a_log, bmat, cmat, d_skip, s0=None, *, chunk: int = 64):
+    """Chunk-parallel SSD (the Mamba2 algorithm). Semantics == ssd_scan."""
+    b, t, h, p = x.shape
+    n = bmat.shape[-1]
+    if t % chunk:
+        raise ValueError(f"T={t} not divisible by chunk={chunk}")
+    if s0 is None:
+        s0 = jnp.zeros((b, h, p, n), jnp.float32)
+    nc = t // chunk
+    f32 = jnp.float32
+    a = -jnp.exp(a_log.astype(f32))
+    ldec = (dt.astype(f32) * a[None, None, :]).reshape(b, nc, chunk, h).transpose(1, 0, 3, 2)  # [nc,B,H,L]
+    xs = (dt.astype(f32)[..., None] * x.astype(f32)).reshape(b, nc, chunk, h, p).transpose(1, 0, 3, 2, 4)
+    xraw = x.astype(f32).reshape(b, nc, chunk, h, p).transpose(1, 0, 3, 2, 4)
+    bs = bmat.astype(f32).reshape(b, nc, chunk, n).transpose(1, 0, 2, 3)  # [nc,B,L,N]
+    cs = cmat.astype(f32).reshape(b, nc, chunk, n).transpose(1, 0, 2, 3)
+
+    tril = jnp.tril(jnp.ones((chunk, chunk), bool))  # i <= t
+
+    def body(s, inp):
+        xt, xr, lw, bt, ct = inp  # xt: [B,H,L,P], lw: [B,H,L], bt/ct: [B,L,N]
+        lc = jnp.cumsum(lw, axis=-1)  # [B,H,L] inclusive
+        # inter-chunk: y_t = C_t . (exp(lc_t) S_in)
+        y_inter = jnp.einsum("bln,bhpn,bhl->bhlp", ct, s, jnp.exp(lc))
+        # intra-chunk: M[t,i] = exp(lc_t - lc_i) for i <= t  (scalar per head)
+        ratio = jnp.exp(jnp.where(tril[None, None], lc[..., :, None] - lc[..., None, :], -jnp.inf))
+        gmat = jnp.einsum("btn,bin->bti", ct, bt)  # [B, L(t), L(i)]
+        y_intra = jnp.einsum("bti,bhti,bhip->bhtp", gmat, ratio, xt)
+        # state update
+        lc_last = lc[..., -1:]
+        k_dec = jnp.exp(lc_last - lc)  # [B,H,L]
+        s = jnp.exp(lc_last)[..., None] * s + jnp.einsum("bhl,bhlp,bln->bhpn", k_dec, xt, bt)
+        y = y_inter + y_intra + d_skip.astype(f32)[None, :, None, None] * xr
+        return s, y
+
+    s, ys = jax.lax.scan(body, s0, (xs, xraw, ldec, bs, cs))
+    y = ys.transpose(1, 0, 3, 2, 4).reshape(b, t, h, p)
+    return y, s
+
+
+def mamba2_block(params: dict, x: jax.Array, cfg: SSMConfig, *,
+                 state: Mamba2State | None = None, impl: str = "chunked"):
+    """Full Mamba2 layer with pre-norm and residual. x: [B, T, C]."""
+    b, t, c = x.shape
+    d_inner = cfg.expand * c
+    p = cfg.head_dim
+    h = cfg.num_heads or d_inner // p
+    n = cfg.state_dim
+
+    resid = x
+    xin = layernorm(params["norm"], x)
+    zxbcdt = dense(params["in_proj"], xin)
+    z, xbc, dt = jnp.split(zxbcdt, [d_inner, 2 * d_inner + 2 * n], axis=-1)
+    conv_state = None if state is None else state.conv
+    xbc, new_conv = _causal_conv1d(xbc, params["conv_w"], params["conv_b"], conv_state)
+    xbc = jax.nn.silu(xbc)
+    xs, bmat, cmat = jnp.split(xbc, [d_inner, d_inner + n], axis=-1)
+    xs = xs.reshape(b, t, h, p)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"].astype(jnp.float32))
+
+    s0 = None if state is None else state.ssm
+    if impl == "chunked" and t % cfg.chunk == 0 and t > 1:
+        y, s = ssd_chunked(xs, dt, params["a_log"], bmat, cmat, params["d_skip"], s0, chunk=cfg.chunk)
+    else:
+        y, s = ssd_scan(xs, dt, params["a_log"], bmat, cmat, params["d_skip"], s0)
+    y = y.reshape(b, t, d_inner).astype(x.dtype)
+    y = y * jax.nn.silu(z)
+    y = layernorm(params["out_norm"], y)
+    out = dense(params["out_proj"], y)
+    return resid + out, Mamba2State(new_conv.astype(x.dtype), s)

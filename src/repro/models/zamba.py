@@ -1,0 +1,320 @@
+"""Zamba2-style hybrid: Mamba2 backbone + a SHARED attention block applied
+every k layers with per-invocation LoRA adapters.
+
+Layout for num_layers = G*k + r: G groups of (k-1 mamba layers + 1 shared
+attention invocation), then r trailing mamba layers. The shared block input
+is concat(hidden, initial_embedding) -> Linear(2C -> C) (zamba's re-injection
+of the embedding stream), then GQA + SwiGLU with LoRA deltas indexed by
+invocation.
+
+Simplifications vs. the released zamba2-7b (noted in DESIGN.md): a single
+shared block (the release alternates two) and LoRA on the q/k/v/o + mlp
+projections only.
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig
+from repro.models.attention import gqa_decode, gqa_forward, init_gqa, init_kv_cache, prefill_kv_cache
+from repro.models.rope import text_positions
+from repro.models.ssm import Mamba2State, init_mamba2_layer, mamba2_block
+from repro.models.transformer import (
+    _constrain_batch,
+    _norm_apply,
+    _norm_init,
+    _remat,
+    mask_padded_logits,
+    padded_vocab,
+    stack_layers,
+)
+from repro.nn.modules import (
+    dense,
+    init_dense,
+    init_embedding,
+    init_swiglu,
+    swiglu,
+)
+
+
+def _plan(cfg: ModelConfig):
+    k = cfg.shared_attn_every
+    g = cfg.num_layers // k          # shared invocations
+    trailing = cfg.num_layers - g * k
+    per_group = k - 1                # mamba layers per group
+    return g, per_group, trailing
+
+
+def init_lora(key, dims, rank, param_dtype):
+    """Per-invocation LoRA stacks: A [G, in, r], B [G, r, out]."""
+    g, din, dout = dims
+    ka, kb = jax.random.split(key)
+    a = (jax.random.normal(ka, (g, din, rank), jnp.float32) * 0.02).astype(param_dtype)
+    b = jnp.zeros((g, rank, dout), param_dtype)
+    return {"a": a, "b": b}
+
+
+def lora_dense(base: dict, lora: dict, idx_or_slice, x: jax.Array) -> jax.Array:
+    """y = x W + (x A_i) B_i ; lora arrays may be pre-indexed ([in,r]/[r,out])."""
+    y = dense(base, x)
+    a = lora["a"] if lora["a"].ndim == 2 else lora["a"][idx_or_slice]
+    b = lora["b"] if lora["b"].ndim == 2 else lora["b"][idx_or_slice]
+    return y + (x @ a.astype(x.dtype)) @ b.astype(x.dtype)
+
+
+def init_zamba(key, cfg: ModelConfig) -> dict:
+    pd = jnp.dtype(cfg.param_dtype)
+    g, per_group, trailing = _plan(cfg)
+    keys = jax.random.split(key, 10)
+    a = cfg.attn
+    r = cfg.lora_rank
+    shared = {
+        "in_proj": init_dense(keys[0], 2 * cfg.d_model, cfg.d_model, param_dtype=pd),
+        "norm1": _norm_init(cfg, cfg.d_model, pd),
+        "attn": init_gqa(keys[1], a, cfg.d_model, param_dtype=pd),
+        "norm2": _norm_init(cfg, cfg.d_model, pd),
+        "mlp": init_swiglu(keys[2], cfg.d_model, cfg.d_ff, param_dtype=pd),
+        # per-invocation LoRA deltas
+        "lora_q": init_lora(keys[3], (g, cfg.d_model, a.q_dim), r, pd),
+        "lora_k": init_lora(keys[4], (g, cfg.d_model, a.kv_dim), r, pd),
+        "lora_v": init_lora(keys[5], (g, cfg.d_model, a.kv_dim), r, pd),
+        "lora_gate": init_lora(keys[6], (g, cfg.d_model, cfg.d_ff), r, pd),
+    }
+    return {
+        "embed": init_embedding(keys[7], padded_vocab(cfg.vocab), cfg.d_model, param_dtype=pd),
+        # mamba params: groups stacked [G, per_group, ...] + trailing [r, ...]
+        "mamba_groups": stack_layers(
+            lambda kk: stack_layers(
+                lambda k2: init_mamba2_layer(k2, cfg.d_model, cfg.ssm, param_dtype=pd),
+                kk, per_group),
+            keys[8], g),
+        "mamba_tail": stack_layers(
+            lambda k2: init_mamba2_layer(k2, cfg.d_model, cfg.ssm, param_dtype=pd),
+            keys[9], trailing) if trailing else None,
+        "shared": shared,
+        "final_norm": _norm_init(cfg, cfg.d_model, pd),
+        "lm_head": init_dense(keys[7], cfg.d_model, padded_vocab(cfg.vocab), param_dtype=pd),
+    }
+
+
+def _shared_block(shared, lora_q, lora_k, lora_v, lora_gate, x, x0, cfg: ModelConfig,
+                  *, positions, cache=None, decode=False, impl="auto", capacity=0):
+    """One invocation of the shared attention block with LoRA deltas."""
+    h = dense(shared["in_proj"], jnp.concatenate([x, x0], axis=-1))
+    hin = _norm_apply(cfg, shared["norm1"], h)
+    a = cfg.attn
+    # LoRA-augmented qkv: reuse gqa machinery by patching projections inline.
+    import math as _math
+
+    from repro.models.attention import _expand_kv, _heads, _unheads, attn_sdpa
+    from repro.models.rope import apply_rope, rope_angles
+
+    q = lora_dense(shared["attn"]["wq"], lora_q, None, hin)
+    k = lora_dense(shared["attn"]["wk"], lora_k, None, hin)
+    v = lora_dense(shared["attn"]["wv"], lora_v, None, hin)
+    q = _heads(q, a.num_heads)
+    k = _heads(k, a.num_kv_heads)
+    v = _heads(v, a.num_kv_heads)
+    ang = rope_angles(positions, a.head_dim, a.rope_theta)
+    q = apply_rope(q, ang)
+    k = apply_rope(k, ang)
+    groups = a.num_heads // a.num_kv_heads
+    new_cache = None
+    if decode:
+        cap = cache.k.shape[2]
+        slot = jnp.mod(cache.length, cap)
+        nk = jax.lax.dynamic_update_slice(cache.k, k.astype(cache.k.dtype), (0, 0, slot, 0))
+        nv = jax.lax.dynamic_update_slice(cache.v, v.astype(cache.v.dtype), (0, 0, slot, 0))
+        nlen = cache.length + 1
+        kk = _expand_kv(nk, groups).astype(q.dtype)
+        vv = _expand_kv(nv, groups).astype(q.dtype)
+        scores = jnp.einsum("bhsd,bhtd->bhst", q, kk).astype(jnp.float32) / _math.sqrt(a.head_dim)
+        valid = jax.lax.broadcasted_iota(jnp.int32, (1, 1, 1, cap), 3) < jnp.minimum(nlen, cap)
+        scores = jnp.where(valid, scores, -jnp.inf)
+        w = jax.nn.softmax(scores, axis=-1)
+        out = jnp.einsum("bhst,bhtd->bhsd", w.astype(vv.dtype), vv)
+        from repro.models.attention import KVCache
+
+        new_cache = KVCache(nk, nv, nlen)
+    else:
+        out = attn_sdpa(q, _expand_kv(k, groups), _expand_kv(v, groups),
+                        scale=1.0 / _math.sqrt(a.head_dim), causal=True,
+                        window=a.sliding_window, impl=impl)
+        if capacity:
+            new_cache = prefill_kv_cache(k, v, a, capacity)
+    y = dense(shared["attn"]["wo"], _unheads(out))
+    h = h + y
+    hin = _norm_apply(cfg, shared["norm2"], h)
+    gate = jax.nn.silu(lora_dense(shared["mlp"]["w_gate"], lora_gate, None, hin))
+    up = dense(shared["mlp"]["w_up"], hin)
+    h = h + dense(shared["mlp"]["w_down"], gate * up)
+    return h, new_cache
+
+
+def zamba_forward(params, batch, cfg: ModelConfig, *, impl: str = "auto"):
+    cd = jnp.dtype(cfg.compute_dtype)
+    # x0 is re-injected into every shared block as a scan closure constant:
+    # pin its batch sharding (same GSPMD hazard as the enc-dec memory).
+    x0 = _constrain_batch(params["embed"]["table"].astype(cd)[batch["tokens"]])
+    x = x0
+    positions = text_positions(x.shape[0], x.shape[1])
+    shared = params["shared"]
+
+    def group_body(x, inp):
+        group_params, li = inp
+
+        def mamba_body(x, layer):
+            x, _ = mamba2_block(layer, x, cfg.ssm, impl="chunked")
+            return x, None
+
+        x, _ = jax.lax.scan(mamba_body, x, group_params)
+        lq = {"a": shared["lora_q"]["a"][li], "b": shared["lora_q"]["b"][li]}
+        lk = {"a": shared["lora_k"]["a"][li], "b": shared["lora_k"]["b"][li]}
+        lv = {"a": shared["lora_v"]["a"][li], "b": shared["lora_v"]["b"][li]}
+        lg = {"a": shared["lora_gate"]["a"][li], "b": shared["lora_gate"]["b"][li]}
+        x, _ = _shared_block(shared, lq, lk, lv, lg, x, x0, cfg, positions=positions, impl=impl)
+        return x, None
+
+    g = params["shared"]["lora_q"]["a"].shape[0]
+    x, _ = jax.lax.scan(_remat(group_body, cfg.remat), x,
+                        (params["mamba_groups"], jnp.arange(g)))
+    if params["mamba_tail"] is not None:
+        def tail_body(x, layer):
+            x, _ = mamba2_block(layer, x, cfg.ssm, impl="chunked")
+            return x, None
+
+        x, _ = jax.lax.scan(_remat(tail_body, cfg.remat), x, params["mamba_tail"])
+    x = _norm_apply(cfg, params["final_norm"], x)
+    logits = mask_padded_logits(dense(params["lm_head"], x).astype(jnp.float32), cfg.vocab)
+    return logits, jnp.zeros((), jnp.float32)
+
+
+def zamba_loss(params, batch, cfg: ModelConfig, *, impl: str = "auto"):
+    logits, _ = zamba_forward(params, batch, cfg, impl=impl)
+    labels = batch["labels"]
+    logz = jax.scipy.special.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    return jnp.mean(logz - gold)
+
+
+class ZambaCaches(NamedTuple):
+    mamba_groups: Any   # stacked Mamba2State [G, per_group, ...]
+    mamba_tail: Any
+    attn: Any           # stacked KVCache [G, ...]
+    x0_tok: Any         # unused placeholder (embeddings recomputed per token)
+    pos: jax.Array
+
+
+def init_zamba_caches(batch: int, cfg: ModelConfig, capacity: int) -> ZambaCaches:
+    g, per_group, trailing = _plan(cfg)
+    d_inner = cfg.ssm.expand * cfg.d_model
+    p = cfg.ssm.head_dim
+    h = cfg.ssm.num_heads or d_inner // p
+    n = cfg.ssm.state_dim
+    conv_dim = d_inner + 2 * n
+
+    def mstate(_):
+        return Mamba2State(
+            conv=jnp.zeros((batch, conv_dim, cfg.ssm.conv_kernel - 1), jnp.bfloat16),
+            ssm=jnp.zeros((batch, h, p, n), jnp.float32),
+        )
+
+    def stackn(n_):
+        return jax.tree.map(lambda *xs: jnp.stack(xs), *[mstate(i) for i in range(n_)])
+
+    groups = jax.tree.map(lambda *xs: jnp.stack(xs), *[stackn(per_group) for _ in range(g)])
+    caches = jax.tree.map(lambda *xs: jnp.stack(xs),
+                          *[init_kv_cache(batch, cfg.attn, capacity) for _ in range(g)])
+    return ZambaCaches(
+        mamba_groups=groups,
+        mamba_tail=stackn(trailing) if trailing else None,
+        attn=caches,
+        x0_tok=None,
+        pos=jnp.zeros((), jnp.int32),
+    )
+
+
+def zamba_decode_step(params, token, caches: ZambaCaches, cfg: ModelConfig):
+    cd = jnp.dtype(cfg.compute_dtype)
+    x0 = params["embed"]["table"].astype(cd)[token]  # [B, 1, C]
+    x = x0
+    b = x.shape[0]
+    positions = jnp.broadcast_to(caches.pos, (b, 1))
+    shared = params["shared"]
+
+    def group_body(x, inp):
+        group_params, mstates, kvcache, li = inp
+
+        def mamba_body(x, inp2):
+            layer, st = inp2
+            x, st = mamba2_block(layer, x, cfg.ssm, state=st, impl="scan")
+            return x, st
+
+        x, new_mstates = jax.lax.scan(mamba_body, x, (group_params, mstates))
+        lq = {"a": shared["lora_q"]["a"][li], "b": shared["lora_q"]["b"][li]}
+        lk = {"a": shared["lora_k"]["a"][li], "b": shared["lora_k"]["b"][li]}
+        lv = {"a": shared["lora_v"]["a"][li], "b": shared["lora_v"]["b"][li]}
+        lg = {"a": shared["lora_gate"]["a"][li], "b": shared["lora_gate"]["b"][li]}
+        x, new_cache = _shared_block(shared, lq, lk, lv, lg, x, x0, cfg,
+                                     positions=positions, cache=kvcache, decode=True)
+        return x, (new_mstates, new_cache)
+
+    g = shared["lora_q"]["a"].shape[0]
+    x, (new_groups, new_attn) = jax.lax.scan(
+        group_body, x, (params["mamba_groups"], caches.mamba_groups, caches.attn, jnp.arange(g)))
+    if params["mamba_tail"] is not None:
+        def tail_body(x, inp2):
+            layer, st = inp2
+            x, st = mamba2_block(layer, x, cfg.ssm, state=st, impl="scan")
+            return x, st
+
+        x, new_tail = jax.lax.scan(tail_body, x, (params["mamba_tail"], caches.mamba_tail))
+    else:
+        new_tail = None
+    x = _norm_apply(cfg, params["final_norm"], x)
+    logits = dense(params["lm_head"], x)[:, 0, : cfg.vocab].astype(jnp.float32)
+    return logits, ZambaCaches(new_groups, new_tail, new_attn, None, caches.pos + 1)
+
+
+def zamba_prefill(params, batch, cfg: ModelConfig, capacity: int, *, impl: str = "auto"):
+    """Prompt pass collecting mamba states + shared-attn KV caches."""
+    cd = jnp.dtype(cfg.compute_dtype)
+    tokens = batch["tokens"]
+    x0 = params["embed"]["table"].astype(cd)[tokens]
+    x = x0
+    positions = text_positions(x.shape[0], x.shape[1])
+    shared = params["shared"]
+
+    def group_body(x, inp):
+        group_params, li = inp
+
+        def mamba_body(x, layer):
+            x, st = mamba2_block(layer, x, cfg.ssm, impl="chunked")
+            return x, st
+
+        x, mstates = jax.lax.scan(mamba_body, x, group_params)
+        lq = {"a": shared["lora_q"]["a"][li], "b": shared["lora_q"]["b"][li]}
+        lk = {"a": shared["lora_k"]["a"][li], "b": shared["lora_k"]["b"][li]}
+        lv = {"a": shared["lora_v"]["a"][li], "b": shared["lora_v"]["b"][li]}
+        lg = {"a": shared["lora_gate"]["a"][li], "b": shared["lora_gate"]["b"][li]}
+        x, cache = _shared_block(shared, lq, lk, lv, lg, x, x0, cfg,
+                                 positions=positions, impl=impl, capacity=capacity)
+        return x, (mstates, cache)
+
+    g = shared["lora_q"]["a"].shape[0]
+    x, (groups, attn_caches) = jax.lax.scan(group_body, x, (params["mamba_groups"], jnp.arange(g)))
+    if params["mamba_tail"] is not None:
+        def tail_body(x, layer):
+            x, st = mamba2_block(layer, x, cfg.ssm, impl="chunked")
+            return x, st
+
+        x, tail_states = jax.lax.scan(tail_body, x, params["mamba_tail"])
+    else:
+        tail_states = None
+    x = _norm_apply(cfg, params["final_norm"], x[:, -1:])
+    logits = dense(params["lm_head"], x)[:, 0, : cfg.vocab].astype(jnp.float32)
+    return logits, ZambaCaches(
+        groups, tail_states, attn_caches, None, jnp.asarray(tokens.shape[1], jnp.int32))

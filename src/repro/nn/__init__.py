@@ -1,0 +1,42 @@
+"""Minimal functional NN substrate (no flax): params are plain pytrees.
+
+Every module is a pair of functions:
+  ``init_<module>(key, ...) -> params``  and  ``<module>(params, x, ...) -> y``.
+"""
+from repro.nn.modules import (
+    Initializer,
+    dense,
+    embedding,
+    gelu_mlp,
+    init_dense,
+    init_embedding,
+    init_gelu_mlp,
+    init_layernorm,
+    init_resmlp,
+    init_rmsnorm,
+    init_swiglu,
+    layernorm,
+    resmlp,
+    rmsnorm,
+    swiglu,
+    truncated_normal_init,
+)
+
+__all__ = [
+    "Initializer",
+    "dense",
+    "embedding",
+    "gelu_mlp",
+    "init_dense",
+    "init_embedding",
+    "init_gelu_mlp",
+    "init_layernorm",
+    "init_resmlp",
+    "init_rmsnorm",
+    "init_swiglu",
+    "layernorm",
+    "resmlp",
+    "rmsnorm",
+    "swiglu",
+    "truncated_normal_init",
+]

@@ -1,0 +1,181 @@
+"""Core functional modules: Linear, Embedding, Norms, ResMLP, SwiGLU, MLP.
+
+Parameters are nested dicts of jnp arrays. Compute follows a simple mixed
+precision policy: parameters are stored in ``param_dtype`` and cast to the
+activation dtype at use; norms and softmax statistics run in fp32.
+"""
+from __future__ import annotations
+
+import math
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+Initializer = Callable[[jax.Array, tuple, jnp.dtype], jax.Array]
+
+
+def truncated_normal_init(stddev: float = 0.02) -> Initializer:
+    def init(key, shape, dtype):
+        return (jax.random.truncated_normal(key, -2.0, 2.0, shape, jnp.float32) * stddev).astype(dtype)
+
+    return init
+
+
+def _fan_in_init(key, shape, dtype):
+    """LeCun-normal-ish init keyed on the penultimate (fan-in) dim."""
+    fan_in = shape[-2] if len(shape) >= 2 else shape[-1]
+    stddev = 1.0 / math.sqrt(fan_in)
+    return (jax.random.truncated_normal(key, -2.0, 2.0, shape, jnp.float32) * stddev).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Linear
+# ---------------------------------------------------------------------------
+
+def init_dense(
+    key,
+    in_dim: int,
+    out_dim: int,
+    *,
+    use_bias: bool = False,
+    param_dtype=jnp.float32,
+    init: Optional[Initializer] = None,
+) -> dict:
+    init = init or _fan_in_init
+    params = {"kernel": init(key, (in_dim, out_dim), param_dtype)}
+    if use_bias:
+        params["bias"] = jnp.zeros((out_dim,), param_dtype)
+    return params
+
+
+def dense(params: dict, x: jax.Array) -> jax.Array:
+    y = x @ params["kernel"].astype(x.dtype)
+    if "bias" in params:
+        y = y + params["bias"].astype(x.dtype)
+    return y
+
+
+# ---------------------------------------------------------------------------
+# Embedding
+# ---------------------------------------------------------------------------
+
+def init_embedding(key, vocab: int, dim: int, *, param_dtype=jnp.float32) -> dict:
+    return {"table": truncated_normal_init(1.0 / math.sqrt(dim))(key, (vocab, dim), param_dtype)}
+
+
+def embedding(params: dict, ids: jax.Array, dtype=jnp.bfloat16) -> jax.Array:
+    return params["table"].astype(dtype)[ids]
+
+
+def embedding_logits(params: dict, x: jax.Array) -> jax.Array:
+    """Tied-embedding readout: x @ table^T."""
+    return x @ params["table"].astype(x.dtype).T
+
+
+# ---------------------------------------------------------------------------
+# Norms (fp32 statistics)
+# ---------------------------------------------------------------------------
+
+def init_layernorm(dim: int, *, param_dtype=jnp.float32) -> dict:
+    return {"scale": jnp.ones((dim,), param_dtype), "bias": jnp.zeros((dim,), param_dtype)}
+
+
+def layernorm(params: dict, x: jax.Array, *, eps: float = 1e-5) -> jax.Array:
+    x32 = x.astype(jnp.float32)
+    mu = jnp.mean(x32, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(x32 - mu), axis=-1, keepdims=True)
+    y = (x32 - mu) * jax.lax.rsqrt(var + eps)
+    y = y * params["scale"].astype(jnp.float32) + params["bias"].astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+def init_rmsnorm(dim: int, *, param_dtype=jnp.float32) -> dict:
+    return {"scale": jnp.ones((dim,), param_dtype)}
+
+
+def rmsnorm(params: dict, x: jax.Array, *, eps: float = 1e-6) -> jax.Array:
+    x32 = x.astype(jnp.float32)
+    ms = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    y = x32 * jax.lax.rsqrt(ms + eps) * params["scale"].astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# ResMLP (paper Appendix B): linear in -> L residual (linear+GELU) -> linear out
+# ---------------------------------------------------------------------------
+
+def init_resmlp(
+    key,
+    in_dim: int,
+    hidden_dim: int,
+    out_dim: int,
+    num_layers: int,
+    *,
+    param_dtype=jnp.float32,
+) -> dict:
+    keys = jax.random.split(key, num_layers + 2)
+    return {
+        "w_in": init_dense(keys[0], in_dim, hidden_dim, use_bias=True, param_dtype=param_dtype),
+        "res": [
+            init_dense(keys[1 + i], hidden_dim, hidden_dim, use_bias=True, param_dtype=param_dtype)
+            for i in range(num_layers)
+        ],
+        "w_out": init_dense(keys[-1], hidden_dim, out_dim, use_bias=True, param_dtype=param_dtype),
+    }
+
+
+def resmlp(params: dict, x: jax.Array) -> jax.Array:
+    """Paper App. B: optional input residual when C_i == C_h, output residual
+    when C_h == C_o; each residual layer is ``h = h + GELU(W h)``."""
+    in_dim = params["w_in"]["kernel"].shape[0]
+    hid_dim = params["w_in"]["kernel"].shape[1]
+    out_dim = params["w_out"]["kernel"].shape[1]
+    h = dense(params["w_in"], x)
+    if in_dim == hid_dim:
+        h = h + x
+    for lp in params["res"]:
+        h = h + jax.nn.gelu(dense(lp, h))
+    y = dense(params["w_out"], h)
+    if hid_dim == out_dim:
+        y = y + h
+    return y
+
+
+# ---------------------------------------------------------------------------
+# SwiGLU MLP (LLaMA-family FFN)
+# ---------------------------------------------------------------------------
+
+def init_swiglu(key, dim: int, hidden: int, *, param_dtype=jnp.float32) -> dict:
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "w_gate": init_dense(k1, dim, hidden, param_dtype=param_dtype),
+        "w_up": init_dense(k2, dim, hidden, param_dtype=param_dtype),
+        "w_down": init_dense(k3, hidden, dim, param_dtype=param_dtype),
+    }
+
+
+def swiglu(params: dict, x: jax.Array) -> jax.Array:
+    g = jax.nn.silu(dense(params["w_gate"], x))
+    u = dense(params["w_up"], x)
+    return dense(params["w_down"], g * u)
+
+
+# ---------------------------------------------------------------------------
+# Vanilla GELU MLP (the classic transformer FFN; used by vanilla baseline)
+# ---------------------------------------------------------------------------
+
+def init_gelu_mlp(key, dim: int, hidden: int, *, param_dtype=jnp.float32) -> dict:
+    k1, k2 = jax.random.split(key)
+    return {
+        "w_up": init_dense(k1, dim, hidden, use_bias=True, param_dtype=param_dtype),
+        "w_down": init_dense(k2, hidden, dim, use_bias=True, param_dtype=param_dtype),
+    }
+
+
+def gelu_mlp(params: dict, x: jax.Array) -> jax.Array:
+    return dense(params["w_down"], jax.nn.gelu(dense(params["w_up"], x)))
+
+
+def count_params(params) -> int:
+    return sum(int(p.size) for p in jax.tree.leaves(params))

@@ -1,0 +1,4 @@
+from repro.optim.adamw import AdamWState, adamw_update, init_adamw
+from repro.optim.schedule import onecycle_schedule
+
+__all__ = ["AdamWState", "adamw_update", "init_adamw", "onecycle_schedule"]

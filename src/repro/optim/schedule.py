@@ -1,0 +1,16 @@
+"""OneCycleLR (paper D.3: warmup to peak, then cosine decay) — pure jnp."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def onecycle_schedule(step, *, total_steps: int, peak_lr: float, warmup_frac: float = 0.1,
+                      final_div: float = 1e4):
+    """Linear warmup for warmup_frac of steps, cosine decay to peak/final_div."""
+    step = jnp.asarray(step, jnp.float32)
+    warm = max(1.0, warmup_frac * total_steps)
+    warm_lr = peak_lr * step / warm
+    prog = jnp.clip((step - warm) / max(1.0, total_steps - warm), 0.0, 1.0)
+    floor = peak_lr / final_div
+    cos_lr = floor + 0.5 * (peak_lr - floor) * (1.0 + jnp.cos(jnp.pi * prog))
+    return jnp.where(step < warm, warm_lr, cos_lr)

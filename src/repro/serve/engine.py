@@ -1,0 +1,93 @@
+"""Batched serving engine: prefill + decode with KV/recurrent caches.
+
+Wave-based batching: queued requests are padded to a common prompt length,
+prefilled together, then decoded step-by-step; sequences retire on EOS or
+max_new_tokens (their slots keep decoding but outputs are masked — the
+static-shape-friendly formulation; a production scheduler would swap in new
+requests, which the fixed cache layout here supports via slot reuse).
+
+Sampling: greedy or temperature (deterministic per-engine seed).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass
+class Request:
+    prompt: np.ndarray           # [S] int32
+    max_new_tokens: int = 32
+    eos_id: int = -1             # -1: never stops early
+
+
+class ServeEngine:
+    def __init__(self, model, params, *, capacity: int = 512, temperature: float = 0.0,
+                 seed: int = 0):
+        self.model = model
+        self.params = params
+        self.capacity = capacity
+        self.temperature = temperature
+        self.key = jax.random.PRNGKey(seed)
+        self._prefill = jax.jit(lambda p, b: model.prefill(p, b, capacity),
+                                static_argnums=())
+        self._decode = jax.jit(model.decode_step)
+        self.queue: list[Request] = []
+        self.stats = {"requests": 0, "tokens_generated": 0, "prefill_s": 0.0, "decode_s": 0.0}
+
+    def submit(self, prompt, max_new_tokens: int = 32, eos_id: int = -1):
+        self.queue.append(Request(np.asarray(prompt, np.int32), max_new_tokens, eos_id))
+
+    def _sample(self, logits: jax.Array) -> jax.Array:
+        if self.temperature <= 0.0:
+            return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        self.key, sub = jax.random.split(self.key)
+        return jax.random.categorical(sub, logits / self.temperature).astype(jnp.int32)
+
+    def run_wave(self, max_batch: int = 8) -> list[np.ndarray]:
+        """Serve up to max_batch queued requests; returns generated ids."""
+        wave, self.queue = self.queue[:max_batch], self.queue[max_batch:]
+        if not wave:
+            return []
+        b = len(wave)
+        max_prompt = max(len(r.prompt) for r in wave)
+        max_new = max(r.max_new_tokens for r in wave)
+        # left-pad prompts with token 0 so the *last* position is real for all
+        prompts = np.zeros((b, max_prompt), np.int32)
+        for i, r in enumerate(wave):
+            prompts[i, max_prompt - len(r.prompt):] = r.prompt
+
+        t0 = time.time()
+        logits, caches = self._prefill(self.params, {"tokens": jnp.asarray(prompts)})
+        self.stats["prefill_s"] += time.time() - t0
+
+        outputs = [[] for _ in range(b)]
+        done = np.zeros(b, bool)
+        tok = self._sample(logits)
+        t0 = time.time()
+        for step in range(max_new):
+            for i, r in enumerate(wave):
+                if not done[i]:
+                    t = int(tok[i])
+                    outputs[i].append(t)
+                    if t == r.eos_id or len(outputs[i]) >= r.max_new_tokens:
+                        done[i] = True
+            if done.all():
+                break
+            logits, caches = self._decode(self.params, tok[:, None], caches)
+            tok = self._sample(logits)
+        self.stats["decode_s"] += time.time() - t0
+        self.stats["requests"] += b
+        self.stats["tokens_generated"] += sum(len(o) for o in outputs)
+        return [np.asarray(o, np.int32) for o in outputs]
+
+    def run_all(self, max_batch: int = 8) -> list[np.ndarray]:
+        out = []
+        while self.queue:
+            out.extend(self.run_wave(max_batch))
+        return out

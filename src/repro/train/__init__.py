@@ -1,0 +1,4 @@
+from repro.train.steps import make_eval_step, make_train_step
+from repro.train.trainer import Trainer
+
+__all__ = ["make_eval_step", "make_train_step", "Trainer"]

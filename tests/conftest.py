@@ -1,0 +1,13 @@
+import os
+
+# Tests must see the single real CPU device (the 512-device fleet is ONLY for
+# the dry-run). Keep XLA quiet and deterministic.
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import numpy as np
+import pytest
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(0)

@@ -1,0 +1,135 @@
+"""Attention family: decode==forward, SWA ring buffer, MLA absorbed decode,
+chunked==materialized, M-RoPE."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.config import AttnConfig, MLAConfig
+from repro.models.attention import (
+    attn_sdpa,
+    gqa_decode,
+    gqa_forward,
+    init_gqa,
+    init_kv_cache,
+    init_mla,
+    mla_decode,
+    mla_forward,
+    prefill_kv_cache,
+    prefill_mla_cache,
+)
+from repro.models.rope import apply_rope, mrope_angles, rope_angles, text_positions
+
+KEY = jax.random.PRNGKey(4)
+
+
+@pytest.mark.parametrize("window", [None, 7])
+def test_chunked_equals_xla(window):
+    b, h, s, d = 2, 3, 33, 8
+    ks = jax.random.split(KEY, 3)
+    q, k, v = (jax.random.normal(kk, (b, h, s, d)) for kk in ks)
+    a1 = attn_sdpa(q, k, v, scale=0.3, causal=True, window=window, impl="xla")
+    a2 = attn_sdpa(q, k, v, scale=0.3, causal=True, window=window, impl="chunked", chunk=8)
+    np.testing.assert_allclose(a1, a2, atol=1e-5)
+
+
+def test_gqa_decode_matches_forward():
+    b, s, c = 2, 12, 64
+    cfg = AttnConfig(kind="gqa", num_heads=8, num_kv_heads=2, head_dim=8, qkv_bias=True)
+    p = init_gqa(KEY, cfg, c)
+    x = jax.random.normal(KEY, (b, s + 3, c)) * 0.5
+    pos = text_positions(b, s + 3)
+    full = gqa_forward(p, x, cfg, positions=pos, causal=True, impl="xla")
+    _, (k, v) = gqa_forward(p, x[:, :s], cfg, positions=pos[:, :s], causal=True, return_kv=True)
+    cache = prefill_kv_cache(k.astype(jnp.float32), v.astype(jnp.float32), cfg, capacity=s + 8)
+    cache = cache._replace(k=cache.k.astype(jnp.float32), v=cache.v.astype(jnp.float32))
+    for t in range(s, s + 3):
+        y, cache = gqa_decode(p, x[:, t : t + 1], cfg, cache, positions=pos[:, t : t + 1])
+        np.testing.assert_allclose(y[:, 0], full[:, t], atol=2e-3)
+
+
+def test_sliding_window_ring_buffer_decode():
+    """Windowed decode with a ring cache == full forward with the window mask."""
+    b, c, win = 1, 32, 4
+    cfg = AttnConfig(kind="gqa", num_heads=4, num_kv_heads=4, head_dim=8, sliding_window=win)
+    p = init_gqa(KEY, cfg, c)
+    s = 12
+    x = jax.random.normal(KEY, (b, s, c)) * 0.5
+    pos = text_positions(b, s)
+    full = gqa_forward(p, x, cfg, positions=pos, causal=True, impl="xla")
+    cache = init_kv_cache(b, cfg, capacity=64)  # capped to window=4 internally
+    assert cache.k.shape[2] == win
+    cache = cache._replace(k=cache.k.astype(jnp.float32), v=cache.v.astype(jnp.float32))
+    for t in range(s):
+        y, cache = gqa_decode(p, x[:, t : t + 1], cfg, cache, positions=pos[:, t : t + 1])
+        np.testing.assert_allclose(y[:, 0], full[:, t], atol=2e-3,
+                                   err_msg=f"t={t}")
+
+
+@pytest.mark.parametrize("q_lora", [None, 24])
+def test_mla_absorbed_decode_matches_forward(q_lora):
+    b, s, c = 2, 10, 64
+    cfg = AttnConfig(
+        kind="mla", num_heads=4, head_dim=16,
+        mla=MLAConfig(kv_lora_rank=24, q_lora_rank=q_lora, qk_nope_head_dim=16,
+                      qk_rope_head_dim=8, v_head_dim=16))
+    p = init_mla(KEY, cfg, c)
+    x = jax.random.normal(KEY, (b, s + 2, c)) * 0.5
+    pos = text_positions(b, s + 2)
+    full = mla_forward(p, x, cfg, positions=pos, causal=True, impl="xla")
+    _, (ckv, kr) = mla_forward(p, x[:, :s], cfg, positions=pos[:, :s], causal=True, return_kv=True)
+    cache = prefill_mla_cache(ckv.astype(jnp.float32), kr.astype(jnp.float32), capacity=s + 4)
+    cache = cache._replace(c_kv=cache.c_kv.astype(jnp.float32), k_rope=cache.k_rope.astype(jnp.float32))
+    for t in range(s, s + 2):
+        y, cache = mla_decode(p, x[:, t : t + 1], cfg, cache, positions=pos[:, t : t + 1])
+        np.testing.assert_allclose(y[:, 0], full[:, t], atol=2e-3)
+
+
+def test_mla_cache_is_compressed():
+    """The serving cache must hold kv_lora + rope dims — not per-head K/V."""
+    cfg = AttnConfig(kind="mla", num_heads=8, head_dim=16,
+                     mla=MLAConfig(kv_lora_rank=24, qk_nope_head_dim=16,
+                                   qk_rope_head_dim=8, v_head_dim=16))
+    from repro.models.attention import init_mla_cache
+
+    cache = init_mla_cache(2, cfg, capacity=16)
+    per_tok = cache.c_kv.shape[-1] + cache.k_rope.shape[-1]
+    uncompressed = 2 * cfg.num_heads * 16  # K and V per head
+    assert per_tok == 32 < uncompressed
+
+
+class TestRoPE:
+    def test_rope_preserves_norm(self):
+        x = jax.random.normal(KEY, (2, 4, 8, 16))
+        ang = rope_angles(text_positions(2, 8), 16, 1e4)
+        y = apply_rope(x, ang)
+        np.testing.assert_allclose(
+            jnp.linalg.norm(x, axis=-1), jnp.linalg.norm(y, axis=-1), rtol=1e-5)
+
+    def test_rope_relative_property(self):
+        """<rope(q,i), rope(k,j)> depends only on i-j."""
+        d = 8
+        q = jax.random.normal(KEY, (1, d))
+        k = jax.random.normal(jax.random.fold_in(KEY, 1), (1, d))
+
+        def score(i, j):
+            qi = apply_rope(q[None], rope_angles(jnp.array([[i]]), d, 1e4))[0]
+            kj = apply_rope(k[None], rope_angles(jnp.array([[j]]), d, 1e4))[0]
+            return float(jnp.sum(qi * kj))
+
+        assert abs(score(3, 1) - score(10, 8)) < 1e-4
+        assert abs(score(5, 5) - score(9, 9)) < 1e-4
+
+    def test_mrope_text_equals_rope(self):
+        """With t=h=w positions, M-RoPE degenerates to standard RoPE."""
+        d = 16
+        pos = text_positions(2, 6)
+        mpos = jnp.broadcast_to(pos, (3, 2, 6))
+        a1 = rope_angles(pos, d, 1e4)
+        a2 = mrope_angles(mpos, d, 1e4, (3, 3, 2))
+        x = jax.random.normal(KEY, (2, 6, d))
+        np.testing.assert_allclose(apply_rope(x, a1), apply_rope(x, a2), atol=1e-6)
+
+    def test_mrope_sections_validation(self):
+        with pytest.raises(ValueError):
+            mrope_angles(jnp.zeros((3, 1, 4)), 16, 1e4, (4, 4, 4))  # sums to 12 != 8

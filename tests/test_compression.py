@@ -1,0 +1,66 @@
+"""Int8 error-feedback gradient compression."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.distributed.compression import (
+    compressed_mean,
+    dequantize_int8,
+    quantize_int8,
+)
+
+
+def test_quantization_error_bound():
+    g = jax.random.normal(jax.random.PRNGKey(0), (1000,)) * 3
+    q, scale = quantize_int8(g)
+    err = np.abs(np.asarray(dequantize_int8(q, scale) - g))
+    assert err.max() <= float(scale) * 0.5 + 1e-6
+
+
+def test_wire_format_is_int8():
+    g = jax.random.normal(jax.random.PRNGKey(1), (64,))
+    q, _ = quantize_int8(g)
+    assert q.dtype == jnp.int8
+
+
+def test_compressed_mean_accuracy_multiworker():
+    """pmap-free check via shard_map on 1 device is trivial; emulate 4
+    workers by vmapping the quantize side and averaging manually."""
+    key = jax.random.PRNGKey(2)
+    grads = jax.random.normal(key, (4, 256))  # 4 workers
+    qs, scales = jax.vmap(quantize_int8)(grads)
+    deq = qs.astype(jnp.float32) * scales[:, None]
+    approx = deq.mean(0)
+    exact = grads.mean(0)
+    rel = float(jnp.linalg.norm(approx - exact) / jnp.linalg.norm(exact))
+    assert rel < 0.02, rel
+
+
+def test_error_feedback_unbiased_over_steps():
+    """EF compensates quantization: the accumulated applied update converges
+    to the accumulated true gradient."""
+    true_g = jnp.full((32,), 0.001)  # tiny gradient — heavily quantized
+    err = jnp.zeros((32,))
+    applied = jnp.zeros((32,))
+    for _ in range(200):
+        g_comp = true_g + err
+        q, s = quantize_int8(g_comp)
+        deq = dequantize_int8(q, s)
+        err = g_comp - deq
+        applied += deq
+    target = true_g * 200
+    rel = float(jnp.linalg.norm(applied - target) / jnp.linalg.norm(target))
+    assert rel < 0.05, rel
+
+
+def test_ef_sgd_converges_on_quadratic():
+    w = jnp.array([4.0, -2.0])
+    err = jnp.zeros_like(w)
+    for _ in range(400):
+        g = 2 * (w - jnp.array([1.0, 1.0]))
+        g_comp = g + err
+        q, s = quantize_int8(g_comp)
+        deq = dequantize_int8(q, s)
+        err = g_comp - deq
+        w = w - 0.05 * deq
+    np.testing.assert_allclose(w, [1.0, 1.0], atol=0.02)

@@ -1,0 +1,63 @@
+"""Optimizer + schedule unit tests."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.optim.adamw import adamw_update, clip_by_global_norm, global_norm, init_adamw
+from repro.optim.schedule import onecycle_schedule
+
+
+def test_adamw_converges_on_quadratic():
+    params = {"w": jnp.array([5.0, -3.0, 2.0])}
+    opt = init_adamw(params)
+    loss_fn = lambda p: jnp.sum(jnp.square(p["w"] - jnp.array([1.0, 2.0, 3.0])))
+    for _ in range(300):
+        g = jax.grad(loss_fn)(params)
+        params, opt, _ = adamw_update(params, g, opt, lr=0.05)
+    np.testing.assert_allclose(params["w"], [1.0, 2.0, 3.0], atol=0.05)
+
+
+def test_weight_decay_shrinks():
+    params = {"w": jnp.array([10.0])}
+    opt = init_adamw(params)
+    zeros = {"w": jnp.zeros(1)}
+    p2, _, _ = adamw_update(params, zeros, opt, lr=0.1, weight_decay=0.1)
+    assert float(p2["w"][0]) < 10.0
+
+
+def test_grad_clip():
+    g = {"a": jnp.full((4,), 10.0)}
+    clipped, norm = clip_by_global_norm(g, 1.0)
+    assert abs(float(global_norm(clipped)) - 1.0) < 1e-5
+    assert abs(float(norm) - 20.0) < 1e-4
+
+
+def test_moments_are_fp32():
+    params = {"w": jnp.zeros((3,), jnp.bfloat16)}
+    opt = init_adamw(params)
+    assert opt.m["w"].dtype == jnp.float32
+    assert opt.v["w"].dtype == jnp.float32
+
+
+def test_onecycle_shape():
+    total, peak = 100, 1e-3
+    lrs = [float(onecycle_schedule(s, total_steps=total, peak_lr=peak, warmup_frac=0.1))
+           for s in range(total + 1)]
+    assert lrs[0] == 0.0
+    assert abs(max(lrs) - peak) < 1e-9
+    assert np.argmax(lrs) == 10  # warmup ends at 10%
+    assert lrs[-1] < peak / 100  # decayed
+    # monotonic up then down
+    assert all(a <= b + 1e-12 for a, b in zip(lrs[:10], lrs[1:11]))
+    assert all(a >= b - 1e-12 for a, b in zip(lrs[10:-1], lrs[11:]))
+
+
+def test_update_is_sharding_free_pure():
+    """adamw_update must preserve tree structure and dtypes."""
+    params = {"a": jnp.zeros((2, 3)), "b": {"c": jnp.zeros((4,), jnp.bfloat16)}}
+    opt = init_adamw(params)
+    g = jax.tree.map(jnp.ones_like, params)
+    p2, opt2, _ = adamw_update(params, g, opt, lr=0.1)
+    assert jax.tree.structure(p2) == jax.tree.structure(params)
+    assert p2["b"]["c"].dtype == jnp.bfloat16
+    assert int(opt2.step) == 1

@@ -1,0 +1,115 @@
+"""RWKV6 / Mamba2: chunked == scan, decode == train, conv state handoff."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.config import SSMConfig
+from repro.models.ssm import (
+    Mamba2State,
+    init_mamba2_layer,
+    init_rwkv6_layer,
+    mamba2_block,
+    rwkv6_block,
+    rwkv6_wkv_chunked,
+    rwkv6_wkv_scan,
+    ssd_chunked,
+    ssd_scan,
+)
+
+KEY = jax.random.PRNGKey(3)
+
+
+class TestRWKV6:
+    def _inputs(self, b=2, t=32, h=3, d=8):
+        ks = jax.random.split(KEY, 6)
+        r = jax.random.normal(ks[0], (b, t, h, d)) * 0.5
+        k = jax.random.normal(ks[1], (b, t, h, d)) * 0.5
+        v = jax.random.normal(ks[2], (b, t, h, d))
+        w = jax.nn.sigmoid(jax.random.normal(ks[3], (b, t, h, d)) * 2) * 0.98 + 0.01
+        u = jax.random.normal(ks[4], (h, d)) * 0.3
+        s0 = jax.random.normal(ks[5], (b, h, d, d)) * 0.1
+        return r, k, v, w, u, s0
+
+    @pytest.mark.parametrize("chunk", [4, 8, 16, 32])
+    @pytest.mark.parametrize("intra", ["exact", "factored"])
+    def test_chunked_equals_scan(self, chunk, intra):
+        r, k, v, w, u, s0 = self._inputs()
+        if intra == "factored":
+            # bounded-decay contract: realistic trained range w in [0.75, 0.99]
+            w = w * 0.24 + 0.75
+        y1, sf1 = rwkv6_wkv_scan(r, k, v, w, u, s0)
+        y2, sf2 = rwkv6_wkv_chunked(r, k, v, w, u, s0, chunk=chunk, intra=intra)
+        np.testing.assert_allclose(y1, y2, atol=1e-4)
+        np.testing.assert_allclose(sf1, sf2, atol=1e-4)
+
+    def test_strong_decay_stability(self):
+        """Near-zero decays (the overflow hazard for naive chunking):
+        the exact path must match the scan; the factored path must stay
+        finite (its bounded-decay contract is violated here by design)."""
+        r, k, v, w, u, s0 = self._inputs()
+        w = jnp.full_like(w, 1e-6)
+        y1, _ = rwkv6_wkv_scan(r, k, v, w, u, s0)
+        y2, _ = rwkv6_wkv_chunked(r, k, v, w, u, s0, chunk=8, intra="exact")
+        assert bool(jnp.isfinite(y2).all())
+        np.testing.assert_allclose(y1, y2, atol=1e-4)
+        y3, _ = rwkv6_wkv_chunked(r, k, v, w, u, s0, chunk=8, intra="factored")
+        assert bool(jnp.isfinite(y3).all())
+
+    def test_block_decode_matches_forward(self):
+        cfg = SSMConfig(kind="rwkv6", head_dim=8, chunk=8)
+        p = init_rwkv6_layer(KEY, 32, cfg, 64)
+        x = jax.random.normal(KEY, (2, 16, 32)) * 0.5
+        y_full, _ = rwkv6_block(p, x, cfg, impl="scan")
+        # token-by-token with carried state
+        state = None
+        outs = []
+        for t in range(16):
+            y_t, state = rwkv6_block(p, x[:, t : t + 1], cfg, state=state, impl="scan")
+            outs.append(y_t)
+        y_step = jnp.concatenate(outs, axis=1)
+        np.testing.assert_allclose(y_full, y_step, atol=1e-4)
+
+
+class TestMamba2:
+    def _inputs(self, b=2, t=32, h=3, p=8, n=16):
+        ks = jax.random.split(KEY, 5)
+        x = jax.random.normal(ks[0], (b, t, h, p))
+        dt = jax.nn.softplus(jax.random.normal(ks[1], (b, t, h)))
+        a_log = jnp.log(jnp.linspace(1, 8, h))
+        bm = jax.random.normal(ks[2], (b, t, n)) * 0.5
+        cm = jax.random.normal(ks[3], (b, t, n)) * 0.5
+        s0 = jax.random.normal(ks[4], (b, h, p, n)) * 0.1
+        return x, dt, a_log, bm, cm, jnp.ones((h,)), s0
+
+    @pytest.mark.parametrize("chunk", [4, 8, 16])
+    def test_ssd_chunked_equals_scan(self, chunk):
+        x, dt, a_log, bm, cm, d, s0 = self._inputs()
+        y1, sf1 = ssd_scan(x, dt, a_log, bm, cm, d, s0)
+        y2, sf2 = ssd_chunked(x, dt, a_log, bm, cm, d, s0, chunk=chunk)
+        np.testing.assert_allclose(y1, y2, atol=1e-4)
+        np.testing.assert_allclose(sf1, sf2, atol=1e-4)
+
+    def test_block_decode_matches_forward(self):
+        cfg = SSMConfig(kind="mamba2", state_dim=8, head_dim=8, expand=2, chunk=8)
+        p = init_mamba2_layer(KEY, 16, cfg)
+        x = jax.random.normal(KEY, (2, 16, 16)) * 0.5
+        y_full, _ = mamba2_block(p, x, cfg, impl="scan")
+        state = Mamba2State(
+            conv=jnp.zeros((2, 2 * 16 + 2 * 8, 3), jnp.float32),
+            ssm=jnp.zeros((2, 4, 8, 8), jnp.float32),
+        )
+        outs = []
+        for t in range(16):
+            y_t, state = mamba2_block(p, x[:, t : t + 1], cfg, state=state, impl="scan")
+            outs.append(y_t)
+        y_step = jnp.concatenate(outs, axis=1)
+        np.testing.assert_allclose(y_full, y_step, atol=2e-3)
+
+    def test_chunked_vs_scan_in_block(self):
+        cfg = SSMConfig(kind="mamba2", state_dim=8, head_dim=8, expand=2, chunk=8)
+        p = init_mamba2_layer(KEY, 16, cfg)
+        x = jax.random.normal(KEY, (2, 16, 16)) * 0.5
+        y1, _ = mamba2_block(p, x, cfg, impl="scan")
+        y2, _ = mamba2_block(p, x, cfg, impl="chunked")
+        np.testing.assert_allclose(y1, y2, atol=2e-3)
