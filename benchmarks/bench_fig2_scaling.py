@@ -10,7 +10,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import emit, time_fn
+from benchmarks.common import emit, mixer_backend_info, time_fn
 from repro.core.flare import flare_mixer, sdpa
 
 KEY = jax.random.PRNGKey(0)
@@ -27,7 +27,7 @@ def _mk(n):
 
 
 def run():
-    flare = jax.jit(lambda q, k, v: flare_mixer(q, k, v))
+    flare = jax.jit(lambda q, k, v: flare_mixer(q, k, v, impl="auto"))
     vanilla = jax.jit(lambda k, v: sdpa(k, k, v, scale=0.25))
 
     t_f, t_v = [], []
@@ -39,7 +39,8 @@ def run():
         t_v.append(us_v)
         flops_f = 4 * n * M * D * H  # two SDPA calls, O(N M)
         flops_v = 4 * n * n * D * H  # O(N^2)
-        emit(f"fig2/flare/N{n}", us_f, f"flops={flops_f}")
+        emit(f"fig2/flare/N{n}", us_f, f"flops={flops_f}",
+             backend=mixer_backend_info("auto", b=1, h=H, n=n, m=M, d=D))
         emit(f"fig2/vanilla/N{n}", us_v, f"flops={flops_v}")
 
     ln = np.log(np.asarray(NS, float))

@@ -5,7 +5,7 @@ from __future__ import annotations
 
 import jax
 
-from benchmarks.common import emit, time_fn
+from benchmarks.common import emit, mixer_backend_info, time_fn
 from repro.models import pde
 
 KEY = jax.random.PRNGKey(3)
@@ -31,7 +31,9 @@ def run():
         p = init_flare_block(KEY, DIM, HEADS, LATENTS)
         us = time_fn(jax.jit(lambda pp, xx: flare_block(pp, xx)), p, x)
         out[("flare", n)] = us
-        emit(f"fig8/flare/N{n}", us, "")
+        emit(f"fig8/flare/N{n}", us, "",
+             backend=mixer_backend_info("auto", b=1, h=HEADS, n=n, m=LATENTS,
+                                        d=DIM // HEADS))
     grow = lambda m: out[(m, NS[-1])] / out[(m, NS[0])]
     emit("fig8/growth_ratio", 0.0,
          f"flare={grow('flare'):.1f}x;vanilla={grow('vanilla'):.1f}x;"

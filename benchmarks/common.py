@@ -1,6 +1,14 @@
-"""Shared benchmark utilities: timing, tiny trainers, CSV emission."""
+"""Shared benchmark utilities: timing, tiny trainers, CSV/JSON emission.
+
+Rows emitted through :func:`emit` are also collected in-memory; the harness
+(benchmarks/run.py) writes them as JSON at the end of a run, including which
+mixer backend/plan produced each row (pass ``backend=`` — typically
+:func:`mixer_backend_info`'s output — so perf numbers stay attributable
+after the registry picks tiles/backends automatically).
+"""
 from __future__ import annotations
 
+import json
 import time
 
 import jax
@@ -8,6 +16,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.optim.adamw import adamw_update, init_adamw
+
+ROWS: list[dict] = []
 
 
 def time_fn(fn, *args, warmup: int = 2, iters: int = 5) -> float:
@@ -45,9 +55,31 @@ def eval_loss(loss_fn, params, batches) -> float:
     return float(np.mean([float(f(params, b)) for b in batches]))
 
 
-def emit(name: str, us_per_call: float, derived: str) -> None:
-    """The harness contract: ``name,us_per_call,derived`` CSV rows."""
+def emit(name: str, us_per_call: float, derived: str, *, backend: str | None = None) -> None:
+    """The harness contract: ``name,us_per_call,derived`` CSV rows. ``backend``
+    (a dispatch plan description) is appended to ``derived`` and recorded in
+    the JSON sidecar so every number names the backend/plan that produced it."""
+    if backend:
+        derived = f"{derived};backend={backend}" if derived else f"backend={backend}"
+    ROWS.append({"name": name, "us_per_call": us_per_call, "derived": derived,
+                 "backend": backend})
     print(f"{name},{us_per_call:.1f},{derived}")
+
+
+def mixer_backend_info(impl="auto", *, b: int, h: int, n: int, m: int, d: int,
+                       dtype=jnp.float32, causal: bool = False) -> str:
+    """Resolve (without running) which backend/plan ``impl`` maps to for this
+    shape — the string benchmarks attach to their emitted rows."""
+    from repro.core.dispatch import MixerShape, describe
+
+    shape = MixerShape(batch=b, heads=h, tokens=n, latents=m, head_dim=d)
+    return describe(impl, shape=shape, dtype=dtype, causal=causal)
+
+
+def write_results_json(path: str) -> None:
+    """Dump every emitted row (with backend/plan attribution) as JSON."""
+    with open(path, "w") as f:
+        json.dump({"rows": ROWS, "device": jax.default_backend()}, f, indent=1)
 
 
 def param_count(params) -> int:

@@ -4,10 +4,13 @@ Usage:
     PYTHONPATH=src python -m benchmarks.run             # everything
     PYTHONPATH=src python -m benchmarks.run table1 fig2 # subset
 
-Each row is ``name,us_per_call,derived`` CSV (harness contract).
+Each row is ``name,us_per_call,derived`` CSV (harness contract); the same
+rows — annotated with which mixer backend/plan produced them — are written
+to ``benchmark_results.json`` (override with REPRO_BENCH_JSON).
 """
 from __future__ import annotations
 
+import os
 import sys
 import time
 import traceback
@@ -41,6 +44,13 @@ def main() -> None:
             traceback.print_exc()
             print(f"{name}/_wall,{(time.time() - t0) * 1e6:.0f},FAILED:{type(e).__name__}")
             failures.append(name)
+    from benchmarks.common import write_results_json
+
+    json_path = os.environ.get("REPRO_BENCH_JSON", "benchmark_results.json")
+    try:
+        write_results_json(json_path)
+    except OSError as e:  # pragma: no cover — JSON sidecar is best-effort
+        print(f"_json,0,FAILED:{e}")
     if failures:
         raise SystemExit(f"benchmark failures: {failures}")
 

@@ -1,0 +1,18 @@
+"""Mixer backends — importing this package populates the registry in
+:mod:`repro.core.dispatch`.
+
+Each module registers one or more :class:`~repro.core.dispatch.MixerBackend`
+entries with capability metadata (causal/bidirectional contract, sharding
+requirements, device kinds, dtype constraints), a ``plan`` builder and a
+``run`` callable. New backends (GPU pallas, ring-attention encode, ...) plug
+in here — no call site changes needed.
+"""
+from repro.backends import (  # noqa: F401  (import for registration side effect)
+    causal,
+    materialized,
+    pallas,
+    sdpa,
+    seqparallel,
+)
+
+__all__ = ["autotune", "causal", "materialized", "pallas", "sdpa", "seqparallel"]

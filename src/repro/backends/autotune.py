@@ -1,0 +1,136 @@
+"""Tile autotuner for the Pallas backends (DESIGN.md §11).
+
+Fused-kernel throughput on TPU hinges on tile selection (FlashAttention's
+central lesson), but the best ``(block_m, block_n)`` depends on the problem
+shape, dtype and device generation — none of which a hardcoded default can
+know. This module:
+
+  * proposes MXU-aligned tile candidates for a :class:`~repro.core.dispatch.MixerShape`,
+  * times them with a caller-supplied runner (so this module stays free of
+    kernel imports), and
+  * memoizes the winner in an on-disk JSON cache keyed by
+    ``(device, dtype, N, M, D, H)`` so serving and benchmarks never pay the
+    search twice — and never hardcode tiles again.
+
+Timing only runs when explicitly requested (``autotune=True`` or the
+``REPRO_AUTOTUNE=1`` env var): the default lookup is cache-hit-or-heuristic,
+which keeps trace-time resolution deterministic and test-friendly. The cache
+location follows ``REPRO_AUTOTUNE_CACHE`` (default ``~/.cache/repro/autotune.json``).
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+from typing import Callable, Iterable, Optional
+
+from repro.core.dispatch import MixerShape
+
+_MEM_CACHE: dict = {}  # path -> {key: entry} mirror of the JSON file
+
+
+def cache_path() -> str:
+    return os.environ.get(
+        "REPRO_AUTOTUNE_CACHE",
+        os.path.join(os.path.expanduser("~"), ".cache", "repro", "autotune.json"),
+    )
+
+
+def autotune_enabled() -> bool:
+    return os.environ.get("REPRO_AUTOTUNE", "0") not in ("", "0", "false")
+
+
+def cache_key(shape: MixerShape, dtype, device: str) -> str:
+    import jax.numpy as jnp
+
+    return (f"{device}|{jnp.dtype(dtype).name}|N{shape.tokens}|M{shape.latents}"
+            f"|D{shape.head_dim}|H{shape.heads}")
+
+
+def _load(path: str) -> dict:
+    if path in _MEM_CACHE:
+        return _MEM_CACHE[path]
+    data: dict = {}
+    try:
+        with open(path) as f:
+            data = json.load(f)
+    except (OSError, ValueError):
+        data = {}
+    _MEM_CACHE[path] = data
+    return data
+
+
+def _store(path: str, data: dict) -> None:
+    _MEM_CACHE[path] = data
+    try:
+        os.makedirs(os.path.dirname(path), exist_ok=True)
+        tmp = f"{path}.tmp.{os.getpid()}"
+        with open(tmp, "w") as f:
+            json.dump(data, f, indent=1, sort_keys=True)
+        os.replace(tmp, path)
+    except OSError:
+        pass  # cache is an optimization; never fail the computation
+
+
+def _pow2s(lo: int, hi: int) -> list:
+    out, v = [], lo
+    while v <= hi:
+        out.append(v)
+        v *= 2
+    return out
+
+
+def tile_candidates(shape: MixerShape) -> list:
+    """MXU-friendly (block_m, block_n) pairs clipped to the problem shape."""
+    n, m = shape.tokens, shape.latents
+    bms = [b for b in _pow2s(128, 512) if b <= max(128, m)] or [128]
+    bns = [b for b in _pow2s(256, 2048) if b <= max(256, n)] or [256]
+    return [{"block_m": bm, "block_n": bn} for bm in bms for bn in bns]
+
+
+def default_tiles(shape: MixerShape) -> dict:
+    """Heuristic fallback when no timed entry exists: the paper-bench
+    defaults, clipped so small problems still launch a single tile."""
+    return {"block_m": min(128, max(8, shape.latents)),
+            "block_n": min(512, max(128, shape.tokens))}
+
+
+def measure_tiles(shape: MixerShape, dtype, device: str,
+                  runner: Callable[[dict], float],
+                  candidates: Optional[Iterable[dict]] = None) -> dict:
+    """Time each candidate with ``runner(tiles) -> seconds`` and cache the
+    winner. Returns the winning tile dict (also annotated with timings)."""
+    cands = list(candidates) if candidates is not None else tile_candidates(shape)
+    timed = []
+    for tiles in cands:
+        try:
+            dt = runner(tiles)
+        except Exception:  # noqa: BLE001 — an illegal tile just loses the race
+            continue
+        timed.append((dt, tiles))
+    if not timed:
+        return default_tiles(shape)
+    timed.sort(key=lambda p: p[0])
+    best_dt, best = timed[0]
+    path = cache_path()
+    data = _load(path)
+    data[cache_key(shape, dtype, device)] = {
+        **best, "us": best_dt * 1e6, "candidates": len(timed),
+        "tuned_at": time.strftime("%Y-%m-%dT%H:%M:%S"),
+    }
+    _store(path, data)
+    return best
+
+
+def best_tiles(shape: MixerShape, dtype, device: str, *,
+               runner: Optional[Callable[[dict], float]] = None,
+               autotune: Optional[bool] = None) -> dict:
+    """Cache-hit -> cached winner; miss -> time candidates iff autotuning is
+    enabled and a runner is available, else the shape heuristic."""
+    entry = _load(cache_path()).get(cache_key(shape, dtype, device))
+    if entry is not None:
+        return {"block_m": int(entry["block_m"]), "block_n": int(entry["block_n"])}
+    if (autotune if autotune is not None else autotune_enabled()) and runner is not None:
+        best = measure_tiles(shape, dtype, device, runner)
+        return {"block_m": best["block_m"], "block_n": best["block_n"]}
+    return default_tiles(shape)

@@ -1,0 +1,62 @@
+"""Causal backends: the chunked-scan streaming form (jnp) and the fused
+Pallas factored-chunk kernel. Both satisfy the LM-mixer contract (token t
+mixes only the prefix <= t); neither serves the bidirectional contract.
+"""
+from __future__ import annotations
+
+import jax
+
+from repro.core.dispatch import (
+    Capabilities,
+    MixerBackend,
+    MixerPlan,
+    MixerShape,
+    register,
+)
+
+DEFAULT_CHUNK = 256
+
+
+def _plan_stream(shape: MixerShape, mesh, dtype) -> MixerPlan:
+    return MixerPlan("causal_stream",
+                     {"chunk_size": min(DEFAULT_CHUNK, shape.tokens), "mode": "factored"})
+
+
+def _run_stream(plan: MixerPlan, q, k, v):
+    from repro.core.flare_stream import flare_causal
+
+    return flare_causal(q, k, v,
+                        chunk_size=plan.params.get("chunk_size", DEFAULT_CHUNK),
+                        impl=plan.params.get("mode", "factored"))
+
+
+def _plan_pallas(shape: MixerShape, mesh, dtype) -> MixerPlan:
+    return MixerPlan("causal_pallas",
+                     {"chunk_size": min(DEFAULT_CHUNK, shape.tokens)})
+
+
+def _run_pallas(plan: MixerPlan, q, k, v):
+    from repro.kernels.ops import flare_causal_fused
+
+    return flare_causal_fused(q, k, v,
+                              tile=plan.params.get("chunk_size", DEFAULT_CHUNK))
+
+
+register(MixerBackend(
+    name="causal_stream",
+    caps=Capabilities(causal=True, bidirectional=False),
+    plan=_plan_stream,
+    run=_run_stream,
+    score=lambda shape, device: 10.0 if device != "tpu" else 5.0,
+    doc="chunked associative-scan causal FLARE (constant-memory LM mixer)",
+))
+
+register(MixerBackend(
+    name="causal_pallas",
+    caps=Capabilities(causal=True, bidirectional=False,
+                      device_kinds=("cpu", "tpu"), dtypes=("float32", "bfloat16")),
+    plan=_plan_pallas,
+    run=_run_pallas,
+    score=lambda shape, device: 20.0 if device == "tpu" else 1.0,
+    doc="fused factored-chunk Pallas kernel (flare_lm training fast path)",
+))

@@ -1,0 +1,27 @@
+"""Materialized backend: paper Fig. 7 — explicitly forms the [M, N] encode
+and [N, M] decode weight matrices. O(M*N) memory; useful for analysis and as
+a second independent reference, never the "auto" pick.
+"""
+from __future__ import annotations
+
+from repro.core.dispatch import Capabilities, MixerBackend, MixerPlan, MixerShape, register
+
+
+def _plan(shape: MixerShape, mesh, dtype) -> MixerPlan:
+    return MixerPlan("materialized")
+
+
+def _run(plan: MixerPlan, q, k, v):
+    from repro.core.flare import _flare_mixer_materialized
+
+    return _flare_mixer_materialized(q, k, v)
+
+
+register(MixerBackend(
+    name="materialized",
+    caps=Capabilities(bidirectional=True),
+    plan=_plan,
+    run=_run,
+    score=lambda shape, device: 0.0,
+    doc="explicit [M,N] weights (paper Fig. 7) — analysis fallback",
+))

@@ -1,0 +1,30 @@
+"""Reference backend: the paper's two standard SDPA calls (Fig. 3).
+
+XLA fuses this well on every device; it is the "auto" pick off-TPU and the
+tolerance reference every other backend is tested against.
+"""
+from __future__ import annotations
+
+from repro.core.dispatch import Capabilities, MixerBackend, MixerPlan, MixerShape, register
+
+
+def _plan(shape: MixerShape, mesh, dtype) -> MixerPlan:
+    return MixerPlan("sdpa")
+
+
+def _run(plan: MixerPlan, q, k, v):
+    from repro.core.flare import sdpa
+
+    z = sdpa(q[None], k, v, scale=1.0)   # encode: latents gather tokens
+    return sdpa(k, q[None], z, scale=1.0)  # decode: tokens scatter from latents
+
+
+register(MixerBackend(
+    name="sdpa",
+    caps=Capabilities(bidirectional=True),
+    plan=_plan,
+    run=_run,
+    # solid everywhere; beaten by the fused kernels on TPU
+    score=lambda shape, device: 10.0 if device != "tpu" else 5.0,
+    doc="two XLA SDPA calls (paper Fig. 3) — the correctness reference",
+))

@@ -1,6 +1,7 @@
 """FLARE core: the paper's contribution as composable JAX modules.
 
 - flare.py        faithful operator / layer / block (two-SDPA factorization)
+- dispatch.py     typed mixer-backend registry + capability dispatch (§10)
 - spectral.py     Algorithm 1 linear-time eigenanalysis of W = W_dec @ W_enc
 - flare_stream.py causal/streaming variant (paper future-work item 4)
 - flare_sp.py     sequence-parallel operator (O(M*C) collectives per layer)

@@ -1,0 +1,290 @@
+"""Typed mixer-backend registry + capability dispatch (DESIGN.md §10).
+
+Every FLARE mixer implementation — the two-SDPA reference, the materialized
+Fig.-7 fallback, the fused Pallas kernels, the shard_map sequence-parallel
+forms and the causal/streaming paths — registers a :class:`MixerBackend`
+describing *what it can do* (causal vs bidirectional contract, device kinds,
+dtype constraints, whether it needs a mesh) and *how to run* (a ``plan``
+builder that freezes shape/tile decisions, and a ``run`` callable).
+
+Call sites never branch on raw ``impl`` strings or mesh-carrying tuples:
+they hand whatever ``impl`` value they were given to :func:`resolve` (or the
+convenience wrappers :func:`run_mixer` / :func:`run_causal_mixer`) and this
+module normalizes it:
+
+    "auto"                      -> best eligible backend for this device
+    "sdpa" | "materialized" |
+    "pallas" | ...              -> that backend, by (aliased) name
+    ("sp", mesh, axes)          -> legacy alias for the "seqparallel" backend
+    ("sp2d", mesh, sa, la)      -> legacy alias for the "seqlat" backend
+    MixerPlan                   -> pre-resolved plan, run as-is
+
+Resolution happens at Python level (trace time), so the chosen backend and
+its tile plan are compile-time constants — exactly like hand-threading the
+strings used to be, minus the hand-threading.
+
+Backends live in :mod:`repro.backends`; importing that package populates the
+registry (lazily triggered here so ``repro.core`` stays import-light).
+"""
+from __future__ import annotations
+
+import dataclasses
+import importlib
+from typing import Any, Callable, Mapping, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+
+
+# ---------------------------------------------------------------------------
+# Data model
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class MixerShape:
+    """Static problem shape the resolver/planner sees at trace time."""
+
+    batch: int
+    heads: int
+    tokens: int     # N
+    latents: int    # M
+    head_dim: int   # D
+
+    @staticmethod
+    def from_qkv(q: jax.Array, k: jax.Array) -> "MixerShape":
+        return MixerShape(batch=k.shape[0], heads=k.shape[1], tokens=k.shape[2],
+                          latents=q.shape[-2], head_dim=k.shape[-1])
+
+
+@dataclasses.dataclass(frozen=True)
+class Capabilities:
+    """What a backend is allowed to be selected for."""
+
+    causal: bool = False           # satisfies the causal LM-mixer contract
+    bidirectional: bool = True     # satisfies the set-mixer contract
+    sharded: bool = False          # needs a Mesh + axis names (shard_map)
+    device_kinds: tuple = ("cpu", "gpu", "tpu")
+    dtypes: Optional[tuple] = None  # dtype names; None = any floating dtype
+
+
+@dataclasses.dataclass(frozen=True)
+class MixerPlan:
+    """A resolved execution plan: backend name + frozen launch parameters.
+
+    ``params`` holds whatever the backend's ``run`` needs beyond q/k/v —
+    tile sizes for Pallas, mesh/axis names for sharded backends, chunk sizes
+    for the causal paths. Plans are plain trace-time Python values.
+    """
+
+    backend: str
+    params: Mapping[str, Any] = dataclasses.field(default_factory=dict)
+
+    def describe(self) -> str:
+        keys = ("block_m", "block_n", "tile", "chunk_size", "seq_axes", "lat_axes", "mode")
+        shown = {k: self.params[k] for k in keys if k in self.params}
+        # ';'/'+'-separated so the string stays comma-free inside the 3-field
+        # ``name,us_per_call,derived`` benchmark CSV contract
+        fmt = lambda v: "+".join(map(str, v)) if isinstance(v, (tuple, list)) else str(v)
+        inner = ";".join(f"{k}={fmt(v)}" for k, v in shown.items())
+        return f"{self.backend}({inner})" if inner else self.backend
+
+
+@dataclasses.dataclass(frozen=True)
+class MixerBackend:
+    name: str
+    caps: Capabilities
+    plan: Callable[[MixerShape, Optional[Any], Any], MixerPlan]
+    run: Callable[..., jax.Array]  # run(plan, q, k, v, **kw) -> y
+    # score(shape, device_kind) -> float; highest eligible score wins "auto".
+    score: Callable[[MixerShape, str], float] = lambda shape, device: 0.0
+    doc: str = ""
+
+
+# ---------------------------------------------------------------------------
+# Registry
+# ---------------------------------------------------------------------------
+
+_REGISTRY: dict = {}
+_ALIASES = {
+    # legacy spelling -> canonical backend name
+    "sp": "seqparallel",
+    "sp2d": "seqlat",
+    "stream": "causal_stream",
+    "causal": "causal_stream",
+}
+_LOADED = False
+
+
+def register(backend: MixerBackend) -> MixerBackend:
+    if backend.name in _ALIASES:
+        raise ValueError(f"backend name {backend.name!r} shadows an alias")
+    _REGISTRY[backend.name] = backend
+    return backend
+
+
+def _ensure_loaded() -> None:
+    global _LOADED
+    if not _LOADED:
+        importlib.import_module("repro.backends")
+        _LOADED = True
+
+
+def get_backend(name: str) -> MixerBackend:
+    _ensure_loaded()
+    canonical = _ALIASES.get(name, name)
+    try:
+        return _REGISTRY[canonical]
+    except KeyError:
+        raise ValueError(
+            f"unknown mixer backend {name!r}; registered: {sorted(_REGISTRY)}"
+        ) from None
+
+
+def backends(*, causal: Optional[bool] = None, sharded: Optional[bool] = None):
+    """List registered backends, optionally filtered by capability."""
+    _ensure_loaded()
+    out = []
+    for b in _REGISTRY.values():
+        if causal is not None and (b.caps.causal if causal else b.caps.bidirectional) is False:
+            continue
+        if sharded is not None and b.caps.sharded is not sharded:
+            continue
+        out.append(b)
+    return sorted(out, key=lambda b: b.name)
+
+
+def device_kind() -> str:
+    return jax.default_backend()
+
+
+def _dtype_ok(caps: Capabilities, dtype) -> bool:
+    if caps.dtypes is None:
+        return True
+    return jnp.dtype(dtype).name in caps.dtypes
+
+
+def eligible(backend: MixerBackend, *, causal: bool, dtype, device: Optional[str] = None,
+             mesh=None) -> bool:
+    device = device or device_kind()
+    caps = backend.caps
+    if causal and not caps.causal:
+        return False
+    if not causal and not caps.bidirectional:
+        return False
+    if caps.sharded and mesh is None:
+        return False
+    if not caps.sharded and mesh is not None:
+        return False
+    if device not in caps.device_kinds:
+        return False
+    return _dtype_ok(caps, dtype)
+
+
+# ---------------------------------------------------------------------------
+# Resolution
+# ---------------------------------------------------------------------------
+
+
+def _legacy_tuple_plan(impl: tuple) -> MixerPlan:
+    tag = impl[0]
+    if tag == "sp":
+        _, mesh, seq_axes = impl
+        return MixerPlan("seqparallel", {"mesh": mesh, "seq_axes": seq_axes})
+    if tag == "sp2d":
+        _, mesh, seq_axes, lat_axes = impl
+        return MixerPlan("seqlat", {"mesh": mesh, "seq_axes": seq_axes,
+                                    "lat_axes": lat_axes})
+    raise ValueError(f"unknown legacy impl tuple {impl!r}")
+
+
+def _check_contract(backend: MixerBackend, causal: bool) -> None:
+    """Explicitly-named backends/plans still must satisfy the correctness
+    contract: a bidirectional mixer on the causal path would silently leak
+    future tokens, so that is an error, never a fallback."""
+    if causal and not backend.caps.causal:
+        raise ValueError(
+            f"backend {backend.name!r} is not causal — using it as an LM mixer "
+            "would leak future tokens (registered causal backends: "
+            f"{[b.name for b in backends(causal=True)]})")
+    if not causal and not backend.caps.bidirectional:
+        raise ValueError(
+            f"backend {backend.name!r} only implements the causal contract and "
+            "cannot serve the bidirectional (set-mixer) path")
+
+
+def resolve(impl, *, shape: MixerShape, dtype, mesh=None, causal: bool = False):
+    """Normalize any ``impl`` value to a ``(MixerBackend, MixerPlan)`` pair."""
+    _ensure_loaded()
+    if impl is None:
+        impl = "auto"
+    if isinstance(impl, MixerPlan):
+        backend = get_backend(impl.backend)
+        _check_contract(backend, causal)
+        return backend, impl
+    if isinstance(impl, tuple):
+        plan = _legacy_tuple_plan(impl)
+        backend = get_backend(plan.backend)
+        _check_contract(backend, causal)
+        return backend, plan
+    if not isinstance(impl, str):
+        raise TypeError(f"impl must be str | tuple | MixerPlan, got {type(impl)!r}")
+    if impl == "auto":
+        dev = device_kind()
+        cands = [b for b in _REGISTRY.values()
+                 if eligible(b, causal=causal, dtype=dtype, device=dev, mesh=mesh)]
+        if not cands:
+            raise ValueError(
+                f"no eligible mixer backend (causal={causal}, device={dev}, "
+                f"dtype={jnp.dtype(dtype).name}, mesh={mesh is not None})")
+        backend = max(cands, key=lambda b: b.score(shape, dev))
+        return backend, backend.plan(shape, mesh, dtype)
+    backend = get_backend(impl)
+    _check_contract(backend, causal)
+    return backend, backend.plan(shape, mesh, dtype)
+
+
+def describe(impl, *, shape: MixerShape, dtype=jnp.float32, mesh=None,
+             causal: bool = False) -> str:
+    """Human/CSV-friendly 'which backend+plan would run' string."""
+    _, plan = resolve(impl, shape=shape, dtype=dtype, mesh=mesh, causal=causal)
+    return plan.describe()
+
+
+def sharded_plan(mesh, seq_axes: Sequence[str] | str,
+                 lat_axes: Sequence[str] | str = "model") -> MixerPlan:
+    """Pick the sharded FLARE form for a mesh: 1D sequence-parallel when the
+    token dim already covers the mesh (including the ``lat_axes``), else the
+    2D seq x latent form so the latent axis keeps ``lat_axes`` busy.
+
+    This is the single place the sp-vs-sp2d decision lives (previously
+    inlined in launch/specs.py).
+    """
+    seq = (seq_axes,) if isinstance(seq_axes, str) else tuple(seq_axes)
+    lat = (lat_axes,) if isinstance(lat_axes, str) else tuple(lat_axes)
+    if all(a in seq for a in lat):
+        return MixerPlan("seqparallel", {"mesh": mesh, "seq_axes": seq_axes})
+    return MixerPlan("seqlat", {"mesh": mesh, "seq_axes": seq_axes,
+                                "lat_axes": lat_axes})
+
+
+# ---------------------------------------------------------------------------
+# Entry points used by call sites
+# ---------------------------------------------------------------------------
+
+
+def run_mixer(impl, q: jax.Array, k: jax.Array, v: jax.Array, *, mesh=None) -> jax.Array:
+    """Bidirectional (set-mixer) FLARE: q [H,M,D], k/v [B,H,N,D] -> [B,H,N,D]."""
+    backend, plan = resolve(impl, shape=MixerShape.from_qkv(q, k), dtype=k.dtype,
+                            mesh=mesh, causal=False)
+    return backend.run(plan, q, k, v)
+
+
+def run_causal_mixer(impl, q: jax.Array, k: jax.Array, v: jax.Array, *,
+                     chunk_size: Optional[int] = None) -> jax.Array:
+    """Causal (LM-mixer) FLARE: token t sees only the prefix <= t."""
+    backend, plan = resolve(impl, shape=MixerShape.from_qkv(q, k), dtype=k.dtype,
+                            causal=True)
+    if chunk_size is not None:
+        plan = MixerPlan(plan.backend, {**plan.params, "chunk_size": chunk_size})
+    return backend.run(plan, q, k, v)

@@ -13,11 +13,13 @@ Layout convention is torch-style [B, H, N, D]; latent queries are learned
 parameters of shape [H, M, D] (the paper's Q in R^{M x C} split along the
 feature dim so each head owns a disjoint latent slice).
 
-Implementations:
-  - "sdpa":         two standard SDPA calls (reference; XLA fuses well)
-  - "materialized": Fig. 7 fallback that materializes the M x N weights
-  - "pallas":       fused TPU kernels (repro.kernels) — encode uses a
-                    flash-style online softmax over N tiles.
+Implementations are mixer *backends* resolved through the typed registry in
+repro.core.dispatch (DESIGN.md §10): ``impl`` may be "auto" (capability-based
+pick for the current device), a backend name ("sdpa", "materialized",
+"pallas", "seqparallel", "seqlat"), a pre-built
+:class:`~repro.core.dispatch.MixerPlan`, or one of the legacy tuple forms
+(``("sp", mesh, axes)`` / ``("sp2d", mesh, sa, la)``) which the resolver
+aliases onto the sharded backends.
 
 Softmax statistics are fp32 with max subtraction (beyond-paper stability fix;
 mathematically identical — see DESIGN.md §9).
@@ -71,7 +73,7 @@ def flare_mixer(
     k: jax.Array,
     v: jax.Array,
     *,
-    impl: str = "sdpa",
+    impl="auto",
 ) -> jax.Array:
     """Multi-head FLARE token mixing.
 
@@ -79,57 +81,15 @@ def flare_mixer(
       q: [H, M, D] learned latent queries (head-wise independent slices).
       k: [B, H, N, D] keys from the deep ResMLP projection.
       v: [B, H, N, D] values from the deep ResMLP projection.
-      impl: "sdpa" | "materialized" | "pallas".
+      impl: "auto", a registered backend name, a MixerPlan, or a legacy
+        ``("sp", ...)`` / ``("sp2d", ...)`` tuple — see repro.core.dispatch.
 
     Returns:
       y: [B, H, N, D].
     """
-    if impl == "sdpa":
-        # Encode: latents attend to inputs. Broadcast q over batch.
-        z = sdpa(q[None], k, v, scale=1.0)  # [B, H, M, D]
-        # Decode: inputs attend to latents, with the latent sequence as values.
-        return sdpa(k, q[None], z, scale=1.0)  # [B, H, N, D]
-    if impl == "materialized":
-        return _flare_mixer_materialized(q, k, v)
-    if impl == "pallas":
-        from repro.kernels.ops import flare_mixer_fused
+    from repro.core.dispatch import run_mixer
 
-        return flare_mixer_fused(q, k, v)
-    if isinstance(impl, tuple) and impl and impl[0] == "sp":
-        # Sequence-parallel operator: tokens sharded over mesh axes impl[2].
-        # Communicates O(M*C) latent statistics per layer instead of letting
-        # GSPMD reshard score-scale tensors (DESIGN.md §2; EXPERIMENTS.md §Perf).
-        from jax.sharding import PartitionSpec as P
-
-        from repro.core.flare_sp import flare_mixer_seqparallel
-
-        _, mesh, seq_axes = impl
-        axis_name = seq_axes if isinstance(seq_axes, str) else tuple(seq_axes)
-        fn = jax.shard_map(
-            lambda q_, k_, v_: flare_mixer_seqparallel(q_, k_, v_, axis_name=axis_name),
-            mesh=mesh,
-            in_specs=(P(), P(None, None, axis_name, None), P(None, None, axis_name, None)),
-            out_specs=P(None, None, axis_name, None),
-        )
-        return fn(q, k, v)
-    if isinstance(impl, tuple) and impl and impl[0] == "sp2d":
-        # 2D-parallel: tokens over impl[2], latent slices over impl[3].
-        from jax.sharding import PartitionSpec as P
-
-        from repro.core.flare_sp import flare_mixer_seqlat
-
-        _, mesh, seq_axes, lat_axes = impl
-        fn = jax.shard_map(
-            lambda q_, k_, v_: flare_mixer_seqlat(q_, k_, v_, seq_axis=seq_axes,
-                                                  lat_axis=lat_axes),
-            mesh=mesh,
-            in_specs=(P(None, lat_axes, None),
-                      P(None, None, seq_axes, None),
-                      P(None, None, seq_axes, None)),
-            out_specs=P(None, None, seq_axes, None),
-        )
-        return fn(q, k, v)
-    raise ValueError(f"unknown impl {impl!r}")
+    return run_mixer(impl, q, k, v)
 
 
 def _flare_mixer_materialized(q: jax.Array, k: jax.Array, v: jax.Array) -> jax.Array:
@@ -195,7 +155,7 @@ def _merge_heads(x: jax.Array) -> jax.Array:
     return x.transpose(0, 2, 1, 3).reshape(b, n, h * d)
 
 
-def flare_layer(params: dict, x: jax.Array, *, impl: str = "sdpa") -> jax.Array:
+def flare_layer(params: dict, x: jax.Array, *, impl="auto") -> jax.Array:
     """x: [B, N, C] -> [B, N, C]."""
     num_heads = params["q_latent"].shape[0]
     k = _split_heads(resmlp(params["k_proj"], x), num_heads)
@@ -231,7 +191,7 @@ def init_flare_block(
     }
 
 
-def flare_block(params: dict, x: jax.Array, *, impl: str = "sdpa") -> jax.Array:
+def flare_block(params: dict, x: jax.Array, *, impl="auto") -> jax.Array:
     x = x + flare_layer(params["mixer"], layernorm(params["ln1"], x), impl=impl)
     x = x + resmlp(params["mlp"], layernorm(params["ln2"], x))
     return x

@@ -10,10 +10,18 @@ O(M^3 + M^2 N) without forming the N x N matrix, via
     J J^T = U S^2 U^T (eig of M x M)  =>   eigvals(W) = S^2,
     eigvecs(W) = L_N^{1/2} J^T U S^{-1}    [N, M]
 
-Stability: we subtract a single GLOBAL max from Q K^T before exponentiating.
-A global shift rescales A by e^{-c}, L_M and L_N by e^{+c}, so J (and hence
-W's spectrum) is exactly invariant — unlike per-row shifts, which would
-change the decode normalization. (DESIGN.md §9.)
+Stability: J is formed directly in log space,
+
+    J_mn = exp(s_mn - lse_row(s)_m / 2 - lse_col(s)_n / 2),
+
+where the logsumexps are computed stably. The exponent is always <= 0
+(lse_row >= s_mn and lse_col >= s_mn), so J never overflows, and a column or
+row whose mass underflows simply contributes a ~0 entry — unlike the
+"subtract one global max" formulation, where a fully-underflowed row/column
+turned rsqrt(0) into inf and J into NaN. A global score shift still cancels
+exactly (it rescales A by e^{-c} and both normalizers by e^{+c}), which is
+why only *global* — never per-row — shifts preserve the spectrum.
+(DESIGN.md §9.)
 """
 from __future__ import annotations
 
@@ -34,13 +42,11 @@ def flare_spectrum(q: jax.Array, k: jax.Array, *, return_vectors: bool = True):
     q = q.astype(jnp.float32)
     k = k.astype(jnp.float32)
     scores = q @ k.T  # [M, N]
-    scores = scores - jax.lax.stop_gradient(jnp.max(scores))  # global shift: spectrum-invariant
-    a = jnp.exp(scores)
-    row_sums = jnp.sum(a, axis=1)  # [M]
-    col_sums = jnp.sum(a, axis=0)  # [N]
-    lm_half = jax.lax.rsqrt(row_sums)  # L_M^{1/2} diagonal
-    ln_half = jax.lax.rsqrt(col_sums)  # L_N^{1/2} diagonal
-    j = lm_half[:, None] * a * ln_half[None, :]  # [M, N]
+    # log-space J: exponent <= 0 by construction, so no overflow and no
+    # rsqrt(0) = inf on underflowed rows/columns (see module docstring)
+    lse_row = jax.scipy.special.logsumexp(scores, axis=1)  # log row-sums of A
+    lse_col = jax.scipy.special.logsumexp(scores, axis=0)  # log col-sums of A
+    j = jnp.exp(scores - 0.5 * lse_row[:, None] - 0.5 * lse_col[None, :])  # [M, N]
     jjt = j @ j.T  # [M, M]
     # JJ^T is symmetric PSD: eigh gives ascending eigvals.
     s2, u = jnp.linalg.eigh(jjt)
@@ -50,6 +56,7 @@ def flare_spectrum(q: jax.Array, k: jax.Array, *, return_vectors: bool = True):
     if not return_vectors:
         return s2, None
     s = jnp.sqrt(jnp.maximum(s2, 1e-30))
+    ln_half = jnp.exp(-0.5 * lse_col)  # L_N^{1/2} diagonal
     vecs = ln_half[:, None] * (j.T @ (u / s[None, :]))  # [N, M]
     return s2, vecs
 

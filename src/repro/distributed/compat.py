@@ -1,0 +1,29 @@
+"""Version-compat shims for jax distributed APIs that moved between releases.
+
+The repo targets current jax, but CI/offline containers may carry an older
+release where ``shard_map`` still lives in ``jax.experimental`` and
+``jax.sharding.AxisType`` / ``make_mesh(axis_types=...)`` do not exist yet.
+Route all mesh/shard_map construction through here.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def shard_map(*args, **kwargs):
+    sm = getattr(jax, "shard_map", None)
+    if sm is None:  # jax < 0.5
+        from jax.experimental.shard_map import shard_map as sm
+    return sm(*args, **kwargs)
+
+
+def make_mesh(axis_shapes, axis_names):
+    """jax.make_mesh with explicit-Auto axis types where supported."""
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is not None:
+        try:
+            return jax.make_mesh(axis_shapes, axis_names,
+                                 axis_types=(axis_type.Auto,) * len(axis_names))
+        except TypeError:  # make_mesh predates the axis_types kwarg
+            pass
+    return jax.make_mesh(axis_shapes, axis_names)

@@ -24,7 +24,7 @@ def _vmem(shape, dtype):
 
 
 def _flash_kernel(q_ref, k_ref, v_ref, o_ref, max_scr, den_scr, acc_scr, *,
-                  scale, causal, window, block_q, block_kv, kv_blocks):
+                  scale, causal, window, block_q, block_kv, kv_blocks, kv_valid):
     qi = pl.program_id(1)
     ki = pl.program_id(2)
 
@@ -59,6 +59,8 @@ def _flash_kernel(q_ref, k_ref, v_ref, o_ref, max_scr, den_scr, acc_scr, *,
             ok &= cols <= rows
         if window is not None:
             ok &= cols > rows - window
+        if kv_valid is not None:
+            ok &= cols < kv_valid  # tile padding on the KV axis (ops.py)
         s = jnp.where(ok, s, NEG_INF)
 
         m_prev = max_scr[...]
@@ -90,19 +92,25 @@ def flash_attention_pallas(
     window: Optional[int] = None,
     block_q: int = 256,
     block_kv: int = 512,
+    kv_valid: Optional[int] = None,
     interpret: bool = False,
 ) -> jax.Array:
+    """``kv_valid``: number of real KV positions when Skv carries tile
+    padding (ops.py pads to the block boundary; the tail is masked here).
+    Padded *query* rows need no mask — their outputs are sliced away."""
     g, sq, d = q.shape
     skv = k.shape[1]
     block_q = min(block_q, sq)
     block_kv = min(block_kv, skv)
     if sq % block_q or skv % block_kv:
         raise ValueError(f"Sq={sq}, Skv={skv} must tile by ({block_q},{block_kv})")
+    if kv_valid is not None and kv_valid >= skv:
+        kv_valid = None
     kv_blocks = skv // block_kv
     grid = (g, sq // block_q, kv_blocks)
     kernel = functools.partial(
         _flash_kernel, scale=scale, causal=causal, window=window,
-        block_q=block_q, block_kv=block_kv, kv_blocks=kv_blocks,
+        block_q=block_q, block_kv=block_kv, kv_blocks=kv_blocks, kv_valid=kv_valid,
     )
     return pl.pallas_call(
         kernel,

@@ -40,7 +40,8 @@ NEG_INF = -1e30
 # ---------------------------------------------------------------------------
 
 
-def _encode_kernel(q_ref, k_ref, v_ref, z_ref, max_scr, den_scr, num_scr, *, n_blocks):
+def _encode_kernel(q_ref, k_ref, v_ref, z_ref, max_scr, den_scr, num_scr, *,
+                   n_blocks, block_n, n_valid):
     n_idx = pl.program_id(2)
 
     @pl.when(n_idx == 0)
@@ -55,11 +56,20 @@ def _encode_kernel(q_ref, k_ref, v_ref, z_ref, max_scr, den_scr, num_scr, *, n_b
     s = jax.lax.dot_general(
         q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
     )  # [bm, bn], scale = 1 (paper §3.2)
+    ok = None
+    if n_valid is not None:
+        # Token padding to the tile boundary: exclude the padded tail from
+        # the softmax statistics (exp contribution forced to 0).
+        cols = n_idx * block_n + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        ok = cols < n_valid
+        s = jnp.where(ok, s, NEG_INF)
 
     m_prev = max_scr[...]
     m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
     alpha = jnp.exp(m_prev - m_new)
     p = jnp.exp(s - m_new[:, None])  # [bm, bn]
+    if ok is not None:
+        p = jnp.where(ok, p, 0.0)
     den_scr[...] = den_scr[...] * alpha + jnp.sum(p, axis=-1)
     num_scr[...] = num_scr[...] * alpha[:, None] + jax.lax.dot_general(
         p.astype(v.dtype), v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
@@ -78,17 +88,23 @@ def flare_encode_pallas(
     *,
     block_m: int = 128,
     block_n: int = 512,
+    n_valid: int | None = None,
     interpret: bool = False,
 ) -> jax.Array:
+    """``n_valid``: number of real tokens when N carries tile padding —
+    ops.py pads N to the block_n boundary and the kernel masks the tail."""
     g, m, d = q.shape
     n = k.shape[1]
     block_m = min(block_m, m)
     block_n = min(block_n, n)
     if m % block_m or n % block_n:
         raise ValueError(f"M={m} N={n} must tile by ({block_m},{block_n})")
+    if n_valid is not None and n_valid >= n:
+        n_valid = None  # no padding — skip the mask
     n_blocks = n // block_n
     grid = (g, m // block_m, n_blocks)
-    kernel = functools.partial(_encode_kernel, n_blocks=n_blocks)
+    kernel = functools.partial(_encode_kernel, n_blocks=n_blocks,
+                               block_n=block_n, n_valid=n_valid)
     return pl.pallas_call(
         kernel,
         grid=grid,
@@ -119,15 +135,24 @@ def _vmem(shape, dtype):
 # ---------------------------------------------------------------------------
 
 
-def _decode_kernel(k_ref, q_ref, z_ref, y_ref):
+def _decode_kernel(k_ref, q_ref, z_ref, y_ref, *, m_valid):
     k = k_ref[0]  # [bn, D]
     q = q_ref[0]  # [M, D] — whole latent set in VMEM
     z = z_ref[0]  # [M, D]
     s = jax.lax.dot_general(
         k, q, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
     )  # [bn, M]
+    ok = None
+    if m_valid is not None:
+        # Latent padding: the decode softmax runs over M — padded latent
+        # rows must be invisible to it.
+        cols = jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        ok = cols < m_valid
+        s = jnp.where(ok, s, NEG_INF)
     m = jnp.max(s, axis=-1, keepdims=True)
     p = jnp.exp(s - m)
+    if ok is not None:
+        p = jnp.where(ok, p, 0.0)
     p = p / jnp.sum(p, axis=-1, keepdims=True)
     y_ref[0] = jax.lax.dot_general(
         p.astype(z.dtype), z, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
@@ -140,16 +165,22 @@ def flare_decode_pallas(
     z: jax.Array,  # [G, M, D]
     *,
     block_n: int = 512,
+    m_valid: int | None = None,
     interpret: bool = False,
 ) -> jax.Array:
+    """``m_valid``: number of real latents when M carries tile padding (the
+    decode softmax must not see padded latent rows). Padded *tokens* need no
+    mask here: their output rows are garbage and get sliced by the caller."""
     g, m, d = q.shape
     n = k.shape[1]
     block_n = min(block_n, n)
     if n % block_n:
         raise ValueError(f"N={n} must tile by {block_n}")
+    if m_valid is not None and m_valid >= m:
+        m_valid = None
     grid = (g, n // block_n)
     return pl.pallas_call(
-        _decode_kernel,
+        functools.partial(_decode_kernel, m_valid=m_valid),
         grid=grid,
         in_specs=[
             pl.BlockSpec((1, block_n, d), lambda g_, n_: (g_, n_, 0)),

@@ -92,12 +92,16 @@ def flare_causal_chunk_pallas(
     tile: int = 256,
     interpret: bool = False,
 ) -> jax.Array:
-    """Causal FLARE over the whole sequence, tiled; returns [G, T, D]."""
+    """Causal FLARE over the whole sequence, tiled; returns [G, T, D].
+
+    T must be a multiple of ``tile`` — ops.py pads the sequence to the tile
+    boundary (exact under causality: padded trailing tokens can only affect
+    positions after themselves, which the caller slices away)."""
     g, m, d = q.shape
     t = k.shape[1]
     tile = min(tile, t)
-    while t % tile:
-        tile //= 2
+    if t % tile:
+        raise ValueError(f"T={t} must tile by {tile}")
     grid = (g, t // tile)
     kernel = functools.partial(_causal_chunk_kernel, tile=tile)
     return pl.pallas_call(

@@ -4,11 +4,19 @@ Responsibilities:
   - flatten [B, H, ...] -> [G, ...] group layout the kernels expect,
   - pad D to the 128-lane boundary (exact: zero columns do not change
     q.k scores, and padded output columns are sliced away),
-  - pad N to the tile boundary for FLARE encode (exact: ops.py pads K with a
-    NEG_INF-free scheme — padded tokens get score exp(-inf)=0 via a key mask
-    column trick; see _pad_tokens),
+  - pad the token/latent dims UP to the tile boundary instead of shrinking
+    tiles (the old ``while n % bn: bn //= 2`` collapsed to 1-wide tiles for
+    odd/prime N — exactly the unstructured-mesh sizes the paper targets).
+    Padding is exact: the kernels mask padded softmax columns (``n_valid`` /
+    ``m_valid`` / ``kv_valid``) and padded output rows are sliced away; the
+    causal kernel needs no mask because padded trailing tokens only influence
+    positions after themselves (DESIGN.md §11),
   - choose interpret mode automatically off-TPU so tests/benchmarks run on
     CPU, while TPU gets the compiled kernels.
+
+Tile sizes are parameters (threaded from the backend registry's plan, which
+consults the autotune cache — repro.backends); the defaults here are only
+the last-resort heuristic for direct calls.
 """
 from __future__ import annotations
 
@@ -37,6 +45,16 @@ def _pad_lanes(x: jax.Array) -> jax.Array:
     return jnp.pad(x, [(0, 0)] * (x.ndim - 1) + [(0, pad)])
 
 
+def _pad_to(x: jax.Array, axis: int, multiple: int) -> jax.Array:
+    """Zero-pad ``axis`` up to the next multiple of ``multiple``."""
+    pad = (-x.shape[axis]) % multiple
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
 def _flatten_groups(x: jax.Array) -> jax.Array:
     b, h, n, d = x.shape
     return x.reshape(b * h, n, d)
@@ -57,19 +75,16 @@ def flare_mixer_fused(
     b, h, n, d = k.shape
     m = q.shape[1]
     qq = jnp.broadcast_to(q[None], (b, h, m, d))
-    qg = _pad_lanes(_flatten_groups(qq))
-    kg = _pad_lanes(_flatten_groups(k))
-    vg = _pad_lanes(_flatten_groups(v))
-    # tile-size safety for small inputs
+    # clip tiles to the problem, then pad the problem to the tile boundary
     bm = min(block_m, m)
     bn = min(block_n, n)
-    while m % bm:
-        bm //= 2
-    while n % bn:
-        bn //= 2
-    z = flare_encode_pallas(qg, kg, vg, block_m=bm, block_n=bn, interpret=interpret)
-    y = flare_decode_pallas(qg, kg, z, block_n=bn, interpret=interpret)
-    return y[..., :d].reshape(b, h, n, d)
+    qg = _pad_to(_pad_lanes(_flatten_groups(qq)), 1, bm)
+    kg = _pad_to(_pad_lanes(_flatten_groups(k)), 1, bn)
+    vg = _pad_to(_pad_lanes(_flatten_groups(v)), 1, bn)
+    z = flare_encode_pallas(qg, kg, vg, block_m=bm, block_n=bn, n_valid=n,
+                            interpret=interpret)
+    y = flare_decode_pallas(qg, kg, z, block_n=bn, m_valid=m, interpret=interpret)
+    return y[:, :n, :d].reshape(b, h, n, d)
 
 
 def flash_attention(
@@ -88,18 +103,15 @@ def flash_attention(
         interpret = not _on_tpu()
     b, h, sq, d = q.shape
     skv = k.shape[2]
-    qg = _pad_lanes(_flatten_groups(q))
-    kg = _pad_lanes(_flatten_groups(k))
-    vg = _pad_lanes(_flatten_groups(v))
     bq = min(block_q, sq)
     bkv = min(block_kv, skv)
-    while sq % bq:
-        bq //= 2
-    while skv % bkv:
-        bkv //= 2
+    qg = _pad_to(_pad_lanes(_flatten_groups(q)), 1, bq)
+    kg = _pad_to(_pad_lanes(_flatten_groups(k)), 1, bkv)
+    vg = _pad_to(_pad_lanes(_flatten_groups(v)), 1, bkv)
     o = flash_attention_pallas(qg, kg, vg, scale=scale, causal=causal, window=window,
-                               block_q=bq, block_kv=bkv, interpret=interpret)
-    return o[..., :d].reshape(b, h, sq, d)
+                               block_q=bq, block_kv=bkv, kv_valid=skv,
+                               interpret=interpret)
+    return o[:, :sq, :d].reshape(b, h, sq, d)
 
 
 def flare_causal_fused(
@@ -117,8 +129,10 @@ def flare_causal_fused(
     b, h, n, d = k.shape
     m = q.shape[1]
     qq = jnp.broadcast_to(q[None], (b, h, m, d))
+    tile = min(tile, n)
     qg = _pad_lanes(_flatten_groups(qq))
-    kg = _pad_lanes(_flatten_groups(k))
-    vg = _pad_lanes(_flatten_groups(v))
+    # causal => padded trailing tokens cannot leak into real positions
+    kg = _pad_to(_pad_lanes(_flatten_groups(k)), 1, tile)
+    vg = _pad_to(_pad_lanes(_flatten_groups(v)), 1, tile)
     y = flare_causal_chunk_pallas(qg, kg, vg, tile=tile, interpret=interpret)
-    return y[..., :d].reshape(b, h, n, d)
+    return y[:, :n, :d].reshape(b, h, n, d)

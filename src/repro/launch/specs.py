@@ -142,19 +142,20 @@ def build_cell(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh,
     flare_impl = None
     if cfg.family == "pde":
         # Sequence-parallel FLARE: tokens sharded over the same axes as the
-        # batch spec below (O(M*C) psum per layer, §Perf iteration 1). When
-        # the point count only divides the data axes, go 2D: latents shard
-        # over "model" so that axis is not idle (§Perf iteration 2).
-        point_axes = _pde_point_axes(cfg, shape, mesh)
-        if "model" in point_axes:
-            flare_impl = ("sp", mesh, point_axes)
-        else:
-            flare_impl = ("sp2d", mesh, point_axes, "model")
+        # batch spec below (O(M*C) psum per layer, §Perf iteration 1). The
+        # sp-vs-sp2d decision (latents over "model" when the point count only
+        # divides the data axes, §Perf iteration 2) lives in the dispatcher.
+        from repro.core.dispatch import sharded_plan
+
+        flare_impl = sharded_plan(mesh, _pde_point_axes(cfg, shape, mesh),
+                                  lat_axes="model")
     model = get_model(cfg, flare_impl=flare_impl)
     key = jax.random.PRNGKey(0)
     params_shape = jax.eval_shape(model.init, key)
     report: list = []
     meta = {"sharding_report": report}
+    if flare_impl is not None:
+        meta["flare_backend"] = flare_impl.describe()
 
     if shape.step == "train":
         p_sh = param_shardings(params_shape, mesh, report)

@@ -32,23 +32,29 @@ class Model:
 
 
 def get_model(cfg: ModelConfig, *, flare_impl=None) -> Model:
-    """flare_impl: override for the FLARE mixer implementation ("sdpa" |
-    "materialized" | "pallas" | ("sp", mesh, seq_axes) sequence-parallel)."""
+    """flare_impl: FLARE mixer-backend selector, resolved by
+    repro.core.dispatch — "auto" (default), a registered backend name
+    ("sdpa" | "materialized" | "pallas" | ...), a MixerPlan (e.g. from
+    dispatch.sharded_plan), or a legacy ("sp", mesh, axes) tuple."""
     fam = cfg.family
     if fam in ("dense", "moe", "vlm", "flare_lm"):
         from repro.models import transformer as t
 
+        # flare_impl names a *mixer* backend — only the FLARE family consumes
+        # it; gqa/mla families keep their own attention-impl vocabulary.
+        impl = (flare_impl or "auto") if fam == "flare_lm" else "auto"
+
         def _fwd(p, b):
             # public API: slice the TP-padded vocab back to the true vocab
-            logits, aux = t.lm_forward(p, b, cfg)
+            logits, aux = t.lm_forward(p, b, cfg, impl=impl)
             return logits[..., : cfg.vocab], aux
 
         return Model(
             cfg=cfg,
             init=lambda key: t.init_lm(key, cfg),
-            loss=lambda p, b: t.lm_loss(p, b, cfg),
+            loss=lambda p, b: t.lm_loss(p, b, cfg, impl=impl),
             forward=_fwd,
-            prefill=lambda p, b, cap: t.lm_prefill(p, b, cfg, cap),
+            prefill=lambda p, b, cap: t.lm_prefill(p, b, cfg, cap, impl=impl),
             decode_step=lambda p, tok, c: t.lm_decode_step(p, tok, c, cfg),
             init_caches=lambda bs, cap: t.init_lm_caches(bs, cfg, cap),
         )
@@ -110,7 +116,7 @@ def get_model(cfg: ModelConfig, *, flare_impl=None) -> Model:
                 num_latents=cfg.flare_latents,
             )
 
-        impl = flare_impl or "sdpa"
+        impl = flare_impl or "auto"
         return Model(
             cfg=cfg,
             init=_init,

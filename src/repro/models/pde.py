@@ -66,7 +66,7 @@ def init_surrogate(key, mixer: str, *, in_dim: int, out_dim: int, dim: int,
 
 
 def surrogate_forward(params: dict, x: jax.Array, *, mixer: str = "flare",
-                      num_heads: int = 8, impl: str = "sdpa") -> jax.Array:
+                      num_heads: int = 8, impl="auto") -> jax.Array:
     """x: [B, N, F_in] point features -> [B, N, F_out]."""
     h = resmlp(params["in_proj"], x)
     if mixer == "perceiver":
@@ -92,7 +92,7 @@ def relative_l2(pred: jax.Array, target: jax.Array) -> jax.Array:
 
 
 def surrogate_loss(params, batch, *, mixer: str = "flare", num_heads: int = 8,
-                   impl: str = "sdpa"):
+                   impl="auto"):
     pred = surrogate_forward(params, batch["x"], mixer=mixer, num_heads=num_heads, impl=impl)
     return relative_l2(pred, batch["y"])
 

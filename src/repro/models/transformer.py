@@ -20,8 +20,6 @@ import jax.numpy as jnp
 from repro.config import ModelConfig
 from repro.core.flare import init_flare_layer
 from repro.core.flare_stream import (
-    FlareState,
-    flare_causal,
     stream_append,
     stream_init,
 )
@@ -197,14 +195,17 @@ def init_dense_ffn_layer(key, cfg: ModelConfig) -> dict:
     return p
 
 
-def _flare_stream_mix(layer, x, cfg: ModelConfig):
-    """Causal FLARE as an LM mixer (chunked training path)."""
+def _flare_stream_mix(layer, x, cfg: ModelConfig, *, impl="auto"):
+    """Causal FLARE as an LM mixer (chunked training path). ``impl`` resolves
+    through the causal side of the mixer-backend registry."""
+    from repro.core.dispatch import run_causal_mixer
     from repro.core.flare import _merge_heads, _split_heads  # layout helpers
 
     h = cfg.attn.num_heads
     k = _split_heads(resmlp(layer["k_proj"], x), h)
     v = _split_heads(resmlp(layer["v_proj"], x), h)
-    y = flare_causal(layer["q_latent"].astype(x.dtype), k, v, chunk_size=cfg.attn.flare_chunk)
+    y = run_causal_mixer(impl, layer["q_latent"].astype(x.dtype), k, v,
+                         chunk_size=cfg.attn.flare_chunk)
     return dense(layer["out_proj"], _merge_heads(y))
 
 
@@ -218,7 +219,7 @@ def decoder_layer_forward(layer, x, cfg: ModelConfig, *, positions, moe_cfg=None
     elif cfg.attn.kind == "mla":
         a = mla_forward(layer["attn"], xin, cfg.attn, positions=positions, causal=True, impl=impl)
     else:  # flare_stream
-        a = _flare_stream_mix(layer["attn"], xin, cfg)
+        a = _flare_stream_mix(layer["attn"], xin, cfg, impl=impl)
     x = x + a
     xin = _norm_apply(cfg, layer["norm2"], x)
     if cfg.moe is not None and not dense_ffn:
@@ -497,8 +498,12 @@ def init_encdec(key, cfg: ModelConfig) -> dict:
     }
 
 
-def encode(params, src_embeds, cfg: ModelConfig, *, impl: str = "auto"):
-    """src_embeds: [B, S, C] from the (stubbed) modality frontend."""
+def encode(params, src_embeds, cfg: ModelConfig, *, impl: str = "auto",
+           flare_impl="auto"):
+    """src_embeds: [B, S, C] from the (stubbed) modality frontend.
+
+    ``impl`` drives the dense-attention path; ``flare_impl`` is the mixer
+    backend (registry value) for FLARE encoder stacks."""
     from repro.core.flare import flare_layer
 
     x = src_embeds.astype(jnp.dtype(cfg.compute_dtype))
@@ -507,7 +512,7 @@ def encode(params, src_embeds, cfg: ModelConfig, *, impl: str = "auto"):
     def body(x, layer):
         xin = _norm_apply(cfg, layer["norm1"], x)
         if cfg.encoder_mixer == "flare":
-            a = flare_layer(layer["attn"], xin)
+            a = flare_layer(layer["attn"], xin, impl=flare_impl)
         else:
             a = gqa_forward(layer["attn"], xin, cfg.attn, positions=positions,
                             causal=False, impl=impl)

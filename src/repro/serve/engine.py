@@ -38,7 +38,24 @@ class ServeEngine:
                                 static_argnums=())
         self._decode = jax.jit(model.decode_step)
         self.queue: list[Request] = []
-        self.stats = {"requests": 0, "tokens_generated": 0, "prefill_s": 0.0, "decode_s": 0.0}
+        self.stats = {"requests": 0, "tokens_generated": 0, "prefill_s": 0.0,
+                      "decode_s": 0.0, "mixer_backend": self._mixer_backend()}
+
+    def _mixer_backend(self) -> Optional[str]:
+        """Which FLARE backend/plan "auto" resolves to for this model (for
+        observability in serving stats); None for non-FLARE mixers."""
+        try:
+            from repro.core.dispatch import MixerShape, describe
+
+            cfg = getattr(self.model, "cfg", None)
+            if cfg is None or getattr(cfg.attn, "kind", None) != "flare_stream":
+                return None
+            shape = MixerShape(batch=1, heads=cfg.attn.num_heads,
+                               tokens=self.capacity, latents=cfg.attn.flare_latents,
+                               head_dim=cfg.d_model // cfg.attn.num_heads)
+            return describe("auto", shape=shape, causal=True)
+        except Exception:  # pragma: no cover — stats must never break serving
+            return None
 
     def submit(self, prompt, max_new_tokens: int = 32, eos_id: int = -1):
         self.queue.append(Request(np.asarray(prompt, np.int32), max_new_tokens, eos_id))

@@ -1,0 +1,79 @@
+"""Offline fallback for ``hypothesis``.
+
+The container has no network access and no hypothesis wheel; hard-importing
+it used to kill collection of whole test modules. Import ``given``,
+``settings`` and ``st`` from here instead: with hypothesis installed you get
+the real thing, without it you get a deterministic mini-implementation that
+runs each property test over a fixed sample of the strategy space (seeded —
+reproducible, no shrinking, good enough to keep the invariants exercised).
+"""
+from __future__ import annotations
+
+try:  # pragma: no cover — exercised only when hypothesis is installed
+    import hypothesis.strategies as st
+    from hypothesis import given, settings
+
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    import itertools
+    import random
+
+    HAVE_HYPOTHESIS = False
+    _FALLBACK_EXAMPLES = 10
+
+    class _IntegersStrategy:
+        def __init__(self, min_value: int, max_value: int):
+            self.min_value = min_value
+            self.max_value = max_value
+
+        def sample(self, rng: random.Random) -> int:
+            return rng.randint(self.min_value, self.max_value)
+
+        def boundary(self):
+            return (self.min_value, self.max_value)
+
+    class _StModule:
+        @staticmethod
+        def integers(min_value: int, max_value: int) -> _IntegersStrategy:
+            return _IntegersStrategy(min_value, max_value)
+
+    st = _StModule()
+
+    def settings(*_args, **kwargs):
+        """Accepts and records max_examples; other knobs are no-ops here."""
+        max_examples = kwargs.get("max_examples", _FALLBACK_EXAMPLES)
+
+        def deco(fn):
+            fn._compat_max_examples = max_examples
+            return fn
+
+        return deco
+
+    def given(*strategies: _IntegersStrategy):
+        def deco(fn):
+            # NB: no functools.wraps — pytest must see the wrapper's bare
+            # (*args) signature, not the strategy params (they'd be treated
+            # as fixtures).
+            def wrapper(*args, **kwargs):
+                # settings() decorates the wrapper, so read the cap off it
+                n = getattr(wrapper, "_compat_max_examples", _FALLBACK_EXAMPLES)
+                rng = random.Random(1234)
+                # boundary cases first, then seeded random fill
+                corners = itertools.islice(
+                    itertools.product(*(s.boundary() for s in strategies)), n)
+                cases = {tuple(c) for c in corners}
+                for _ in range(20 * n):  # bounded fill (tiny strategy spaces)
+                    if len(cases) >= n:
+                        break
+                    cases.add(tuple(s.sample(rng) for s in strategies))
+                for case in sorted(cases):
+                    fn(*args, *case, **kwargs)
+
+            wrapper.__name__ = fn.__name__
+            wrapper.__doc__ = fn.__doc__
+            return wrapper
+
+        return deco
+
+
+__all__ = ["HAVE_HYPOTHESIS", "given", "settings", "st"]

@@ -12,6 +12,9 @@ import sys
 
 import pytest
 
+# multi-minute suite: deselect with `-m 'not slow'` (see pyproject.toml)
+pytestmark = pytest.mark.slow
+
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
 
@@ -32,7 +35,8 @@ from jax.sharding import PartitionSpec as P
 from repro.core.flare import flare_mixer
 from repro.core.flare_sp import flare_mixer_seqparallel
 
-mesh = jax.make_mesh((8,), ("seq",), axis_types=(jax.sharding.AxisType.Auto,))
+from repro.distributed.compat import make_mesh, shard_map
+mesh = make_mesh((8,), ("seq",))
 key = jax.random.PRNGKey(0)
 H, M, N, D, B = 4, 16, 64, 8, 2
 ks = jax.random.split(key, 3)
@@ -40,7 +44,7 @@ q = jax.random.normal(ks[0], (H, M, D)) * 0.5
 k = jax.random.normal(ks[1], (B, H, N, D)) * 0.5
 v = jax.random.normal(ks[2], (B, H, N, D))
 
-sp = jax.shard_map(
+sp = shard_map(
     lambda q_, k_, v_: flare_mixer_seqparallel(q_, k_, v_, axis_name="seq"),
     mesh=mesh,
     in_specs=(P(), P(None, None, "seq", None), P(None, None, "seq", None)),
@@ -49,6 +53,13 @@ sp = jax.shard_map(
 y_sp = sp(q, k, v)
 y_ref = flare_mixer(q, k, v)
 np.testing.assert_allclose(np.asarray(y_sp), np.asarray(y_ref), atol=1e-5)
+
+# same math through the backend registry (legacy tuple alias), and the
+# sharded_plan helper must map this mesh onto the same backend
+from repro.core.dispatch import sharded_plan
+y_legacy = flare_mixer(q, k, v, impl=("sp", mesh, "seq"))
+np.testing.assert_allclose(np.asarray(y_legacy), np.asarray(y_ref), atol=1e-5)
+assert sharded_plan(mesh, ("seq",), lat_axes="seq").backend == "seqparallel"
 print("PASS")
 """)
 
@@ -79,7 +90,8 @@ step = make_train_step(m.loss, tcfg, num_microbatches=2)
 p1, o1, m1 = jax.jit(step)(params, opt, batch)
 
 # 4x2 mesh
-mesh = jax.make_mesh((4, 2), ("data", "model"), axis_types=(jax.sharding.AxisType.Auto,)*2)
+from repro.distributed.compat import make_mesh
+mesh = make_mesh((4, 2), ("data", "model"))
 p_sh = param_shardings(jax.eval_shape(lambda: params), mesh)
 o_sh = type(opt)(m=param_shardings(jax.eval_shape(lambda: opt.m), mesh),
                  v=param_shardings(jax.eval_shape(lambda: opt.v), mesh),
@@ -106,8 +118,8 @@ from repro.configs import ARCH_IDS, get_config
 from repro.models.api import get_model
 from repro.distributed.sharding import param_shardings
 
-mesh = jax.make_mesh((4, 2), ("data", "model"),
-                     axis_types=(jax.sharding.AxisType.Auto,)*2)
+from repro.distributed.compat import make_mesh
+mesh = make_mesh((4, 2), ("data", "model"))
 for arch in ARCH_IDS:
     cfg = get_config(arch)
     model = get_model(cfg)
@@ -138,10 +150,12 @@ import jax, jax.numpy as jnp, numpy as np
 from jax.sharding import PartitionSpec as P
 from repro.distributed.compression import compressed_mean
 
-mesh = jax.make_mesh((8,), ("dp",), axis_types=(jax.sharding.AxisType.Auto,))
+from repro.distributed.compat import make_mesh, shard_map
+
+mesh = make_mesh((8,), ("dp",))
 g = jax.random.normal(jax.random.PRNGKey(0), (8, 128))
 
-f = jax.shard_map(
+f = shard_map(
     lambda gs: compressed_mean(gs[0], "dp")[0][None],
     mesh=mesh, in_specs=P("dp", None), out_specs=P("dp", None))
 approx = np.asarray(f(g))  # every shard returns the same mean

@@ -1,10 +1,9 @@
 """FLARE operator invariants (paper §3.2, Eq. 7-9) — unit + property tests."""
-import hypothesis.strategies as st
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings
+from _hypothesis_compat import given, settings, st
 
 from repro.core.flare import (
     flare_block,

@@ -91,7 +91,8 @@ import jax, jax.numpy as jnp, sys
 sys.path.insert(0, "src")
 from jax.sharding import PartitionSpec as P, NamedSharding
 from repro.analysis.hlo import analyze_hlo
-mesh = jax.make_mesh((4,), ("d",), axis_types=(jax.sharding.AxisType.Auto,))
+from repro.distributed.compat import make_mesh
+mesh = make_mesh((4,), ("d",))
 w = jax.ShapeDtypeStruct((8, 128, 128), jnp.float32)
 x = jax.ShapeDtypeStruct((4, 128), jnp.float32)
 def f(w, x):

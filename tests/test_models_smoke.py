@@ -9,6 +9,9 @@ import pytest
 from repro.configs import ARCH_IDS, get_config, get_smoke_config
 from repro.models.api import get_model
 
+# multi-minute suite: deselect with `-m 'not slow'` (see pyproject.toml)
+pytestmark = pytest.mark.slow
+
 KEY = jax.random.PRNGKey(6)
 B, S = 2, 16
 

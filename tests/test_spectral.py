@@ -1,9 +1,8 @@
 """Algorithm 1 (paper App. C): linear-time eigenanalysis of W."""
-import hypothesis.strategies as st
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings
+from _hypothesis_compat import given, settings, st
 
 from repro.core.spectral import (
     effective_rank,

@@ -17,6 +17,11 @@ from repro.models import pde
 from repro.models.api import get_model
 from repro.optim.adamw import adamw_update, init_adamw
 
+import pytest
+
+# multi-minute suite: deselect with `-m 'not slow'` (see pyproject.toml)
+pytestmark = pytest.mark.slow
+
 KEY = jax.random.PRNGKey(0)
 
 

@@ -13,6 +13,9 @@ from repro.models.api import get_model
 from repro.serve.engine import ServeEngine
 from repro.train.trainer import Trainer
 
+# multi-minute suite: deselect with `-m 'not slow'` (see pyproject.toml)
+pytestmark = pytest.mark.slow
+
 KEY = jax.random.PRNGKey(0)
 V = 64
 
