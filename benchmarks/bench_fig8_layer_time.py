@@ -1,7 +1,12 @@
 """Figure 8 (CPU-scaled): single-layer execution time — vanilla
-self-attention vs Transolver physics attention vs FLARE across N.
+self-attention vs Transolver physics attention vs FLARE across N, plus a
+per-mixer-backend sweep (sdpa vs the two-launch pallas kernels vs the
+packed-head fused kernels) over the paper's small-D and a large-D config,
+so the perf trajectory (BENCH_<tag>.json) tracks every backend per commit.
 """
 from __future__ import annotations
+
+import functools
 
 import jax
 
@@ -11,6 +16,27 @@ from repro.models import pde
 KEY = jax.random.PRNGKey(3)
 DIM, HEADS, LATENTS = 32, 4, 16
 NS = (512, 1024, 2048, 4096)
+
+# per-backend FLARE layer times: D=8 (paper's tiny-head regime, where the
+# packed backend recovers lane utilization) and D=64
+BACKEND_IMPLS = ("sdpa", "pallas", "packed")
+BACKEND_CONFIGS = {8: dict(dim=32, heads=4), 64: dict(dim=256, heads=4)}
+BACKEND_N = 512
+
+
+def _backend_rows():
+    from repro.core.flare import flare_block, init_flare_block
+
+    for d, c in BACKEND_CONFIGS.items():
+        x = jax.random.normal(jax.random.fold_in(KEY, 100 + d),
+                              (1, BACKEND_N, c["dim"]))
+        p = init_flare_block(KEY, c["dim"], c["heads"], LATENTS)
+        for impl in BACKEND_IMPLS:
+            fn = jax.jit(functools.partial(flare_block, impl=impl))
+            us = time_fn(fn, p, x)
+            emit(f"fig8/backend/{impl}/D{d}/N{BACKEND_N}", us, "",
+                 backend=mixer_backend_info(impl, b=1, h=c["heads"], n=BACKEND_N,
+                                            m=LATENTS, d=d))
 
 
 def run():
@@ -38,6 +64,7 @@ def run():
     emit("fig8/growth_ratio", 0.0,
          f"flare={grow('flare'):.1f}x;vanilla={grow('vanilla'):.1f}x;"
          f"transolver={grow('transolver'):.1f}x;N_ratio={NS[-1] // NS[0]}x")
+    _backend_rows()
     return out
 
 

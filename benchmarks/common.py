@@ -82,5 +82,24 @@ def write_results_json(path: str) -> None:
         json.dump({"rows": ROWS, "device": jax.default_backend()}, f, indent=1)
 
 
+def write_bench_json(path: str, *, tag: str, commit: str, modules: list) -> None:
+    """The tracked perf trajectory: one ``BENCH_<tag>.json`` per run at the
+    repo root, pinned to a commit hash so future PRs can diff perf. Every
+    row carries the backend/plan that produced it; all benchmark modules
+    seed their own fixed ``jax.random.PRNGKey``s, recorded here so a diff
+    is a like-for-like comparison."""
+    payload = {
+        "tag": tag,
+        "commit": commit,
+        "device": jax.default_backend(),
+        "jax": jax.__version__,
+        "modules": modules,
+        "seeds": "fixed per module (jax.random.PRNGKey constants in benchmarks/*)",
+        "rows": ROWS,
+    }
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=1)
+
+
 def param_count(params) -> int:
     return sum(int(x.size) for x in jax.tree.leaves(params))

@@ -6,11 +6,16 @@ Usage:
 
 Each row is ``name,us_per_call,derived`` CSV (harness contract); the same
 rows — annotated with which mixer backend/plan produced them — are written
-to ``benchmark_results.json`` (override with REPRO_BENCH_JSON).
+to ``benchmark_results.json`` (override with REPRO_BENCH_JSON) and, for the
+tracked perf trajectory, to ``BENCH_<tag>.json`` at the repo root (tag =
+REPRO_BENCH_TAG or the short git commit hash; disable with
+REPRO_BENCH_TAG=none). Committing the BENCH file pins each commit's numbers
+so future PRs can diff perf.
 """
 from __future__ import annotations
 
 import os
+import subprocess
 import sys
 import time
 import traceback
@@ -44,15 +49,35 @@ def main() -> None:
             traceback.print_exc()
             print(f"{name}/_wall,{(time.time() - t0) * 1e6:.0f},FAILED:{type(e).__name__}")
             failures.append(name)
-    from benchmarks.common import write_results_json
+    from benchmarks.common import write_bench_json, write_results_json
 
     json_path = os.environ.get("REPRO_BENCH_JSON", "benchmark_results.json")
     try:
         write_results_json(json_path)
     except OSError as e:  # pragma: no cover — JSON sidecar is best-effort
         print(f"_json,0,FAILED:{e}")
+    tag = os.environ.get("REPRO_BENCH_TAG") or _git_commit(short=True) or "local"
+    if tag != "none":
+        root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+        try:
+            write_bench_json(os.path.join(root, f"BENCH_{tag}.json"),
+                             tag=tag, commit=_git_commit() or "unknown",
+                             modules=names)
+        except OSError as e:  # pragma: no cover
+            print(f"_bench_json,0,FAILED:{e}")
     if failures:
         raise SystemExit(f"benchmark failures: {failures}")
+
+
+def _git_commit(short: bool = False) -> str:
+    try:
+        args = ["git", "rev-parse"] + (["--short"] if short else []) + ["HEAD"]
+        return subprocess.run(
+            args, capture_output=True, text=True, timeout=10,
+            cwd=os.path.dirname(os.path.abspath(__file__)),
+        ).stdout.strip()
+    except (OSError, subprocess.SubprocessError):
+        return ""
 
 
 if __name__ == "__main__":

@@ -1,0 +1,22 @@
+#!/usr/bin/env bash
+# CI entry point: fast test tier + interpret-mode kernel-parity smoke.
+#
+# Runs on CPU — every Pallas kernel executes in interpret mode, so kernel
+# regressions (layout, masking, VJP) are caught without a TPU. The slow
+# tier (subprocess device farms, end-to-end trains, the broad smoke matrix)
+# is excluded; run `python -m pytest -x -q` before shipping (ROADMAP.md).
+set -euo pipefail
+cd "$(dirname "$0")/.."
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+export JAX_PLATFORMS="${JAX_PLATFORMS:-cpu}"
+
+echo "== fast tier (pytest -m 'not slow') =="
+python -m pytest -x -q -m "not slow"
+
+echo "== interpret-mode kernel-parity smoke =="
+# quick standalone guard: the fused kernels (packed + classic) against the
+# jnp oracles, exactly what a kernel regression would break first
+python -m pytest -x -q tests/test_kernels.py tests/test_packed.py \
+    -k "sweep or oracles or matches"
+
+echo "CI OK"

@@ -10,9 +10,11 @@ in here — no call site changes needed.
 from repro.backends import (  # noqa: F401  (import for registration side effect)
     causal,
     materialized,
+    packed,
     pallas,
     sdpa,
     seqparallel,
 )
 
-__all__ = ["autotune", "causal", "materialized", "pallas", "sdpa", "seqparallel"]
+__all__ = ["autotune", "causal", "materialized", "packed", "pallas", "sdpa",
+           "seqparallel"]

@@ -1,21 +1,35 @@
-"""Tile autotuner for the Pallas backends (DESIGN.md §11).
+"""Launch-parameter autotuner for the Pallas backends (DESIGN.md §11/§12).
 
-Fused-kernel throughput on TPU hinges on tile selection (FlashAttention's
-central lesson), but the best ``(block_m, block_n)`` depends on the problem
-shape, dtype and device generation — none of which a hardcoded default can
-know. This module:
+Fused-kernel throughput on TPU hinges on launch parameters (FlashAttention's
+central lesson), but the best choice depends on the problem shape, dtype and
+device generation — none of which a hardcoded default can know. This module:
 
-  * proposes MXU-aligned tile candidates for a :class:`~repro.core.dispatch.MixerShape`,
+  * proposes candidates for a :class:`~repro.core.dispatch.MixerShape` per
+    parameter *kind* — ``"tiles"`` is the classic ``(block_m, block_n)``
+    search for the two-launch kernels, ``"packed"`` additionally searches the
+    packed-head backend's head-pack factor alongside its N tile,
   * times them with a caller-supplied runner (so this module stays free of
-    kernel imports), and
+    eager kernel imports; the pack heuristic is lazily imported), and
   * memoizes the winner in an on-disk JSON cache keyed by
-    ``(device, dtype, N, M, D, H)`` so serving and benchmarks never pay the
-    search twice — and never hardcode tiles again.
+    ``(kind, device, dtype, N, M, D, H)`` so serving and benchmarks never pay
+    the search twice — and never hardcode launch parameters again.
 
 Timing only runs when explicitly requested (``autotune=True`` or the
 ``REPRO_AUTOTUNE=1`` env var): the default lookup is cache-hit-or-heuristic,
 which keeps trace-time resolution deterministic and test-friendly. The cache
-location follows ``REPRO_AUTOTUNE_CACHE`` (default ``~/.cache/repro/autotune.json``).
+location follows ``REPRO_AUTOTUNE_CACHE`` (default
+``~/.cache/repro/autotune.json``).
+
+Concurrency: multiple processes (a benchmark sweep, a serving fleet warming
+up) may tune simultaneously. Writes re-read the file from disk, merge the
+new entry into whatever other processes stored meanwhile, and publish via
+temp-file + ``os.replace`` (atomic on POSIX) — so readers never observe a
+partial file and earlier writers' entries survive any serialized
+interleaving. Two *simultaneous* writers can still race read-merge-replace
+and drop one entry; the cost is only a re-tune of that shape, never a
+wrong result, so this stays lock-free. A corrupt cache — or a malformed
+entry inside one — never fails a computation: readers fall back to the
+shape heuristic.
 """
 from __future__ import annotations
 
@@ -40,33 +54,44 @@ def autotune_enabled() -> bool:
     return os.environ.get("REPRO_AUTOTUNE", "0") not in ("", "0", "false")
 
 
-def cache_key(shape: MixerShape, dtype, device: str) -> str:
+def cache_key(shape: MixerShape, dtype, device: str, kind: str = "tiles") -> str:
     import jax.numpy as jnp
 
-    return (f"{device}|{jnp.dtype(dtype).name}|N{shape.tokens}|M{shape.latents}"
+    base = (f"{device}|{jnp.dtype(dtype).name}|N{shape.tokens}|M{shape.latents}"
             f"|D{shape.head_dim}|H{shape.heads}")
+    # the historical "tiles" keys carry no kind prefix — existing caches stay valid
+    return base if kind == "tiles" else f"{kind}|{base}"
+
+
+def _read_disk(path: str) -> dict:
+    """Uncached read straight from disk; {} for missing/corrupt/non-dict."""
+    try:
+        with open(path) as f:
+            data = json.load(f)
+    except (OSError, ValueError):
+        return {}
+    return data if isinstance(data, dict) else {}
 
 
 def _load(path: str) -> dict:
     if path in _MEM_CACHE:
         return _MEM_CACHE[path]
-    data: dict = {}
-    try:
-        with open(path) as f:
-            data = json.load(f)
-    except (OSError, ValueError):
-        data = {}
+    data = _read_disk(path)
     _MEM_CACHE[path] = data
     return data
 
 
-def _store(path: str, data: dict) -> None:
-    _MEM_CACHE[path] = data
+def _store(path: str, key: str, entry: dict) -> None:
+    """Publish one entry. Re-reads the file first so entries written by
+    concurrent processes survive, and replaces atomically so readers never
+    observe a partial file."""
+    merged = {**_MEM_CACHE.get(path, {}), **_read_disk(path), key: entry}
+    _MEM_CACHE[path] = merged
     try:
         os.makedirs(os.path.dirname(path), exist_ok=True)
         tmp = f"{path}.tmp.{os.getpid()}"
         with open(tmp, "w") as f:
-            json.dump(data, f, indent=1, sort_keys=True)
+            json.dump(merged, f, indent=1, sort_keys=True)
         os.replace(tmp, path)
     except OSError:
         pass  # cache is an optimization; never fail the computation
@@ -78,6 +103,17 @@ def _pow2s(lo: int, hi: int) -> list:
         out.append(v)
         v *= 2
     return out
+
+
+# ---------------------------------------------------------------------------
+# Candidate proposal + heuristics, per parameter kind
+# ---------------------------------------------------------------------------
+
+# param names per kind — doubles as entry validation for cache hits
+_KIND_PARAMS = {
+    "tiles": ("block_m", "block_n"),
+    "packed": ("block_n", "pack"),
+}
 
 
 def tile_candidates(shape: MixerShape) -> list:
@@ -95,42 +131,79 @@ def default_tiles(shape: MixerShape) -> dict:
             "block_n": min(512, max(128, shape.tokens))}
 
 
+def packed_candidates(shape: MixerShape) -> list:
+    """(block_n, pack) pairs for the packed-head fused backend: every lane-
+    filling pack factor that does not exceed the head count, crossed with
+    MXU-aligned N tiles."""
+    d = max(1, shape.head_dim)
+    max_pack = max(1, min(128 // d, shape.heads))
+    packs = sorted({p for p in (1, 2, 4, 8, 16, 32) if p <= max_pack} | {max_pack})
+    bns = [b for b in _pow2s(128, 1024) if b <= max(128, shape.tokens)] or [128]
+    return [{"block_n": bn, "pack": p} for p in packs for bn in bns]
+
+
+def default_packed(shape: MixerShape) -> dict:
+    from repro.kernels.flare_packed import heuristic_pack  # lazy: keeps import light
+
+    return {"block_n": min(256, max(128, shape.tokens)),
+            "pack": heuristic_pack(shape.heads, shape.latents, shape.head_dim)}
+
+
+_CANDIDATES = {"tiles": tile_candidates, "packed": packed_candidates}
+_DEFAULTS = {"tiles": default_tiles, "packed": default_packed}
+
+
+# ---------------------------------------------------------------------------
+# Measurement + lookup
+# ---------------------------------------------------------------------------
+
+
 def measure_tiles(shape: MixerShape, dtype, device: str,
                   runner: Callable[[dict], float],
-                  candidates: Optional[Iterable[dict]] = None) -> dict:
-    """Time each candidate with ``runner(tiles) -> seconds`` and cache the
-    winner. Returns the winning tile dict (also annotated with timings)."""
-    cands = list(candidates) if candidates is not None else tile_candidates(shape)
+                  candidates: Optional[Iterable[dict]] = None,
+                  kind: str = "tiles") -> dict:
+    """Time each candidate with ``runner(params) -> seconds`` and cache the
+    winner. Returns the winning param dict (also annotated with timings)."""
+    cands = list(candidates) if candidates is not None else _CANDIDATES[kind](shape)
     timed = []
-    for tiles in cands:
+    for params in cands:
         try:
-            dt = runner(tiles)
-        except Exception:  # noqa: BLE001 — an illegal tile just loses the race
+            dt = runner(params)
+        except Exception:  # noqa: BLE001 — an illegal candidate just loses the race
             continue
-        timed.append((dt, tiles))
+        timed.append((dt, params))
     if not timed:
-        return default_tiles(shape)
+        return _DEFAULTS[kind](shape)
     timed.sort(key=lambda p: p[0])
     best_dt, best = timed[0]
-    path = cache_path()
-    data = _load(path)
-    data[cache_key(shape, dtype, device)] = {
+    _store(cache_path(), cache_key(shape, dtype, device, kind), {
         **best, "us": best_dt * 1e6, "candidates": len(timed),
         "tuned_at": time.strftime("%Y-%m-%dT%H:%M:%S"),
-    }
-    _store(path, data)
+    })
     return best
+
+
+def best_params(shape: MixerShape, dtype, device: str, *, kind: str = "tiles",
+                runner: Optional[Callable[[dict], float]] = None,
+                autotune: Optional[bool] = None) -> dict:
+    """Cache-hit -> cached winner; miss -> time candidates iff autotuning is
+    enabled and a runner is available, else the shape heuristic. A malformed
+    cache entry counts as a miss, never an error."""
+    entry = _load(cache_path()).get(cache_key(shape, dtype, device, kind))
+    if entry is not None:
+        try:
+            return {p: int(entry[p]) for p in _KIND_PARAMS[kind]}
+        except (KeyError, TypeError, ValueError):
+            pass  # corrupt/partial entry — fall through
+    if (autotune if autotune is not None else autotune_enabled()) and runner is not None:
+        best = measure_tiles(shape, dtype, device, runner, kind=kind)
+        return {p: best[p] for p in _KIND_PARAMS[kind]}
+    return _DEFAULTS[kind](shape)
 
 
 def best_tiles(shape: MixerShape, dtype, device: str, *,
                runner: Optional[Callable[[dict], float]] = None,
                autotune: Optional[bool] = None) -> dict:
-    """Cache-hit -> cached winner; miss -> time candidates iff autotuning is
-    enabled and a runner is available, else the shape heuristic."""
-    entry = _load(cache_path()).get(cache_key(shape, dtype, device))
-    if entry is not None:
-        return {"block_m": int(entry["block_m"]), "block_n": int(entry["block_n"])}
-    if (autotune if autotune is not None else autotune_enabled()) and runner is not None:
-        best = measure_tiles(shape, dtype, device, runner)
-        return {"block_m": best["block_m"], "block_n": best["block_n"]}
-    return default_tiles(shape)
+    """Back-compat alias for the classic (block_m, block_n) search."""
+    return best_params(shape, dtype, device, kind="tiles", runner=runner,
+                       autotune=autotune)

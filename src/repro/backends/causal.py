@@ -54,7 +54,8 @@ register(MixerBackend(
 register(MixerBackend(
     name="causal_pallas",
     caps=Capabilities(causal=True, bidirectional=False,
-                      device_kinds=("cpu", "tpu"), dtypes=("float32", "bfloat16")),
+                      device_kinds=("cpu", "tpu"), dtypes=("float32", "bfloat16"),
+                      grads=False),  # forward-only: no custom VJP yet
     plan=_plan_pallas,
     run=_run_pallas,
     score=lambda shape, device: 20.0 if device == "tpu" else 1.0,

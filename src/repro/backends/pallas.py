@@ -62,10 +62,12 @@ def _run(plan: MixerPlan, q, k, v):
 register(MixerBackend(
     name="pallas",
     caps=Capabilities(bidirectional=True, device_kinds=("cpu", "tpu"),
-                      dtypes=("float32", "bfloat16")),
+                      dtypes=("float32", "bfloat16"),
+                      grads=False),  # no VJP — the packed backend trains
     plan=_plan,
     run=_run,
-    # the TPU fast path; interpret mode keeps it usable (slowly) on CPU
+    # TPU inference fast path for unpackable D; interpret mode keeps it
+    # usable (slowly) on CPU. The packed backend outranks it for D < 128.
     score=lambda shape, device: 20.0 if device == "tpu" else 1.0,
-    doc="fused TPU encode/decode kernels with autotuned tiles",
+    doc="fused TPU encode/decode kernels with autotuned tiles (forward-only)",
 ))

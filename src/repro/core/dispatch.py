@@ -66,6 +66,8 @@ class Capabilities:
     sharded: bool = False          # needs a Mesh + axis names (shard_map)
     device_kinds: tuple = ("cpu", "gpu", "tpu")
     dtypes: Optional[tuple] = None  # dtype names; None = any floating dtype
+    grads: bool = True             # jax.grad works through run (a forward-only
+                                   # Pallas kernel without a VJP sets False)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -81,7 +83,8 @@ class MixerPlan:
     params: Mapping[str, Any] = dataclasses.field(default_factory=dict)
 
     def describe(self) -> str:
-        keys = ("block_m", "block_n", "tile", "chunk_size", "seq_axes", "lat_axes", "mode")
+        keys = ("block_m", "block_n", "pack", "tile", "chunk_size", "seq_axes",
+                "lat_axes", "mode")
         shown = {k: self.params[k] for k in keys if k in self.params}
         # ';'/'+'-separated so the string stays comma-free inside the 3-field
         # ``name,us_per_call,derived`` benchmark CSV contract
@@ -165,7 +168,7 @@ def _dtype_ok(caps: Capabilities, dtype) -> bool:
 
 
 def eligible(backend: MixerBackend, *, causal: bool, dtype, device: Optional[str] = None,
-             mesh=None) -> bool:
+             mesh=None, grad: bool = False) -> bool:
     device = device or device_kind()
     caps = backend.caps
     if causal and not caps.causal:
@@ -177,6 +180,8 @@ def eligible(backend: MixerBackend, *, causal: bool, dtype, device: Optional[str
     if not caps.sharded and mesh is not None:
         return False
     if device not in caps.device_kinds:
+        return False
+    if grad and not caps.grads:
         return False
     return _dtype_ok(caps, dtype)
 
@@ -198,7 +203,7 @@ def _legacy_tuple_plan(impl: tuple) -> MixerPlan:
     raise ValueError(f"unknown legacy impl tuple {impl!r}")
 
 
-def _check_contract(backend: MixerBackend, causal: bool) -> None:
+def _check_contract(backend: MixerBackend, causal: bool, grad: bool = False) -> None:
     """Explicitly-named backends/plans still must satisfy the correctness
     contract: a bidirectional mixer on the causal path would silently leak
     future tokens, so that is an error, never a fallback."""
@@ -211,36 +216,48 @@ def _check_contract(backend: MixerBackend, causal: bool) -> None:
         raise ValueError(
             f"backend {backend.name!r} only implements the causal contract and "
             "cannot serve the bidirectional (set-mixer) path")
+    if grad and not backend.caps.grads:
+        raise ValueError(
+            f"backend {backend.name!r} is forward-only (no VJP) and cannot "
+            "serve a differentiated path; grad-capable backends: "
+            f"{[b.name for b in _REGISTRY.values() if b.caps.grads]}")
 
 
-def resolve(impl, *, shape: MixerShape, dtype, mesh=None, causal: bool = False):
-    """Normalize any ``impl`` value to a ``(MixerBackend, MixerPlan)`` pair."""
+def resolve(impl, *, shape: MixerShape, dtype, mesh=None, causal: bool = False,
+            grad: bool = False):
+    """Normalize any ``impl`` value to a ``(MixerBackend, MixerPlan)`` pair.
+
+    ``grad=True`` marks a differentiated call site (training): ``"auto"``
+    only considers grad-capable backends, and naming a forward-only backend
+    is a hard error rather than a trace-time autodiff failure."""
     _ensure_loaded()
     if impl is None:
         impl = "auto"
     if isinstance(impl, MixerPlan):
         backend = get_backend(impl.backend)
-        _check_contract(backend, causal)
+        _check_contract(backend, causal, grad)
         return backend, impl
     if isinstance(impl, tuple):
         plan = _legacy_tuple_plan(impl)
         backend = get_backend(plan.backend)
-        _check_contract(backend, causal)
+        _check_contract(backend, causal, grad)
         return backend, plan
     if not isinstance(impl, str):
         raise TypeError(f"impl must be str | tuple | MixerPlan, got {type(impl)!r}")
     if impl == "auto":
         dev = device_kind()
         cands = [b for b in _REGISTRY.values()
-                 if eligible(b, causal=causal, dtype=dtype, device=dev, mesh=mesh)]
+                 if eligible(b, causal=causal, dtype=dtype, device=dev, mesh=mesh,
+                             grad=grad)]
         if not cands:
             raise ValueError(
                 f"no eligible mixer backend (causal={causal}, device={dev}, "
-                f"dtype={jnp.dtype(dtype).name}, mesh={mesh is not None})")
+                f"dtype={jnp.dtype(dtype).name}, mesh={mesh is not None}, "
+                f"grad={grad})")
         backend = max(cands, key=lambda b: b.score(shape, dev))
         return backend, backend.plan(shape, mesh, dtype)
     backend = get_backend(impl)
-    _check_contract(backend, causal)
+    _check_contract(backend, causal, grad)
     return backend, backend.plan(shape, mesh, dtype)
 
 
@@ -273,18 +290,19 @@ def sharded_plan(mesh, seq_axes: Sequence[str] | str,
 # ---------------------------------------------------------------------------
 
 
-def run_mixer(impl, q: jax.Array, k: jax.Array, v: jax.Array, *, mesh=None) -> jax.Array:
+def run_mixer(impl, q: jax.Array, k: jax.Array, v: jax.Array, *, mesh=None,
+              grad: bool = False) -> jax.Array:
     """Bidirectional (set-mixer) FLARE: q [H,M,D], k/v [B,H,N,D] -> [B,H,N,D]."""
     backend, plan = resolve(impl, shape=MixerShape.from_qkv(q, k), dtype=k.dtype,
-                            mesh=mesh, causal=False)
+                            mesh=mesh, causal=False, grad=grad)
     return backend.run(plan, q, k, v)
 
 
 def run_causal_mixer(impl, q: jax.Array, k: jax.Array, v: jax.Array, *,
-                     chunk_size: Optional[int] = None) -> jax.Array:
+                     chunk_size: Optional[int] = None, grad: bool = False) -> jax.Array:
     """Causal (LM-mixer) FLARE: token t sees only the prefix <= t."""
     backend, plan = resolve(impl, shape=MixerShape.from_qkv(q, k), dtype=k.dtype,
-                            causal=True)
+                            causal=True, grad=grad)
     if chunk_size is not None:
         plan = MixerPlan(plan.backend, {**plan.params, "chunk_size": chunk_size})
     return backend.run(plan, q, k, v)

@@ -74,6 +74,7 @@ def flare_mixer(
     v: jax.Array,
     *,
     impl="auto",
+    grad: bool = False,
 ) -> jax.Array:
     """Multi-head FLARE token mixing.
 
@@ -83,13 +84,16 @@ def flare_mixer(
       v: [B, H, N, D] values from the deep ResMLP projection.
       impl: "auto", a registered backend name, a MixerPlan, or a legacy
         ``("sp", ...)`` / ``("sp2d", ...)`` tuple — see repro.core.dispatch.
+      grad: mark this call site as differentiated (training): "auto" then
+        only considers grad-capable backends, and naming a forward-only
+        backend errors at resolve time instead of failing inside autodiff.
 
     Returns:
       y: [B, H, N, D].
     """
     from repro.core.dispatch import run_mixer
 
-    return run_mixer(impl, q, k, v)
+    return run_mixer(impl, q, k, v, grad=grad)
 
 
 def _flare_mixer_materialized(q: jax.Array, k: jax.Array, v: jax.Array) -> jax.Array:
@@ -155,12 +159,12 @@ def _merge_heads(x: jax.Array) -> jax.Array:
     return x.transpose(0, 2, 1, 3).reshape(b, n, h * d)
 
 
-def flare_layer(params: dict, x: jax.Array, *, impl="auto") -> jax.Array:
+def flare_layer(params: dict, x: jax.Array, *, impl="auto", grad: bool = False) -> jax.Array:
     """x: [B, N, C] -> [B, N, C]."""
     num_heads = params["q_latent"].shape[0]
     k = _split_heads(resmlp(params["k_proj"], x), num_heads)
     v = _split_heads(resmlp(params["v_proj"], x), num_heads)
-    y = flare_mixer(params["q_latent"].astype(x.dtype), k, v, impl=impl)
+    y = flare_mixer(params["q_latent"].astype(x.dtype), k, v, impl=impl, grad=grad)
     return dense(params["out_proj"], _merge_heads(y))
 
 
@@ -191,7 +195,8 @@ def init_flare_block(
     }
 
 
-def flare_block(params: dict, x: jax.Array, *, impl="auto") -> jax.Array:
-    x = x + flare_layer(params["mixer"], layernorm(params["ln1"], x), impl=impl)
+def flare_block(params: dict, x: jax.Array, *, impl="auto", grad: bool = False) -> jax.Array:
+    x = x + flare_layer(params["mixer"], layernorm(params["ln1"], x), impl=impl,
+                        grad=grad)
     x = x + resmlp(params["mlp"], layernorm(params["ln2"], x))
     return x

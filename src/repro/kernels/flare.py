@@ -18,11 +18,16 @@ Block shapes: the N/M tile sizes default to 512/128 (MXU-aligned multiples
 of 128 in the contracting layout); D is expected lane-aligned — ops.py pads
 D to a multiple of 128 (zero-padding is exact for both dot products; padded
 output columns are sliced off). For the paper's small-D/many-head regime
-(D in {4, 8}) this padding costs MXU efficiency; the packed-heads layout is
-tracked as a further optimization in EXPERIMENTS.md §Perf.
+(D in {4, 8}) this padding costs MXU efficiency; the packed-heads layout
+that recovers it is implemented by ``kernels/flare_packed.py`` (the
+``packed`` backend — DESIGN.md §12), which also fuses encode+decode into a
+single launch and carries a custom VJP. The kernels here remain the
+unpacked two-launch baseline.
 
 Grid layout (encode): (G, M_blocks, N_blocks), N innermost so the scratch
-accumulators live across the N sweep. G = B * H flattened by ops.py.
+accumulators live across the N sweep. G = B * H flattened by ops.py; the
+latent queries stay [H, M, D] in HBM and are indexed per head via the
+BlockSpec index_map (g % H) rather than broadcast across the batch.
 """
 from __future__ import annotations
 
@@ -82,7 +87,7 @@ def _encode_kernel(q_ref, k_ref, v_ref, z_ref, max_scr, den_scr, num_scr, *,
 
 
 def flare_encode_pallas(
-    q: jax.Array,  # [G, M, D]
+    q: jax.Array,  # [Gq, M, D] — Gq == G, or H with G = B*H (shared latents)
     k: jax.Array,  # [G, N, D]
     v: jax.Array,  # [G, N, D]
     *,
@@ -92,9 +97,16 @@ def flare_encode_pallas(
     interpret: bool = False,
 ) -> jax.Array:
     """``n_valid``: number of real tokens when N carries tile padding —
-    ops.py pads N to the block_n boundary and the kernel masks the tail."""
-    g, m, d = q.shape
-    n = k.shape[1]
+    ops.py pads N to the block_n boundary and the kernel masks the tail.
+
+    The latent queries may carry only ``Gq = H`` groups while k/v carry
+    ``G = B * H`` (batch-major flattening): the BlockSpec ``index_map``
+    re-reads block ``g % Gq`` for every batch element, so the latents are
+    never broadcast to [B, H, M, D] in HBM."""
+    gq, m, d = q.shape
+    g, n = k.shape[0], k.shape[1]
+    if g % gq:
+        raise ValueError(f"G={g} must be a multiple of the q groups Gq={gq}")
     block_m = min(block_m, m)
     block_n = min(block_n, n)
     if m % block_m or n % block_n:
@@ -109,7 +121,7 @@ def flare_encode_pallas(
         kernel,
         grid=grid,
         in_specs=[
-            pl.BlockSpec((1, block_m, d), lambda g_, m_, n_: (g_, m_, 0)),
+            pl.BlockSpec((1, block_m, d), lambda g_, m_, n_: (g_ % gq, m_, 0)),
             pl.BlockSpec((1, block_n, d), lambda g_, m_, n_: (g_, n_, 0)),
             pl.BlockSpec((1, block_n, d), lambda g_, m_, n_: (g_, n_, 0)),
         ],
@@ -160,7 +172,7 @@ def _decode_kernel(k_ref, q_ref, z_ref, y_ref, *, m_valid):
 
 
 def flare_decode_pallas(
-    q: jax.Array,  # [G, M, D]
+    q: jax.Array,  # [Gq, M, D] — Gq == G, or H with G = B*H (shared latents)
     k: jax.Array,  # [G, N, D]
     z: jax.Array,  # [G, M, D]
     *,
@@ -170,9 +182,13 @@ def flare_decode_pallas(
 ) -> jax.Array:
     """``m_valid``: number of real latents when M carries tile padding (the
     decode softmax must not see padded latent rows). Padded *tokens* need no
-    mask here: their output rows are garbage and get sliced by the caller."""
-    g, m, d = q.shape
-    n = k.shape[1]
+    mask here: their output rows are garbage and get sliced by the caller.
+    As in :func:`flare_encode_pallas`, q may carry H groups against
+    G = B*H k/z groups — indexed per head, never broadcast in HBM."""
+    gq, m, d = q.shape
+    g, n = k.shape[0], k.shape[1]
+    if g % gq:
+        raise ValueError(f"G={g} must be a multiple of the q groups Gq={gq}")
     block_n = min(block_n, n)
     if n % block_n:
         raise ValueError(f"N={n} must tile by {block_n}")
@@ -184,7 +200,7 @@ def flare_decode_pallas(
         grid=grid,
         in_specs=[
             pl.BlockSpec((1, block_n, d), lambda g_, n_: (g_, n_, 0)),
-            pl.BlockSpec((1, m, d), lambda g_, n_: (g_, 0, 0)),
+            pl.BlockSpec((1, m, d), lambda g_, n_: (g_ % gq, 0, 0)),
             pl.BlockSpec((1, m, d), lambda g_, n_: (g_, 0, 0)),
         ],
         out_specs=pl.BlockSpec((1, block_n, d), lambda g_, n_: (g_, n_, 0)),

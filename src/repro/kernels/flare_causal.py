@@ -85,7 +85,7 @@ def _causal_chunk_kernel(q_ref, k_ref, v_ref, y_ref, m_scr, num_scr, den_scr, *,
 
 
 def flare_causal_chunk_pallas(
-    q: jax.Array,  # [G, M, D]
+    q: jax.Array,  # [Gq, M, D] — Gq == G, or H with G = B*H (shared latents)
     k: jax.Array,  # [G, T, D]
     v: jax.Array,  # [G, T, D]
     *,
@@ -96,9 +96,13 @@ def flare_causal_chunk_pallas(
 
     T must be a multiple of ``tile`` — ops.py pads the sequence to the tile
     boundary (exact under causality: padded trailing tokens can only affect
-    positions after themselves, which the caller slices away)."""
-    g, m, d = q.shape
-    t = k.shape[1]
+    positions after themselves, which the caller slices away). The latent
+    queries may carry only H groups against G = B*H k/v groups; the
+    index_map reads block ``g % Gq`` instead of an HBM broadcast."""
+    gq, m, d = q.shape
+    g, t = k.shape[0], k.shape[1]
+    if g % gq:
+        raise ValueError(f"G={g} must be a multiple of the q groups Gq={gq}")
     tile = min(tile, t)
     if t % tile:
         raise ValueError(f"T={t} must tile by {tile}")
@@ -108,7 +112,7 @@ def flare_causal_chunk_pallas(
         kernel,
         grid=grid,
         in_specs=[
-            pl.BlockSpec((1, m, d), lambda g_, t_: (g_, 0, 0)),
+            pl.BlockSpec((1, m, d), lambda g_, t_: (g_ % gq, 0, 0)),
             pl.BlockSpec((1, tile, d), lambda g_, t_: (g_, t_, 0)),
             pl.BlockSpec((1, tile, d), lambda g_, t_: (g_, t_, 0)),
         ],

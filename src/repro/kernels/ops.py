@@ -29,6 +29,8 @@ import jax.numpy as jnp
 from repro.kernels.attention import flash_attention_pallas
 from repro.kernels.flare import flare_decode_pallas, flare_encode_pallas
 from repro.kernels.flare_causal import flare_causal_chunk_pallas
+from repro.kernels.flare_packed import flare_mixer_packed  # noqa: F401  (re-export:
+# the packed-head single-launch mixer is the third dispatch wrapper here)
 
 LANE = 128
 
@@ -69,21 +71,24 @@ def flare_mixer_fused(
     block_n: int = 512,
     interpret: Optional[bool] = None,
 ) -> jax.Array:
-    """Fused FLARE mixer via the encode/decode Pallas kernels."""
+    """Fused FLARE mixer via the encode/decode Pallas kernels.
+
+    The latent queries stay [H, M, D] in HBM: both kernels index the q block
+    by ``g % H`` in their BlockSpec index_map, so no [B, H, M, D] broadcast
+    is ever materialized."""
     if interpret is None:
         interpret = not _on_tpu()
     b, h, n, d = k.shape
     m = q.shape[1]
-    qq = jnp.broadcast_to(q[None], (b, h, m, d))
     # clip tiles to the problem, then pad the problem to the tile boundary
     bm = min(block_m, m)
     bn = min(block_n, n)
-    qg = _pad_to(_pad_lanes(_flatten_groups(qq)), 1, bm)
+    qh = _pad_to(_pad_lanes(q.astype(k.dtype)), 1, bm)   # [H, Mp, Dp]
     kg = _pad_to(_pad_lanes(_flatten_groups(k)), 1, bn)
     vg = _pad_to(_pad_lanes(_flatten_groups(v)), 1, bn)
-    z = flare_encode_pallas(qg, kg, vg, block_m=bm, block_n=bn, n_valid=n,
+    z = flare_encode_pallas(qh, kg, vg, block_m=bm, block_n=bn, n_valid=n,
                             interpret=interpret)
-    y = flare_decode_pallas(qg, kg, z, block_n=bn, m_valid=m, interpret=interpret)
+    y = flare_decode_pallas(qh, kg, z, block_n=bn, m_valid=m, interpret=interpret)
     return y[:, :n, :d].reshape(b, h, n, d)
 
 
@@ -127,12 +132,10 @@ def flare_causal_fused(
     if interpret is None:
         interpret = not _on_tpu()
     b, h, n, d = k.shape
-    m = q.shape[1]
-    qq = jnp.broadcast_to(q[None], (b, h, m, d))
     tile = min(tile, n)
-    qg = _pad_lanes(_flatten_groups(qq))
+    qh = _pad_lanes(q.astype(k.dtype))   # [H, M, Dp] — indexed per head in-kernel
     # causal => padded trailing tokens cannot leak into real positions
     kg = _pad_to(_pad_lanes(_flatten_groups(k)), 1, tile)
     vg = _pad_to(_pad_lanes(_flatten_groups(v)), 1, tile)
-    y = flare_causal_chunk_pallas(qg, kg, vg, tile=tile, interpret=interpret)
+    y = flare_causal_chunk_pallas(qh, kg, vg, tile=tile, interpret=interpret)
     return y[:, :n, :d].reshape(b, h, n, d)

@@ -66,14 +66,14 @@ def init_surrogate(key, mixer: str, *, in_dim: int, out_dim: int, dim: int,
 
 
 def surrogate_forward(params: dict, x: jax.Array, *, mixer: str = "flare",
-                      num_heads: int = 8, impl="auto") -> jax.Array:
+                      num_heads: int = 8, impl="auto", grad: bool = False) -> jax.Array:
     """x: [B, N, F_in] point features -> [B, N, F_out]."""
     h = resmlp(params["in_proj"], x)
     if mixer == "perceiver":
         h = perceiver_forward(params["perceiver"], h, num_heads)
     else:
         apply = {
-            "flare": lambda p, y: flare_block(p, y, impl=impl),
+            "flare": lambda p, y: flare_block(p, y, impl=impl, grad=grad),
             "vanilla": lambda p, y: vanilla_block(p, y, num_heads),
             "linformer": lambda p, y: linformer_block(p, y, num_heads),
             "transolver": lambda p, y: transolver_block(p, y, num_heads),
@@ -93,7 +93,9 @@ def relative_l2(pred: jax.Array, target: jax.Array) -> jax.Array:
 
 def surrogate_loss(params, batch, *, mixer: str = "flare", num_heads: int = 8,
                    impl="auto"):
-    pred = surrogate_forward(params, batch["x"], mixer=mixer, num_heads=num_heads, impl=impl)
+    # the loss is the differentiated entry point: require a grad-capable mixer
+    pred = surrogate_forward(params, batch["x"], mixer=mixer, num_heads=num_heads,
+                             impl=impl, grad=True)
     return relative_l2(pred, batch["y"])
 
 

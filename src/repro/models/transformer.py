@@ -195,9 +195,10 @@ def init_dense_ffn_layer(key, cfg: ModelConfig) -> dict:
     return p
 
 
-def _flare_stream_mix(layer, x, cfg: ModelConfig, *, impl="auto"):
+def _flare_stream_mix(layer, x, cfg: ModelConfig, *, impl="auto", grad: bool = False):
     """Causal FLARE as an LM mixer (chunked training path). ``impl`` resolves
-    through the causal side of the mixer-backend registry."""
+    through the causal side of the mixer-backend registry; ``grad`` marks a
+    differentiated call site so forward-only backends are never resolved."""
     from repro.core.dispatch import run_causal_mixer
     from repro.core.flare import _merge_heads, _split_heads  # layout helpers
 
@@ -205,12 +206,13 @@ def _flare_stream_mix(layer, x, cfg: ModelConfig, *, impl="auto"):
     k = _split_heads(resmlp(layer["k_proj"], x), h)
     v = _split_heads(resmlp(layer["v_proj"], x), h)
     y = run_causal_mixer(impl, layer["q_latent"].astype(x.dtype), k, v,
-                         chunk_size=cfg.attn.flare_chunk)
+                         chunk_size=cfg.attn.flare_chunk, grad=grad)
     return dense(layer["out_proj"], _merge_heads(y))
 
 
 def decoder_layer_forward(layer, x, cfg: ModelConfig, *, positions, moe_cfg=None,
-                          dense_ffn: bool = False, impl: str = "auto"):
+                          dense_ffn: bool = False, impl: str = "auto",
+                          grad: bool = False):
     """One pre-norm block. Returns (x, aux_loss)."""
     aux = jnp.zeros((), jnp.float32)
     xin = _norm_apply(cfg, layer["norm1"], x)
@@ -219,7 +221,7 @@ def decoder_layer_forward(layer, x, cfg: ModelConfig, *, positions, moe_cfg=None
     elif cfg.attn.kind == "mla":
         a = mla_forward(layer["attn"], xin, cfg.attn, positions=positions, causal=True, impl=impl)
     else:  # flare_stream
-        a = _flare_stream_mix(layer["attn"], xin, cfg, impl=impl)
+        a = _flare_stream_mix(layer["attn"], xin, cfg, impl=impl, grad=grad)
     x = x + a
     xin = _norm_apply(cfg, layer["norm2"], x)
     if cfg.moe is not None and not dense_ffn:
@@ -264,13 +266,15 @@ def _embed_inputs(params, batch, cfg: ModelConfig):
     return x, positions
 
 
-def lm_forward(params, batch, cfg: ModelConfig, *, impl: str = "auto"):
+def lm_forward(params, batch, cfg: ModelConfig, *, impl: str = "auto",
+               grad: bool = False):
     """Full-sequence forward -> (logits fp32 [B,S,V], aux_loss)."""
     x, positions = _embed_inputs(params, batch, cfg)
 
     def body(carry, layer):
         x, aux = carry
-        x, a = decoder_layer_forward(layer, x, cfg, positions=positions, impl=impl)
+        x, a = decoder_layer_forward(layer, x, cfg, positions=positions, impl=impl,
+                                     grad=grad)
         return (x, aux + a), None
 
     aux0 = jnp.zeros((), jnp.float32)
@@ -278,7 +282,7 @@ def lm_forward(params, batch, cfg: ModelConfig, *, impl: str = "auto"):
         def dense_body(carry, layer):
             x, aux = carry
             x, a = decoder_layer_forward(layer, x, cfg, positions=positions,
-                                         dense_ffn=True, impl=impl)
+                                         dense_ffn=True, impl=impl, grad=grad)
             return (x, aux + a), None
 
         (x, aux0), _ = jax.lax.scan(_remat(dense_body, cfg.remat), (x, aux0), params["dense_layers"])
@@ -294,7 +298,8 @@ def lm_forward(params, batch, cfg: ModelConfig, *, impl: str = "auto"):
 
 def lm_loss(params, batch, cfg: ModelConfig, *, impl: str = "auto"):
     """Next-token cross-entropy (labels = batch['labels'])."""
-    logits, aux = lm_forward(params, batch, cfg, impl=impl)
+    # the loss is the differentiated entry point: require a grad-capable mixer
+    logits, aux = lm_forward(params, batch, cfg, impl=impl, grad=True)
     labels = batch["labels"]
     logz = jax.scipy.special.logsumexp(logits, axis=-1)
     gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
@@ -499,7 +504,7 @@ def init_encdec(key, cfg: ModelConfig) -> dict:
 
 
 def encode(params, src_embeds, cfg: ModelConfig, *, impl: str = "auto",
-           flare_impl="auto"):
+           flare_impl="auto", grad: bool = False):
     """src_embeds: [B, S, C] from the (stubbed) modality frontend.
 
     ``impl`` drives the dense-attention path; ``flare_impl`` is the mixer
@@ -512,7 +517,7 @@ def encode(params, src_embeds, cfg: ModelConfig, *, impl: str = "auto",
     def body(x, layer):
         xin = _norm_apply(cfg, layer["norm1"], x)
         if cfg.encoder_mixer == "flare":
-            a = flare_layer(layer["attn"], xin, impl=flare_impl)
+            a = flare_layer(layer["attn"], xin, impl=flare_impl, grad=grad)
         else:
             a = gqa_forward(layer["attn"], xin, cfg.attn, positions=positions,
                             causal=False, impl=impl)
@@ -556,9 +561,10 @@ def _precompute_cross_kv(params, memory, cfg: ModelConfig):
     return kx, vx  # [L, B, Hkv, S, D] each
 
 
-def encdec_forward(params, batch, cfg: ModelConfig, *, impl: str = "auto"):
+def encdec_forward(params, batch, cfg: ModelConfig, *, impl: str = "auto",
+                   grad: bool = False):
     """Teacher-forced training forward -> (logits, aux=0)."""
-    memory = encode(params, batch["embeds"], cfg, impl=impl)
+    memory = encode(params, batch["embeds"], cfg, impl=impl, grad=grad)
     cd = jnp.dtype(cfg.compute_dtype)
     y = params["embed"]["table"].astype(cd)[batch["tokens"]]
     positions = text_positions(y.shape[0], y.shape[1])
@@ -611,7 +617,8 @@ def _cross_attend(p, q_in, memory, cfg: ModelConfig, q_pos, kv_pos, impl):
 
 
 def encdec_loss(params, batch, cfg: ModelConfig, *, impl: str = "auto"):
-    logits, _ = encdec_forward(params, batch, cfg, impl=impl)
+    # the loss is the differentiated entry point: require a grad-capable mixer
+    logits, _ = encdec_forward(params, batch, cfg, impl=impl, grad=True)
     labels = batch["labels"]
     logz = jax.scipy.special.logsumexp(logits, axis=-1)
     gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
