@@ -27,7 +27,7 @@ def _mk(n):
 
 
 def run():
-    flare = jax.jit(lambda q, k, v: flare_mixer(q, k, v, impl="auto"))
+    flare = jax.jit(lambda q, k, v: flare_mixer(q, k, v))  # ambient policy: auto
     vanilla = jax.jit(lambda k, v: sdpa(k, k, v, scale=0.25))
 
     t_f, t_v = [], []
@@ -40,7 +40,7 @@ def run():
         flops_f = 4 * n * M * D * H  # two SDPA calls, O(N M)
         flops_v = 4 * n * n * D * H  # O(N^2)
         emit(f"fig2/flare/N{n}", us_f, f"flops={flops_f}",
-             backend=mixer_backend_info("auto", b=1, h=H, n=n, m=M, d=D))
+             backend=mixer_backend_info(b=1, h=H, n=n, m=M, d=D))
         emit(f"fig2/vanilla/N{n}", us_v, f"flops={flops_v}")
 
     ln = np.log(np.asarray(NS, float))

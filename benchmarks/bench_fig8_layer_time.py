@@ -26,16 +26,18 @@ BACKEND_N = 512
 
 def _backend_rows():
     from repro.core.flare import flare_block, init_flare_block
+    from repro.core.policy import MixerPolicy
 
     for d, c in BACKEND_CONFIGS.items():
         x = jax.random.normal(jax.random.fold_in(KEY, 100 + d),
                               (1, BACKEND_N, c["dim"]))
         p = init_flare_block(KEY, c["dim"], c["heads"], LATENTS)
-        for impl in BACKEND_IMPLS:
-            fn = jax.jit(functools.partial(flare_block, impl=impl))
+        for name in BACKEND_IMPLS:
+            pol = MixerPolicy(backends=(name,))
+            fn = jax.jit(functools.partial(flare_block, policy=pol))
             us = time_fn(fn, p, x)
-            emit(f"fig8/backend/{impl}/D{d}/N{BACKEND_N}", us, "",
-                 backend=mixer_backend_info(impl, b=1, h=c["heads"], n=BACKEND_N,
+            emit(f"fig8/backend/{name}/D{d}/N{BACKEND_N}", us, "",
+                 backend=mixer_backend_info(pol, b=1, h=c["heads"], n=BACKEND_N,
                                             m=LATENTS, d=d))
 
 
@@ -58,7 +60,7 @@ def run():
         us = time_fn(jax.jit(lambda pp, xx: flare_block(pp, xx)), p, x)
         out[("flare", n)] = us
         emit(f"fig8/flare/N{n}", us, "",
-             backend=mixer_backend_info("auto", b=1, h=HEADS, n=n, m=LATENTS,
+             backend=mixer_backend_info(b=1, h=HEADS, n=n, m=LATENTS,
                                         d=DIM // HEADS))
     grow = lambda m: out[(m, NS[-1])] / out[(m, NS[0])]
     emit("fig8/growth_ratio", 0.0,

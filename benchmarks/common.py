@@ -66,14 +66,16 @@ def emit(name: str, us_per_call: float, derived: str, *, backend: str | None = N
     print(f"{name},{us_per_call:.1f},{derived}")
 
 
-def mixer_backend_info(impl="auto", *, b: int, h: int, n: int, m: int, d: int,
+def mixer_backend_info(policy=None, *, b: int, h: int, n: int, m: int, d: int,
                        dtype=jnp.float32, causal: bool = False) -> str:
-    """Resolve (without running) which backend/plan ``impl`` maps to for this
-    shape — the string benchmarks attach to their emitted rows."""
-    from repro.core.dispatch import MixerShape, describe
+    """Resolve (without running) which backend/plan this policy maps to for
+    this shape — the string benchmarks attach to their emitted rows.
+    ``policy``: MixerPolicy | MixerPlan | None (ambient policy stack)."""
+    from repro.core.dispatch import MixerShape
+    from repro.core.policy import resolve_policy
 
     shape = MixerShape(batch=b, heads=h, tokens=n, latents=m, head_dim=d)
-    return describe(impl, shape=shape, dtype=dtype, causal=causal)
+    return resolve_policy(policy, shape, dtype, causal=causal).describe()
 
 
 def write_results_json(path: str) -> None:

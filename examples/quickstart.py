@@ -7,7 +7,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.dispatch import MixerShape
 from repro.core.flare import _split_heads, flare_mixer
+from repro.core.policy import MixerPolicy, resolve_policy
 from repro.core.spectral import effective_rank, spectrum_by_head
 from repro.data.pde_data import darcy_batch
 from repro.models import pde
@@ -16,10 +18,23 @@ from repro.optim.adamw import adamw_update, init_adamw
 
 KEY = jax.random.PRNGKey(0)
 HEADS, LATENTS, BLOCKS, DIM = 4, 16, 2, 32
+N_POINTS = 16 * 16  # grid=16 Darcy point clouds
 
 
 def main():
     print("== FLARE quickstart ==")
+    # Plan-first dispatch: declare WHAT we need (a differentiable mixer,
+    # best-available backend) as a MixerPolicy, resolve it ONCE to a plan,
+    # and hand the plan to every training/eval call below.
+    policy = MixerPolicy(backends=("auto",), requires_grad=True)
+    plan = resolve_policy(
+        policy, MixerShape(batch=4, heads=HEADS, tokens=N_POINTS,
+                           latents=LATENTS, head_dim=DIM // HEADS),
+        jnp.float32)
+    print(f"mixer policy {policy.describe()}")
+    print(f"  resolved once to plan: {plan.describe()}")
+    assert plan.describe(), "resolution must produce a printable plan"
+
     print("generating Darcy data (coefficient field -> CG Poisson solve)...")
     train = [darcy_batch(0, i, 4, grid=16, cg_iters=120) for i in range(3)]
     test = darcy_batch(0, 50, 4, grid=16, cg_iters=120)
@@ -27,7 +42,8 @@ def main():
     params = pde.init_surrogate(KEY, "flare", in_dim=3, out_dim=1, dim=DIM,
                                 num_blocks=BLOCKS, num_heads=HEADS,
                                 num_latents=LATENTS)
-    loss_fn = lambda p, b: pde.surrogate_loss(p, b, mixer="flare", num_heads=HEADS)
+    loss_fn = lambda p, b: pde.surrogate_loss(p, b, mixer="flare",
+                                              num_heads=HEADS, policy=plan)
     opt = init_adamw(params)
 
     @jax.jit

@@ -27,7 +27,17 @@ def main():
                         flare_latents=8, flare_chunk=8),
         remat="none",
     )
-    model = get_model(cfg)
+    # Plan-first dispatch: the policy (preference order + grad requirement)
+    # is resolved ONCE inside get_model; training and serving below run the
+    # pre-resolved plans — no per-step backend resolution.
+    from repro.core.policy import MixerPolicy
+
+    policy = MixerPolicy(backends=("auto",))
+    model = get_model(cfg, policy=policy, seq_len_hint=128)
+    print(f"mixer plans (resolved once at build): "
+          f"train={model.plans['train'].describe()} "
+          f"infer={model.plans['infer'].describe()}")
+    assert model.plans["train"].describe() and model.plans["infer"].describe()
     params = model.init(jax.random.PRNGKey(0))
 
     print("quick-training on the Markov stream (so decode outputs structure)...")
@@ -53,6 +63,8 @@ def main():
     s = engine.stats
     print(f"\n{s['requests']} requests, {s['tokens_generated']} tokens in {dt:.2f}s "
           f"(prefill {s['prefill_s']:.2f}s, decode {s['decode_s']:.2f}s)")
+    print(f"serving stats report the build-time plan: mixer_backend={s['mixer_backend']}")
+    assert s["mixer_backend"] == model.plans["infer"].describe()
     print("note: the FLARE decode state is O(M x D) per layer — constant in "
           "context length (the long_500k path).")
 

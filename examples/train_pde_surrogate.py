@@ -38,7 +38,17 @@ def main():
         d_model=args.dim, d_ff=args.dim, vocab=0, attn=AttnConfig(kind="none"),
         flare_heads=args.heads, flare_latents=args.latents, remat="none",
     )
-    model = get_model(cfg)
+    # Plan-first dispatch: the policy resolves ONCE inside get_model (per
+    # path: the loss plan is forced grad-capable); the Trainer's jitted step
+    # runs the pre-resolved plan every step.
+    from repro.core.policy import MixerPolicy
+
+    policy = MixerPolicy(backends=("auto",))
+    model = get_model(cfg, policy=policy, seq_len_hint=args.grid * args.grid)
+    print(f"mixer plans (resolved once at build): "
+          f"train={model.plans['train'].describe()} "
+          f"infer={model.plans['infer'].describe()}")
+    assert model.plans["train"].describe() and model.plans["infer"].describe()
     tcfg = TrainConfig(steps=args.steps, learning_rate=2e-3, warmup_frac=0.1,
                        checkpoint_every=50, checkpoint_dir=args.ckpt,
                        log_every=20)

@@ -10,6 +10,13 @@ cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 export JAX_PLATFORMS="${JAX_PLATFORMS:-cpu}"
 
+echo "== policy-resolution smoke (backend x policy eligibility) =="
+# every registered backend against the four canonical policies; fails if any
+# canonical policy (bidi/causal x infer/train) has no eligible backend.
+# (-W: runpy warns that repro.core already imported dispatch — benign; the
+# __main__ stub delegates to the canonical module instance)
+python -W "ignore::RuntimeWarning" -m repro.core.dispatch --list
+
 echo "== fast tier (pytest -m 'not slow') =="
 python -m pytest -x -q -m "not slow"
 

@@ -11,8 +11,11 @@ device generation — none of which a hardcoded default can know. This module:
   * times them with a caller-supplied runner (so this module stays free of
     eager kernel imports; the pack heuristic is lazily imported), and
   * memoizes the winner in an on-disk JSON cache keyed by
-    ``(kind, device, dtype, N, M, D, H)`` so serving and benchmarks never pay
-    the search twice — and never hardcode launch parameters again.
+    ``(kind, device, dtype, N, M, D, H, jax+jaxlib version)`` so serving and
+    benchmarks never pay the search twice — and never hardcode launch
+    parameters again. The runtime version is part of the key because a tile
+    winner timed under one compiler is not evidence about another; legacy
+    un-versioned entries are still read as a fallback hit.
 
 Timing only runs when explicitly requested (``autotune=True`` or the
 ``REPRO_AUTOTUNE=1`` env var): the default lookup is cache-hit-or-heuristic,
@@ -33,6 +36,7 @@ shape heuristic.
 """
 from __future__ import annotations
 
+import contextlib
 import json
 import os
 import time
@@ -41,6 +45,7 @@ from typing import Callable, Iterable, Optional
 from repro.core.dispatch import MixerShape
 
 _MEM_CACHE: dict = {}  # path -> {key: entry} mirror of the JSON file
+_FORCE: list = []  # policy-scoped overrides of the REPRO_AUTOTUNE env var
 
 
 def cache_path() -> str:
@@ -51,16 +56,54 @@ def cache_path() -> str:
 
 
 def autotune_enabled() -> bool:
+    if _FORCE:
+        return _FORCE[-1]
     return os.environ.get("REPRO_AUTOTUNE", "0") not in ("", "0", "false")
 
 
-def cache_key(shape: MixerShape, dtype, device: str, kind: str = "tiles") -> str:
+@contextlib.contextmanager
+def forced(enabled: bool):
+    """Scoped override of the autotune opt-in — how ``MixerPolicy.autotune``
+    reaches the plan builders without threading kwargs through the registry."""
+    _FORCE.append(bool(enabled))
+    try:
+        yield
+    finally:
+        _FORCE.pop()
+
+
+def runtime_version() -> str:
+    """jax+jaxlib version tag baked into cache keys: tile winners timed under
+    one runtime (compiler) are not evidence about another."""
+    import jax
+
+    try:
+        import jaxlib
+
+        jl = getattr(jaxlib, "__version__", "?")
+    except ImportError:  # pragma: no cover
+        jl = "?"
+    return f"jax{jax.__version__}+jaxlib{jl}"
+
+
+def _base_key(shape: MixerShape, dtype, device: str, kind: str) -> str:
     import jax.numpy as jnp
 
     base = (f"{device}|{jnp.dtype(dtype).name}|N{shape.tokens}|M{shape.latents}"
             f"|D{shape.head_dim}|H{shape.heads}")
     # the historical "tiles" keys carry no kind prefix — existing caches stay valid
     return base if kind == "tiles" else f"{kind}|{base}"
+
+
+def cache_key(shape: MixerShape, dtype, device: str, kind: str = "tiles") -> str:
+    """The (runtime-versioned) key new winners are stored under."""
+    return f"{_base_key(shape, dtype, device, kind)}|{runtime_version()}"
+
+
+def legacy_cache_key(shape: MixerShape, dtype, device: str, kind: str = "tiles") -> str:
+    """Pre-versioning key format — still read as a fallback hit so caches
+    written by earlier releases keep paying off until re-tuned."""
+    return _base_key(shape, dtype, device, kind)
 
 
 def _read_disk(path: str) -> dict:
@@ -188,13 +231,19 @@ def best_params(shape: MixerShape, dtype, device: str, *, kind: str = "tiles",
                 autotune: Optional[bool] = None) -> dict:
     """Cache-hit -> cached winner; miss -> time candidates iff autotuning is
     enabled and a runner is available, else the shape heuristic. A malformed
-    cache entry counts as a miss, never an error."""
-    entry = _load(cache_path()).get(cache_key(shape, dtype, device, kind))
-    if entry is not None:
-        try:
-            return {p: int(entry[p]) for p in _KIND_PARAMS[kind]}
-        except (KeyError, TypeError, ValueError):
-            pass  # corrupt/partial entry — fall through
+    cache entry counts as a miss, never an error. Lookup tries the
+    runtime-versioned key first, then the legacy un-versioned key (a stale-
+    runtime winner beats re-deriving the heuristic, but new measurements are
+    only ever stored versioned)."""
+    cached = _load(cache_path())
+    for key in (cache_key(shape, dtype, device, kind),
+                legacy_cache_key(shape, dtype, device, kind)):
+        entry = cached.get(key)
+        if entry is not None:
+            try:
+                return {p: int(entry[p]) for p in _KIND_PARAMS[kind]}
+            except (KeyError, TypeError, ValueError):
+                pass  # corrupt/partial entry — fall through
     if (autotune if autotune is not None else autotune_enabled()) and runner is not None:
         best = measure_tiles(shape, dtype, device, runner, kind=kind)
         return {p: best[p] for p in _KIND_PARAMS[kind]}

@@ -27,7 +27,7 @@ def _run_stream(plan: MixerPlan, q, k, v):
 
     return flare_causal(q, k, v,
                         chunk_size=plan.params.get("chunk_size", DEFAULT_CHUNK),
-                        impl=plan.params.get("mode", "factored"))
+                        mode=plan.params.get("mode", "factored"))
 
 
 def _plan_pallas(shape: MixerShape, mesh, dtype) -> MixerPlan:

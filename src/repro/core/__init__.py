@@ -1,6 +1,7 @@
 """FLARE core: the paper's contribution as composable JAX modules.
 
 - flare.py        faithful operator / layer / block (two-SDPA factorization)
+- policy.py       plan-first dispatch: MixerPolicy -> resolve once -> MixerPlan (§13)
 - dispatch.py     typed mixer-backend registry + capability dispatch (§10)
 - spectral.py     Algorithm 1 linear-time eigenanalysis of W = W_dec @ W_enc
 - flare_stream.py causal/streaming variant (paper future-work item 4)
@@ -15,6 +16,13 @@ from repro.core.flare import (
     init_flare_layer,
     sdpa,
 )
+from repro.core.policy import (
+    MixerPolicy,
+    current_policy,
+    mixer_policy,
+    resolve_policy,
+    run_plan,
+)
 from repro.core.spectral import flare_spectrum, flare_spectrum_dense
 
 __all__ = [
@@ -25,6 +33,11 @@ __all__ = [
     "init_flare_block",
     "init_flare_layer",
     "sdpa",
+    "MixerPolicy",
+    "current_policy",
+    "mixer_policy",
+    "resolve_policy",
+    "run_plan",
     "flare_spectrum",
     "flare_spectrum_dense",
 ]

@@ -306,3 +306,78 @@ def run_causal_mixer(impl, q: jax.Array, k: jax.Array, v: jax.Array, *,
     if chunk_size is not None:
         plan = MixerPlan(plan.backend, {**plan.params, "chunk_size": chunk_size})
     return backend.run(plan, q, k, v)
+
+
+# ---------------------------------------------------------------------------
+# CLI: `python -m repro.core.dispatch --list` — the CI policy-resolution smoke
+# ---------------------------------------------------------------------------
+
+
+def _policy_matrix():
+    """Every registered backend x the four canonical policies (bidirectional/
+    causal x infer/train): eligible on this device, or why not."""
+    from repro.core.policy import MixerPolicy, resolve_policy
+
+    shape = MixerShape(batch=1, heads=4, tokens=1024, latents=16, head_dim=8)
+    policies = {
+        "bidi/infer": (MixerPolicy(), False),
+        "bidi/train": (MixerPolicy(requires_grad=True), False),
+        "causal/infer": (MixerPolicy(), True),
+        "causal/train": (MixerPolicy(requires_grad=True), True),
+    }
+    rows = []
+    for b in backends():
+        cells = {}
+        for label, (pol, causal) in policies.items():
+            try:
+                plan = resolve_policy(pol.with_(backends=(b.name,)), shape,
+                                      jnp.float32, causal=causal)
+                ok = eligible(b, causal=causal, dtype=jnp.float32,
+                              mesh=plan.params.get("mesh"),
+                              grad=pol.requires_grad)
+                cells[label] = "yes" if ok else "named-only"
+            except ValueError as e:
+                msg = str(e)
+                cells[label] = ("no-grad" if "forward-only" in msg else
+                                "no-causal" if "not causal" in msg else
+                                "no-bidi" if "causal contract" in msg else "no")
+        rows.append((b, cells))
+    return shape, policies, rows
+
+
+def main(argv: Optional[Sequence[str]] = None) -> int:
+    import argparse
+
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.core.dispatch",
+        description="Dump the mixer-backend registry and policy eligibility.")
+    ap.add_argument("--list", action="store_true",
+                    help="list every registered backend x canonical-policy cell")
+    args = ap.parse_args(argv)
+    _ensure_loaded()
+    shape, policies, rows = _policy_matrix()
+    print(f"device={device_kind()}  probe shape: N={shape.tokens} M={shape.latents} "
+          f"D={shape.head_dim} H={shape.heads}")
+    cols = list(policies)
+    header = f"{'backend':<14} {'grads':<5} " + " ".join(f"{c:<13}" for c in cols)
+    print(header)
+    print("-" * len(header))
+    for b, cells in rows:
+        flag = "yes" if b.caps.grads else "no"
+        print(f"{b.name:<14} {flag:<5} " + " ".join(f"{cells[c]:<13}" for c in cols)
+              + (f"  # {b.doc}" if args.list else ""))
+    # the smoke contract: at least one backend must serve each canonical policy
+    for c in cols:
+        if not any(cells[c] == "yes" for _, cells in rows):
+            print(f"ERROR: no eligible backend for policy {c}")
+            return 1
+    return 0
+
+
+if __name__ == "__main__":
+    # `python -m repro.core.dispatch` runs this file as __main__ — a second
+    # module instance with its own (empty) registry. Delegate to the
+    # canonical instance the backends registered against.
+    from repro.core import dispatch as _canonical
+
+    raise SystemExit(_canonical.main())

@@ -13,13 +13,14 @@ Layout convention is torch-style [B, H, N, D]; latent queries are learned
 parameters of shape [H, M, D] (the paper's Q in R^{M x C} split along the
 feature dim so each head owns a disjoint latent slice).
 
-Implementations are mixer *backends* resolved through the typed registry in
-repro.core.dispatch (DESIGN.md §10): ``impl`` may be "auto" (capability-based
-pick for the current device), a backend name ("sdpa", "materialized",
-"pallas", "seqparallel", "seqlat"), a pre-built
-:class:`~repro.core.dispatch.MixerPlan`, or one of the legacy tuple forms
-(``("sp", mesh, axes)`` / ``("sp2d", mesh, sa, la)``) which the resolver
-aliases onto the sharded backends.
+Implementations are mixer *backends* resolved through the plan-first policy
+API in repro.core.policy (DESIGN.md §10/§13): ``policy`` may be a
+:class:`~repro.core.policy.MixerPolicy` (backend preference order, grad
+requirement, dtype, autotune opt-in), a pre-resolved
+:class:`~repro.core.dispatch.MixerPlan` (the build-time product of
+``resolve_policy`` — what model forwards receive), or ``None`` to use the
+ambient policy stack (``with mixer_policy(...):``). Legacy ``impl=`` strings
+and ``("sp", mesh, axes)`` tuples still resolve, with a DeprecationWarning.
 
 Softmax statistics are fp32 with max subtraction (beyond-paper stability fix;
 mathematically identical — see DESIGN.md §9).
@@ -73,8 +74,8 @@ def flare_mixer(
     k: jax.Array,
     v: jax.Array,
     *,
-    impl="auto",
-    grad: bool = False,
+    policy=None,
+    impl=None,
 ) -> jax.Array:
     """Multi-head FLARE token mixing.
 
@@ -82,18 +83,23 @@ def flare_mixer(
       q: [H, M, D] learned latent queries (head-wise independent slices).
       k: [B, H, N, D] keys from the deep ResMLP projection.
       v: [B, H, N, D] values from the deep ResMLP projection.
-      impl: "auto", a registered backend name, a MixerPlan, or a legacy
-        ``("sp", ...)`` / ``("sp2d", ...)`` tuple — see repro.core.dispatch.
-      grad: mark this call site as differentiated (training): "auto" then
-        only considers grad-capable backends, and naming a forward-only
-        backend errors at resolve time instead of failing inside autodiff.
+      policy: a MixerPolicy, a pre-resolved MixerPlan, or None to use the
+        ambient policy stack (``with mixer_policy(...)``). Whether this call
+        must be differentiable is the policy's ``requires_grad`` field — the
+        old ``grad=`` kwarg is gone.
+      impl: deprecated alias accepting the legacy string/tuple spellings
+        (adapter in repro.core.policy; emits DeprecationWarning).
 
     Returns:
       y: [B, H, N, D].
     """
-    from repro.core.dispatch import run_mixer
+    from repro.core.dispatch import MixerShape
+    from repro.core.policy import resolve_policy, run_plan
 
-    return run_mixer(impl, q, k, v, grad=grad)
+    if impl is not None:
+        policy = impl  # legacy spelling; policy_from() warns for str/tuple
+    plan = resolve_policy(policy, MixerShape.from_qkv(q, k), k.dtype)
+    return run_plan(plan, q, k, v)
 
 
 def _flare_mixer_materialized(q: jax.Array, k: jax.Array, v: jax.Array) -> jax.Array:
@@ -159,12 +165,13 @@ def _merge_heads(x: jax.Array) -> jax.Array:
     return x.transpose(0, 2, 1, 3).reshape(b, n, h * d)
 
 
-def flare_layer(params: dict, x: jax.Array, *, impl="auto", grad: bool = False) -> jax.Array:
-    """x: [B, N, C] -> [B, N, C]."""
+def flare_layer(params: dict, x: jax.Array, *, policy=None, impl=None) -> jax.Array:
+    """x: [B, N, C] -> [B, N, C]. ``policy``: MixerPolicy | MixerPlan | None
+    (ambient stack); ``impl`` is the deprecated legacy spelling."""
     num_heads = params["q_latent"].shape[0]
     k = _split_heads(resmlp(params["k_proj"], x), num_heads)
     v = _split_heads(resmlp(params["v_proj"], x), num_heads)
-    y = flare_mixer(params["q_latent"].astype(x.dtype), k, v, impl=impl, grad=grad)
+    y = flare_mixer(params["q_latent"].astype(x.dtype), k, v, policy=policy, impl=impl)
     return dense(params["out_proj"], _merge_heads(y))
 
 
@@ -195,8 +202,8 @@ def init_flare_block(
     }
 
 
-def flare_block(params: dict, x: jax.Array, *, impl="auto", grad: bool = False) -> jax.Array:
-    x = x + flare_layer(params["mixer"], layernorm(params["ln1"], x), impl=impl,
-                        grad=grad)
+def flare_block(params: dict, x: jax.Array, *, policy=None, impl=None) -> jax.Array:
+    x = x + flare_layer(params["mixer"], layernorm(params["ln1"], x), policy=policy,
+                        impl=impl)
     x = x + resmlp(params["mlp"], layernorm(params["ln2"], x))
     return x

@@ -176,16 +176,21 @@ def flare_causal_with_state(
     v: jax.Array,  # [B, H, N, D]
     *,
     chunk_size: int = 256,
-    impl: str = "factored",
+    mode: str = "factored",
+    impl: str | None = None,
 ) -> tuple[FlareState, jax.Array]:
     """Causal FLARE over a sequence via a scan of chunked prefills,
     returning the final latent state (serving prefill) and all outputs.
 
-    O(N * M * D) compute. impl="factored" (default) uses the [T,T] matrix
-    form (O(T^2 + T*M) memory, bounded-score contract above); impl="exact"
+    O(N * M * D) compute. mode="factored" (default) uses the [T,T] matrix
+    form (O(T^2 + T*M) memory, bounded-score contract above); mode="exact"
     uses the associative-scan per-position states (O(T*M*D) memory, exact
-    for arbitrary inputs).
+    for arbitrary inputs). ``mode`` is a numerical-strategy knob *within*
+    this backend — backend selection itself is a MixerPolicy concern
+    (repro.core.policy); ``impl`` is the deprecated alias for ``mode``.
     """
+    if impl is not None:
+        mode = impl
     b, h, n, d = k.shape
     m = q.shape[1]
     chunk_size = min(chunk_size, n)
@@ -194,7 +199,7 @@ def flare_causal_with_state(
     state = stream_init(b, h, m, d)
     kc = k.reshape(b, h, n // chunk_size, chunk_size, d).transpose(2, 0, 1, 3, 4)
     vc = v.reshape(b, h, n // chunk_size, chunk_size, d).transpose(2, 0, 1, 3, 4)
-    step = stream_chunk_factored if impl == "factored" else stream_chunk
+    step = stream_chunk_factored if mode == "factored" else stream_chunk
 
     def body(carry, inputs):
         kt, vt = inputs
@@ -205,10 +210,12 @@ def flare_causal_with_state(
     return state, ys.transpose(1, 2, 0, 3, 4).reshape(b, h, n, d)
 
 
-def flare_causal(q, k, v, *, chunk_size: int = 256, impl: str = "factored"):
+def flare_causal(q, k, v, *, chunk_size: int = 256, mode: str = "factored",
+                 impl: str | None = None):
     """Training-time causal FLARE mixer (the flare_lm architecture and the
     long_500k-capable path). See flare_causal_with_state."""
-    return flare_causal_with_state(q, k, v, chunk_size=chunk_size, impl=impl)[1]
+    return flare_causal_with_state(q, k, v, chunk_size=chunk_size, mode=mode,
+                                   impl=impl)[1]
 
 
 def flare_causal_ref(q: jax.Array, k: jax.Array, v: jax.Array) -> jax.Array:

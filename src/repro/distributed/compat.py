@@ -17,6 +17,20 @@ def shard_map(*args, **kwargs):
     return sm(*args, **kwargs)
 
 
+def set_mesh(mesh):
+    """Context manager installing `mesh` as the ambient mesh where the
+    running jax supports one (jax.sharding.set_mesh / use_mesh); a no-op
+    null context on older releases, where the plain ``with mesh:`` scope
+    the call sites already hold is the only ambient-mesh mechanism."""
+    import contextlib
+
+    for name in ("set_mesh", "use_mesh"):
+        fn = getattr(jax.sharding, name, None)
+        if fn is not None:
+            return fn(mesh)
+    return contextlib.nullcontext(mesh)
+
+
 def make_mesh(axis_shapes, axis_names):
     """jax.make_mesh with explicit-Auto axis types where supported."""
     axis_type = getattr(jax.sharding, "AxisType", None)

@@ -23,10 +23,21 @@ def main():
     ap.add_argument("--max-new", type=int, default=16)
     ap.add_argument("--capacity", type=int, default=128)
     ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--mixer", default=None,
+                    help="FLARE mixer backend preference, comma-separated "
+                         "(e.g. 'causal_pallas,causal_stream'); default: auto")
     args = ap.parse_args()
 
     cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
-    model = get_model(cfg)
+    policy = None
+    if args.mixer:
+        from repro.core.policy import MixerPolicy
+
+        policy = MixerPolicy(backends=tuple(args.mixer.split(",")))
+    model = get_model(cfg, policy=policy, seq_len_hint=args.capacity)
+    if model.plans:
+        print(f"mixer plan (resolved once at build): "
+              f"infer={model.plans['infer'].describe()}")
     if model.prefill is None:
         raise SystemExit(f"{cfg.name} has no serving path (family={cfg.family})")
     if cfg.inputs_are_embeddings:

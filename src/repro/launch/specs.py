@@ -139,23 +139,28 @@ class Cell:
 
 def build_cell(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh,
                tcfg: TrainConfig | None = None) -> Cell:
-    flare_impl = None
+    policy = None
     if cfg.family == "pde":
         # Sequence-parallel FLARE: tokens sharded over the same axes as the
         # batch spec below (O(M*C) psum per layer, §Perf iteration 1). The
-        # sp-vs-sp2d decision (latents over "model" when the point count only
-        # divides the data axes, §Perf iteration 2) lives in the dispatcher.
-        from repro.core.dispatch import sharded_plan
+        # policy carries the axis *hints*; resolution (sp-vs-sp2d: latents
+        # over "model" when the point count only divides the data axes,
+        # §Perf iteration 2) happens once inside get_model via
+        # dispatch.sharded_plan — build_cell no longer resolves anything.
+        from repro.core.policy import MixerPolicy
 
-        flare_impl = sharded_plan(mesh, _pde_point_axes(cfg, shape, mesh),
-                                  lat_axes="model")
-    model = get_model(cfg, flare_impl=flare_impl)
+        policy = MixerPolicy(seq_axes=_pde_point_axes(cfg, shape, mesh),
+                             lat_axes=("model",))
+    model = get_model(cfg, policy=policy, mesh=mesh if policy is not None else None,
+                      seq_len_hint=shape.seq_len)
     key = jax.random.PRNGKey(0)
     params_shape = jax.eval_shape(model.init, key)
     report: list = []
     meta = {"sharding_report": report}
-    if flare_impl is not None:
-        meta["flare_backend"] = flare_impl.describe()
+    if model.plans:
+        meta["flare_backend"] = model.plans["infer"].describe()
+        if "train" in model.plans:  # absent for inference-only policies
+            meta["flare_train_backend"] = model.plans["train"].describe()
 
     if shape.step == "train":
         p_sh = param_shardings(params_shape, mesh, report)

@@ -30,16 +30,28 @@ def main():
     ap.add_argument("--ckpt", default="/tmp/repro_train_ckpt")
     ap.add_argument("--mesh", choices=["none", "host", "single", "multi"], default="none")
     ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--mixer", default=None,
+                    help="FLARE mixer backend preference, comma-separated "
+                         "(e.g. 'packed,sdpa'); default: auto")
     args = ap.parse_args()
     logging.basicConfig(level=logging.INFO, format="%(asctime)s %(message)s")
 
     cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
-    model = get_model(cfg)
     mesh = None
     if args.mesh == "host":
         mesh = make_host_mesh()
     elif args.mesh in ("single", "multi"):
         mesh = make_production_mesh(multi_pod=(args.mesh == "multi"))
+    policy = None
+    if args.mixer:
+        from repro.core.policy import MixerPolicy
+
+        policy = MixerPolicy(backends=tuple(args.mixer.split(",")))
+    model = get_model(cfg, policy=policy, seq_len_hint=args.seq_len)
+    if model.plans:
+        print(f"mixer plans (resolved once at build): "
+              f"train={model.plans['train'].describe()} "
+              f"infer={model.plans['infer'].describe()}")
 
     tcfg = TrainConfig(steps=args.steps, learning_rate=args.lr,
                        checkpoint_every=max(10, args.steps // 4),

@@ -12,6 +12,11 @@ SDPA dispatch (``attn_sdpa``):
                automatically for long sequences and by the 32k prefill cells.
   - "pallas":  fused TPU kernel (repro.kernels); validated via interpret=True.
 
+NB: this ``impl`` vocabulary is the *attention*-kernel knob and is distinct
+from FLARE mixer dispatch — mixers resolve through repro.core.policy
+(MixerPolicy -> MixerPlan, DESIGN.md §13) and are no longer threaded through
+the same kwarg as the attention impl.
+
 Sliding-window decode uses a ring-buffer cache of size ``window`` — this is
 what keeps mixtral's long_500k cache bounded.
 

@@ -195,25 +195,33 @@ def init_dense_ffn_layer(key, cfg: ModelConfig) -> dict:
     return p
 
 
-def _flare_stream_mix(layer, x, cfg: ModelConfig, *, impl="auto", grad: bool = False):
-    """Causal FLARE as an LM mixer (chunked training path). ``impl`` resolves
-    through the causal side of the mixer-backend registry; ``grad`` marks a
-    differentiated call site so forward-only backends are never resolved."""
-    from repro.core.dispatch import run_causal_mixer
+def _flare_stream_mix(layer, x, cfg: ModelConfig, *, plan=None):
+    """Causal FLARE as an LM mixer (chunked training path). ``plan`` is the
+    MixerPlan resolved once at model build (models.api.get_model); executing
+    it here is a registry dict lookup, never a re-resolve. When called bare
+    (plan=None) the ambient MixerPolicy stack resolves at trace time."""
+    from repro.core.dispatch import MixerShape
     from repro.core.flare import _merge_heads, _split_heads  # layout helpers
+    from repro.core.policy import ensure_plan, run_plan
 
     h = cfg.attn.num_heads
     k = _split_heads(resmlp(layer["k_proj"], x), h)
     v = _split_heads(resmlp(layer["v_proj"], x), h)
-    y = run_causal_mixer(impl, layer["q_latent"].astype(x.dtype), k, v,
-                         chunk_size=cfg.attn.flare_chunk, grad=grad)
+    q = layer["q_latent"].astype(x.dtype)
+    plan = ensure_plan(plan, MixerShape.from_qkv(q, k), k.dtype, causal=True,
+                       chunk_size=cfg.attn.flare_chunk)
+    y = run_plan(plan, q, k, v)
     return dense(layer["out_proj"], _merge_heads(y))
 
 
 def decoder_layer_forward(layer, x, cfg: ModelConfig, *, positions, moe_cfg=None,
                           dense_ffn: bool = False, impl: str = "auto",
-                          grad: bool = False):
-    """One pre-norm block. Returns (x, aux_loss)."""
+                          mixer_plan=None):
+    """One pre-norm block. Returns (x, aux_loss). ``impl`` is the SDPA
+    vocabulary ("auto" | "xla" | "chunked" | "pallas") for the gqa/mla
+    attention paths; ``mixer_plan`` is the resolved FLARE MixerPlan for
+    flare_stream layers — the two dispatch vocabularies are no longer
+    conflated into one threaded kwarg."""
     aux = jnp.zeros((), jnp.float32)
     xin = _norm_apply(cfg, layer["norm1"], x)
     if cfg.attn.kind == "gqa":
@@ -221,7 +229,7 @@ def decoder_layer_forward(layer, x, cfg: ModelConfig, *, positions, moe_cfg=None
     elif cfg.attn.kind == "mla":
         a = mla_forward(layer["attn"], xin, cfg.attn, positions=positions, causal=True, impl=impl)
     else:  # flare_stream
-        a = _flare_stream_mix(layer["attn"], xin, cfg, impl=impl, grad=grad)
+        a = _flare_stream_mix(layer["attn"], xin, cfg, plan=mixer_plan)
     x = x + a
     xin = _norm_apply(cfg, layer["norm2"], x)
     if cfg.moe is not None and not dense_ffn:
@@ -267,14 +275,14 @@ def _embed_inputs(params, batch, cfg: ModelConfig):
 
 
 def lm_forward(params, batch, cfg: ModelConfig, *, impl: str = "auto",
-               grad: bool = False):
+               mixer_plan=None):
     """Full-sequence forward -> (logits fp32 [B,S,V], aux_loss)."""
     x, positions = _embed_inputs(params, batch, cfg)
 
     def body(carry, layer):
         x, aux = carry
         x, a = decoder_layer_forward(layer, x, cfg, positions=positions, impl=impl,
-                                     grad=grad)
+                                     mixer_plan=mixer_plan)
         return (x, aux + a), None
 
     aux0 = jnp.zeros((), jnp.float32)
@@ -282,7 +290,8 @@ def lm_forward(params, batch, cfg: ModelConfig, *, impl: str = "auto",
         def dense_body(carry, layer):
             x, aux = carry
             x, a = decoder_layer_forward(layer, x, cfg, positions=positions,
-                                         dense_ffn=True, impl=impl, grad=grad)
+                                         dense_ffn=True, impl=impl,
+                                         mixer_plan=mixer_plan)
             return (x, aux + a), None
 
         (x, aux0), _ = jax.lax.scan(_remat(dense_body, cfg.remat), (x, aux0), params["dense_layers"])
@@ -296,10 +305,17 @@ def lm_forward(params, batch, cfg: ModelConfig, *, impl: str = "auto",
     return logits, aux
 
 
-def lm_loss(params, batch, cfg: ModelConfig, *, impl: str = "auto"):
+def lm_loss(params, batch, cfg: ModelConfig, *, impl: str = "auto",
+            mixer_plan=None):
     """Next-token cross-entropy (labels = batch['labels'])."""
-    # the loss is the differentiated entry point: require a grad-capable mixer
-    logits, aux = lm_forward(params, batch, cfg, impl=impl, grad=True)
+    from repro.core.policy import mixer_policy
+
+    # the loss is the differentiated entry point: under a build-time plan the
+    # grad contract was checked at resolve; for bare calls the policy scope
+    # restricts ambient resolution to grad-capable mixers
+    with mixer_policy(requires_grad=True):
+        logits, aux = lm_forward(params, batch, cfg, impl=impl,
+                                 mixer_plan=mixer_plan)
     labels = batch["labels"]
     logz = jax.scipy.special.logsumexp(logits, axis=-1)
     gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
@@ -398,8 +414,13 @@ def lm_decode_step(params, token, caches: LMCaches, cfg: ModelConfig):
     return logits[:, : cfg.vocab], LMCaches(new_dense, new_caches, caches.pos + 1)
 
 
-def lm_prefill(params, batch, cfg: ModelConfig, capacity: int, *, impl: str = "auto"):
-    """Run the full prompt, return (last-token logits [B, V], populated caches)."""
+def lm_prefill(params, batch, cfg: ModelConfig, capacity: int, *, impl: str = "auto",
+               mixer_plan=None):
+    """Run the full prompt, return (last-token logits [B, V], populated caches).
+
+    ``mixer_plan`` is accepted for API symmetry; the flare_stream prefill is
+    the *stateful* chunked path (it must return the latent state for decode),
+    which is pinned to flare_causal_with_state rather than registry-run."""
     x, positions = _embed_inputs(params, batch, cfg)
     s = x.shape[1]
 
@@ -504,11 +525,11 @@ def init_encdec(key, cfg: ModelConfig) -> dict:
 
 
 def encode(params, src_embeds, cfg: ModelConfig, *, impl: str = "auto",
-           flare_impl="auto", grad: bool = False):
+           mixer_plan=None):
     """src_embeds: [B, S, C] from the (stubbed) modality frontend.
 
-    ``impl`` drives the dense-attention path; ``flare_impl`` is the mixer
-    backend (registry value) for FLARE encoder stacks."""
+    ``impl`` drives the dense-attention path; ``mixer_plan`` is the resolved
+    FLARE MixerPlan for FLARE encoder stacks (None = ambient policy)."""
     from repro.core.flare import flare_layer
 
     x = src_embeds.astype(jnp.dtype(cfg.compute_dtype))
@@ -517,7 +538,7 @@ def encode(params, src_embeds, cfg: ModelConfig, *, impl: str = "auto",
     def body(x, layer):
         xin = _norm_apply(cfg, layer["norm1"], x)
         if cfg.encoder_mixer == "flare":
-            a = flare_layer(layer["attn"], xin, impl=flare_impl, grad=grad)
+            a = flare_layer(layer["attn"], xin, policy=mixer_plan)
         else:
             a = gqa_forward(layer["attn"], xin, cfg.attn, positions=positions,
                             causal=False, impl=impl)
@@ -562,9 +583,9 @@ def _precompute_cross_kv(params, memory, cfg: ModelConfig):
 
 
 def encdec_forward(params, batch, cfg: ModelConfig, *, impl: str = "auto",
-                   grad: bool = False):
+                   mixer_plan=None):
     """Teacher-forced training forward -> (logits, aux=0)."""
-    memory = encode(params, batch["embeds"], cfg, impl=impl, grad=grad)
+    memory = encode(params, batch["embeds"], cfg, impl=impl, mixer_plan=mixer_plan)
     cd = jnp.dtype(cfg.compute_dtype)
     y = params["embed"]["table"].astype(cd)[batch["tokens"]]
     positions = text_positions(y.shape[0], y.shape[1])
@@ -616,9 +637,15 @@ def _cross_attend(p, q_in, memory, cfg: ModelConfig, q_pos, kv_pos, impl):
     return _cross_attend_kv(p, q_in, k, v, cfg, q_pos, impl)
 
 
-def encdec_loss(params, batch, cfg: ModelConfig, *, impl: str = "auto"):
-    # the loss is the differentiated entry point: require a grad-capable mixer
-    logits, _ = encdec_forward(params, batch, cfg, impl=impl, grad=True)
+def encdec_loss(params, batch, cfg: ModelConfig, *, impl: str = "auto",
+                mixer_plan=None):
+    from repro.core.policy import mixer_policy
+
+    # the loss is the differentiated entry point: the requires_grad scope
+    # keeps bare (plan-less) calls off forward-only mixers
+    with mixer_policy(requires_grad=True):
+        logits, _ = encdec_forward(params, batch, cfg, impl=impl,
+                                   mixer_plan=mixer_plan)
     labels = batch["labels"]
     logz = jax.scipy.special.logsumexp(logits, axis=-1)
     gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
@@ -631,9 +658,10 @@ class EncDecCaches(NamedTuple):
     pos: jax.Array
 
 
-def encdec_prefill(params, batch, cfg: ModelConfig, capacity: int, *, impl: str = "auto"):
+def encdec_prefill(params, batch, cfg: ModelConfig, capacity: int, *, impl: str = "auto",
+                   mixer_plan=None):
     """Encode source; teacher-force the target prefix; return decode caches."""
-    memory = encode(params, batch["embeds"], cfg, impl=impl)
+    memory = encode(params, batch["embeds"], cfg, impl=impl, mixer_plan=mixer_plan)
     cd = jnp.dtype(cfg.compute_dtype)
     tokens = batch["tokens"]
     y = params["embed"]["table"].astype(cd)[tokens]

@@ -42,18 +42,16 @@ class ServeEngine:
                       "decode_s": 0.0, "mixer_backend": self._mixer_backend()}
 
     def _mixer_backend(self) -> Optional[str]:
-        """Which FLARE backend/plan "auto" resolves to for this model (for
-        observability in serving stats); None for non-FLARE mixers."""
+        """The FLARE plan get_model resolved at build (for observability in
+        serving stats) — not a re-derivation. None for non-FLARE mixers.
+        NB: this is the *full-sequence* (forward/loss) plan; the flare_lm
+        prefill/decode loop itself is pinned to the stateful streaming path
+        (stream state must survive into decode), which is the causal_stream
+        recurrence regardless of plan."""
         try:
-            from repro.core.dispatch import MixerShape, describe
-
-            cfg = getattr(self.model, "cfg", None)
-            if cfg is None or getattr(cfg.attn, "kind", None) != "flare_stream":
-                return None
-            shape = MixerShape(batch=1, heads=cfg.attn.num_heads,
-                               tokens=self.capacity, latents=cfg.attn.flare_latents,
-                               head_dim=cfg.d_model // cfg.attn.num_heads)
-            return describe("auto", shape=shape, causal=True)
+            plans = getattr(self.model, "plans", None) or {}
+            plan = plans.get("infer") or plans.get("train")
+            return plan.describe() if plan is not None else None
         except Exception:  # pragma: no cover — stats must never break serving
             return None
 

@@ -235,17 +235,20 @@ class TestPackAutotune:
 class TestTrainingSmoke:
     def test_flare_block_trains_on_packed_path(self):
         """Training smoke on the Pallas path (acceptance): a few AdamW steps
-        through flare_block with impl="packed" must run and reduce the loss."""
+        through flare_block on the packed backend must run and reduce the
+        loss. The grad requirement is the policy's requires_grad field."""
         from repro.core.flare import flare_block, init_flare_block
+        from repro.core.policy import MixerPolicy
         from repro.optim.adamw import adamw_update, init_adamw
 
         dim, heads, latents, n = 16, 4, 8, 24
         params = init_flare_block(jax.random.fold_in(KEY, 1), dim, heads, latents)
         x = jax.random.normal(jax.random.fold_in(KEY, 2), (2, n, dim))
         target = jax.random.normal(jax.random.fold_in(KEY, 3), (2, n, dim)) * 0.1
+        pol = MixerPolicy(backends=("packed",), requires_grad=True)
 
         def loss_fn(p):
-            out = flare_block(p, x, impl="packed", grad=True)
+            out = flare_block(p, x, policy=pol)
             return jnp.mean((out - target) ** 2)
 
         opt = init_adamw(params)
@@ -264,8 +267,9 @@ class TestTrainingSmoke:
         assert losses[-1] < losses[0]
 
     def test_surrogate_loss_grad_path_resolves(self):
-        """models/pde.py threads grad=True from the loss; on CPU this stays
-        on sdpa but must go through the grad-aware resolution without error."""
+        """models/pde.py scopes the loss under mixer_policy(requires_grad=
+        True); on CPU this stays on sdpa but must go through the grad-aware
+        resolution without error."""
         from repro.models import pde
 
         params = pde.init_surrogate(jax.random.fold_in(KEY, 5), "flare",

@@ -74,12 +74,16 @@ def test_flare_lm_end_to_end():
 
 
 def test_kernel_path_matches_sdpa_path():
-    """surrogate_forward(impl='pallas') == impl='sdpa' on the same params."""
+    """The pallas-plan forward == the sdpa-plan forward on the same params."""
+    from repro.core.policy import MixerPolicy
+
     params = pde.init_surrogate(KEY, "flare", in_dim=3, out_dim=1, dim=32,
                                 num_blocks=1, num_heads=4, num_latents=16)
     x = jax.random.normal(KEY, (2, 64, 3))
-    y1 = pde.surrogate_forward(params, x, mixer="flare", num_heads=4, impl="sdpa")
-    y2 = pde.surrogate_forward(params, x, mixer="flare", num_heads=4, impl="pallas")
+    y1 = pde.surrogate_forward(params, x, mixer="flare", num_heads=4,
+                               policy=MixerPolicy(backends=("sdpa",)))
+    y2 = pde.surrogate_forward(params, x, mixer="flare", num_heads=4,
+                               policy=MixerPolicy(backends=("pallas",)))
     np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), atol=1e-4)
 
 
