@@ -1,0 +1,71 @@
+"""Serving benchmark: continuous-batching engine throughput + latency.
+
+Enters the tracked perf trajectory (BENCH_<tag>.json) with rows per arch:
+
+    serve/<arch>/tok_s        us_per_call = wall us per generated token,
+                              derived carries tok/s, p50/p99 latency (ms),
+                              slot utilization and decode-step count.
+
+Workload: a seeded mixed-length batch of requests with staggered
+max_new_tokens (exactly the shape that made the old wave engine waste
+retired-slot decode steps), drained closed-loop on a small slot pool.
+REPRO_BENCH_SERVE_SMOKE=1 shrinks to one arch / fewer requests for CI.
+"""
+from __future__ import annotations
+
+import os
+import time
+
+import jax
+import numpy as np
+
+from benchmarks.common import emit
+from repro.configs import get_smoke_config
+from repro.models.api import get_model
+from repro.serve.engine import ServeEngine
+
+ARCHS = ("flare_lm", "qwen2_1_5b", "rwkv6_3b")
+SLOTS = 4
+CAPACITY = 64
+REQUESTS = 12
+
+
+def _bench_arch(arch: str, requests: int) -> None:
+    cfg = get_smoke_config(arch)
+    model = get_model(cfg, seq_len_hint=CAPACITY)
+    params = model.init(jax.random.PRNGKey(0))
+    engine = ServeEngine(model, params, capacity=CAPACITY, slots=SLOTS, seed=0)
+    rng = np.random.default_rng(0)
+    lens = rng.integers(4, 17, requests)
+    max_new = rng.integers(4, 17, requests)
+    for i in range(requests):
+        engine.submit(rng.integers(0, cfg.vocab, lens[i]),
+                      max_new_tokens=int(max_new[i]))
+    # warm the compile caches (prefill buckets + decode) outside the timing;
+    # tokens emitted by the warm-up step are excluded from the rate
+    engine.step()
+    warm_toks = engine.stats["tokens_generated"]
+    t0 = time.time()
+    while engine.step():
+        pass
+    dt = time.time() - t0
+    s = engine.stats
+    toks = s["tokens_generated"] - warm_toks
+    backend = s["mixer_backend"]
+    emit(f"serve/{arch}/tok_s", dt * 1e6 / max(toks, 1),
+         f"tok_s={toks / dt:.1f};p50_ms={s['latency_p50_s'] * 1e3:.1f};"
+         f"p99_ms={s['latency_p99_s'] * 1e3:.1f};"
+         f"util={s['slot_utilization']:.2f};steps={s['decode_steps']};"
+         f"slots={SLOTS};requests={requests}",
+         backend=backend)
+
+
+def run() -> None:
+    smoke = os.environ.get("REPRO_BENCH_SERVE_SMOKE") == "1"
+    archs = ARCHS[:1] if smoke else ARCHS
+    for arch in archs:
+        _bench_arch(arch, 4 if smoke else REQUESTS)
+
+
+if __name__ == "__main__":
+    run()

@@ -31,6 +31,7 @@ MODULES = {
     "fig13": "benchmarks.bench_fig13_heads",       # Fig 13: head dimension
     "table2": "benchmarks.bench_table2_lra",       # Table 2: LRA proxy
     "roofline": "benchmarks.bench_roofline",       # dry-run roofline table
+    "serve": "benchmarks.bench_serve",             # continuous-batching engine
 }
 
 

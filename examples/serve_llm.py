@@ -50,19 +50,22 @@ def main():
         params, opt, metrics = step(params, opt, batch)
     print(f"  final train loss: {float(metrics['loss']):.3f}")
 
-    engine = ServeEngine(model, params, capacity=128, temperature=0.0)
+    # continuous batching (DESIGN.md §4): 4 persistent slots; staggered
+    # max_new_tokens so retired slots hand over to queued requests mid-flight
+    engine = ServeEngine(model, params, capacity=128, slots=4, temperature=0.0)
     prompts = [stream.batch(1000 + i, 0, 1, 1)["tokens"][0, :12] for i in range(5)]
-    for p in prompts:
-        engine.submit(p, max_new_tokens=16)
+    for i, p in enumerate(prompts):
+        engine.submit(p, max_new_tokens=8 + 4 * i)
 
     t0 = time.time()
-    outs = engine.run_all(max_batch=4)
+    outs = engine.run_all()
     dt = time.time() - t0
     for i, (p, o) in enumerate(zip(prompts, outs)):
         print(f"req {i}: prompt={p.tolist()[:8]}... -> generated={o.tolist()}")
     s = engine.stats
     print(f"\n{s['requests']} requests, {s['tokens_generated']} tokens in {dt:.2f}s "
-          f"(prefill {s['prefill_s']:.2f}s, decode {s['decode_s']:.2f}s)")
+          f"(prefill {s['prefill_s']:.2f}s, decode {s['decode_s']:.2f}s over "
+          f"{s['decode_steps']} steps, slot utilization {s['slot_utilization']:.2f})")
     print(f"serving stats report the build-time plan: mixer_backend={s['mixer_backend']}")
     assert s["mixer_backend"] == model.plans["infer"].describe()
     print("note: the FLARE decode state is O(M x D) per layer — constant in "

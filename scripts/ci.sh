@@ -26,4 +26,10 @@ echo "== interpret-mode kernel-parity smoke =="
 python -m pytest -x -q tests/test_kernels.py tests/test_packed.py \
     -k "sweep or oracles or matches"
 
+echo "== continuous-batching serve smoke =="
+# slot-pool engine end-to-end on the FLARE-LM smoke config (DESIGN.md §4)
+python -m repro.launch.serve --arch flare_lm --smoke --requests 4 --max-new 8
+# one-row serving benchmark through the harness contract
+REPRO_BENCH_TAG=none REPRO_BENCH_SERVE_SMOKE=1 python -m benchmarks.run serve
+
 echo "CI OK"

@@ -16,11 +16,25 @@ restricted to the causal prefix. This turns FLARE into a constant-memory
 recurrent LM mixer (state M x D per head), directly analogous to a linear
 attention state but with FLARE's softmax routing on both sides.
 
-Three entry points:
+Entry points:
   - ``stream_init``   : fresh state
   - ``stream_append`` : single-token decode step (serving)
   - ``stream_chunk``  : chunked causal prefill/training (scan over chunks;
                         within a chunk, cumulative sums realize causality)
+  - ``stream_insert_slots`` / ``stream_reset_slots``: FlareState-typed
+    slot-lane pool ops (a batch row IS a request slot — DESIGN.md §4).
+    These are the standalone form for driving a bare state pool; the
+    serving engine itself reaches FlareState lanes through the generic
+    ``serve.cache`` axis-discovery scatter, which must stay semantically
+    identical (reset restores the ``stream_init`` values — m_max back to
+    -inf, not zero; both paths are pinned by tests/test_serve_continuous).
+
+Padding mask (serving prefill buckets, DESIGN.md §4): the chunk forms accept
+``mask`` [B, T] (True = real token). Masked positions contribute *identity*
+to the encode statistics — their scores are -inf on the state side, so the
+carried state is exactly the state of the unpadded prefix — while their own
+outputs are finite garbage (decode weights use the raw scores) that callers
+discard. With right-padding, causality already keeps real positions exact.
 
 Self-inclusion convention: token t's output uses the state INCLUDING token t
 (matches standard causal attention where a token attends to itself).
@@ -73,13 +87,19 @@ def stream_append(
     return new_state, y.astype(v_t.dtype)
 
 
+def _safe_exp(a, m):
+    """exp(a - m) with the -inf/-inf identity case pinned to 0 (all-masked
+    prefixes would otherwise produce exp(nan))."""
+    return jnp.where(a == -jnp.inf, 0.0, jnp.exp(a - m))
+
+
 def _combine(a, b):
     """Associative combine of (max, numerator, denominator) softmax states."""
     am, an, ad = a
     bm, bn, bd = b
     m = jnp.maximum(am, bm)
-    ea = jnp.exp(am - m)
-    eb = jnp.exp(bm - m)
+    ea = _safe_exp(am, m)
+    eb = _safe_exp(bm, m)
     return m, an * ea[..., None] + bn * eb[..., None], ad * ea + bd * eb
 
 
@@ -88,6 +108,7 @@ def stream_chunk(
     q: jax.Array,  # [H, M, D]
     k: jax.Array,  # [B, H, T, D] chunk keys
     v: jax.Array,  # [B, H, T, D] chunk values
+    mask: jax.Array | None = None,  # [B, T] bool, True = real token
 ) -> tuple[FlareState, jax.Array]:
     """Causal prefill over a chunk of T tokens. Returns ([B,H,T,D] outputs).
 
@@ -95,19 +116,26 @@ def stream_chunk(
     (max, num, den) — a single chunk-wide stabilizer would let a huge FUTURE
     score underflow earlier positions' denominators (a finite-precision
     causality leak; tests/test_flare_stream.py::test_prefix_causality).
+
+    ``mask``: masked positions contribute nothing to the statistics (their
+    encode scores are -inf, hence identity elements of the combine); their
+    own outputs are finite garbage the caller discards.
     """
     b, h, t, d = k.shape
     m_lat = q.shape[1]
     qf = q.astype(jnp.float32)
     s = jnp.einsum("hmd,bhtd->bhmt", qf, k.astype(jnp.float32))  # [B, H, M, T]
+    # masked (padding) values need no zeroing: their -inf scores give them
+    # exactly zero combine weight (_safe_exp), so v_b stays a broadcast view
+    s_enc = s if mask is None else jnp.where(mask[:, None, None, :], s, -jnp.inf)
     v_b = jnp.broadcast_to(
         v.astype(jnp.float32)[:, :, None, :, :], (b, h, m_lat, t, d))
     ones = jnp.ones_like(s)
-    mc, numc, denc = jax.lax.associative_scan(_combine, (s, v_b, ones), axis=3)
+    mc, numc, denc = jax.lax.associative_scan(_combine, (s_enc, v_b, ones), axis=3)
     # merge the incoming carry state into every position
     m_t = jnp.maximum(state.m_max[..., None], mc)
-    e_carry = jnp.exp(state.m_max[..., None] - m_t)  # [B, H, M, T]
-    e_cum = jnp.exp(mc - m_t)
+    e_carry = _safe_exp(state.m_max[..., None], m_t)  # [B, H, M, T]
+    e_cum = _safe_exp(mc, m_t)
     num_t = state.num[..., None, :] * e_carry[..., None] + numc * e_cum[..., None]
     den_t = state.den[..., None] * e_carry + denc * e_cum
     z_t = num_t / jnp.maximum(den_t, 1e-30)[..., None]  # [B, H, M, T, D]
@@ -127,6 +155,7 @@ def stream_chunk_factored(
     q: jax.Array,  # [H, M, D]
     k: jax.Array,  # [B, H, T, D]
     v: jax.Array,  # [B, H, T, D]
+    mask: jax.Array | None = None,  # [B, T] bool, True = real token
 ) -> tuple[FlareState, jax.Array]:
     """Causal chunk prefill via the factored [T, T] token-mixing matrix.
 
@@ -151,9 +180,13 @@ def stream_chunk_factored(
     b, h, t, d = k.shape
     qf = q.astype(jnp.float32)
     s = jnp.einsum("hmd,bhtd->bhmt", qf, k.astype(jnp.float32))  # [B, H, M, T]
-    ref = jnp.maximum(state.m_max, jnp.max(s, axis=-1))  # [B, H, M]
-    f1 = jnp.exp(s - ref[..., None])  # <= 1
-    carry_scale = jnp.exp(state.m_max - ref)  # [B, H, M]
+    # state-side scores: masked (padding) positions are -inf so they are
+    # invisible to the carried statistics; the decode softmax below keeps the
+    # raw scores (masked positions' outputs are finite garbage, discarded).
+    s_enc = s if mask is None else jnp.where(mask[:, None, None, :], s, -jnp.inf)
+    ref = jnp.maximum(state.m_max, jnp.max(s_enc, axis=-1))  # [B, H, M]
+    f1 = _safe_exp(s_enc, ref[..., None])  # <= 1
+    carry_scale = _safe_exp(state.m_max, ref)  # [B, H, M]
     cden = state.den[..., None] * carry_scale[..., None] + jnp.cumsum(f1, axis=-1)
     w = jax.nn.softmax(s, axis=-2)  # decode weights over latents, per token
     f2 = w / jnp.maximum(cden, 1e-30)  # [B, H, M, T]
@@ -178,6 +211,7 @@ def flare_causal_with_state(
     chunk_size: int = 256,
     mode: str = "factored",
     impl: str | None = None,
+    mask: jax.Array | None = None,  # [B, N] bool, True = real token
 ) -> tuple[FlareState, jax.Array]:
     """Causal FLARE over a sequence via a scan of chunked prefills,
     returning the final latent state (serving prefill) and all outputs.
@@ -188,6 +222,10 @@ def flare_causal_with_state(
     for arbitrary inputs). ``mode`` is a numerical-strategy knob *within*
     this backend — backend selection itself is a MixerPolicy concern
     (repro.core.policy); ``impl`` is the deprecated alias for ``mode``.
+
+    ``mask`` marks real tokens (serving prefill buckets right-pad prompts):
+    the returned state is exactly the state of the masked prefix; outputs at
+    masked positions are garbage the caller discards.
     """
     if impl is not None:
         mode = impl
@@ -197,16 +235,27 @@ def flare_causal_with_state(
     while n % chunk_size:
         chunk_size //= 2
     state = stream_init(b, h, m, d)
-    kc = k.reshape(b, h, n // chunk_size, chunk_size, d).transpose(2, 0, 1, 3, 4)
-    vc = v.reshape(b, h, n // chunk_size, chunk_size, d).transpose(2, 0, 1, 3, 4)
+    nc = n // chunk_size
+    kc = k.reshape(b, h, nc, chunk_size, d).transpose(2, 0, 1, 3, 4)
+    vc = v.reshape(b, h, nc, chunk_size, d).transpose(2, 0, 1, 3, 4)
     step = stream_chunk_factored if mode == "factored" else stream_chunk
 
-    def body(carry, inputs):
-        kt, vt = inputs
-        carry, y = step(carry, q, kt, vt)
-        return carry, y
+    if mask is None:
+        def body(carry, inputs):
+            kt, vt = inputs
+            carry, y = step(carry, q, kt, vt)
+            return carry, y
 
-    state, ys = jax.lax.scan(body, state, (kc, vc))  # ys: [C, B, H, T, D]
+        state, ys = jax.lax.scan(body, state, (kc, vc))  # ys: [C, B, H, T, D]
+    else:
+        mchunks = mask.reshape(b, nc, chunk_size).transpose(1, 0, 2)
+
+        def body(carry, inputs):
+            kt, vt, mt = inputs
+            carry, y = step(carry, q, kt, vt, mask=mt)
+            return carry, y
+
+        state, ys = jax.lax.scan(body, state, (kc, vc, mchunks))
     return state, ys.transpose(1, 2, 0, 3, 4).reshape(b, h, n, d)
 
 
@@ -216,6 +265,35 @@ def flare_causal(q, k, v, *, chunk_size: int = 256, mode: str = "factored",
     long_500k-capable path). See flare_causal_with_state."""
     return flare_causal_with_state(q, k, v, chunk_size=chunk_size, mode=mode,
                                    impl=impl)[1]
+
+
+def stream_insert_slots(pool: FlareState, part: FlareState,
+                        slots: jax.Array) -> FlareState:
+    """Write ``part``'s batch lanes into ``pool`` at ``slots`` ([b] int32).
+
+    Admission for a bare FlareState pool (DESIGN.md §4): a prefilled
+    per-request state (batch lane i of ``part``) lands in pool slot
+    ``slots[i]``; all other slots are untouched. jit-safe (scatter). The
+    serving engine's generic path (serve.cache.insert_slots) performs the
+    same scatter via axis discovery.
+    """
+    return FlareState(
+        m_max=pool.m_max.at[slots].set(part.m_max),
+        num=pool.num.at[slots].set(part.num),
+        den=pool.den.at[slots].set(part.den),
+    )
+
+
+def stream_reset_slots(pool: FlareState, slots: jax.Array) -> FlareState:
+    """Restore ``slots`` of a state pool to the ``stream_init`` values.
+
+    The retirement op: m_max must return to -inf (not zero — zero is a
+    *valid* score) so a reused slot carries no trace of the previous
+    request's stream.
+    """
+    b = slots.shape[0]
+    return stream_insert_slots(
+        pool, stream_init(b, *pool.num.shape[1:]), slots)
 
 
 def flare_causal_ref(q: jax.Array, k: jax.Array, v: jax.Array) -> jax.Array:

@@ -1,7 +1,13 @@
 """Serving launcher: ``python -m repro.launch.serve --arch <id> --smoke``.
 
-Boots the batched ServeEngine (prefill + step decode with KV/recurrent/FLARE
-caches) on a (reduced, for CPU) config and runs a synthetic request wave.
+Boots the continuous-batching ServeEngine (slot-pool caches, per-request
+insertion prefill, retire-and-admit decode — DESIGN.md §4) on a (reduced,
+for CPU) config and drives it with an **open-loop Poisson arrival stream**:
+requests arrive at ``--rate`` req/s regardless of completion (the
+throughput-honest load model), prompts/lengths drawn from a seeded rng.
+Prints tok/s, latency percentiles (p50/p99 total and first-token), slot
+utilization and compile counts. ``--rate 0`` submits everything up front
+(closed-loop batch drain).
 """
 import argparse
 import time
@@ -22,7 +28,15 @@ def main():
     ap.add_argument("--prompt-len", type=int, default=12)
     ap.add_argument("--max-new", type=int, default=16)
     ap.add_argument("--capacity", type=int, default=128)
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--rate", type=float, default=0.0,
+                    help="open-loop Poisson arrival rate in req/s "
+                         "(0 = submit all requests up front)")
+    ap.add_argument("--deadline", type=float, default=None,
+                    help="per-request deadline in seconds (expired queued "
+                         "requests are dropped at admission)")
     ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--mixer", default=None,
                     help="FLARE mixer backend preference, comma-separated "
                          "(e.g. 'causal_pallas,causal_stream'); default: auto")
@@ -38,26 +52,55 @@ def main():
     if model.plans:
         print(f"mixer plan (resolved once at build): "
               f"infer={model.plans['infer'].describe()}")
-    if model.prefill is None:
-        raise SystemExit(f"{cfg.name} has no serving path (family={cfg.family})")
+    if model.prefill_into is None:
+        raise SystemExit(f"{cfg.name} has no slot-pool serving path "
+                         f"(family={cfg.family})")
     if cfg.inputs_are_embeddings:
         raise SystemExit(f"{cfg.name} takes embeddings (frontend stub) — see examples/")
     params = model.init(jax.random.PRNGKey(0))
 
-    engine = ServeEngine(model, params, capacity=args.capacity,
-                         temperature=args.temperature)
-    rng = np.random.default_rng(0)
-    for i in range(args.requests):
-        engine.submit(rng.integers(0, cfg.vocab, args.prompt_len),
-                      max_new_tokens=args.max_new)
+    engine = ServeEngine(model, params, capacity=args.capacity, slots=args.slots,
+                         temperature=args.temperature, seed=args.seed)
+    print(f"engine: {args.slots} slots, capacity {args.capacity}, "
+          f"{engine.stats['cache']}")
+
+    rng = np.random.default_rng(args.seed)
+    # pre-draw the workload so --rate only changes arrival timing
+    prompts = [rng.integers(0, cfg.vocab, max(1, int(p)))
+               for p in rng.integers(args.prompt_len // 2 + 1,
+                                     args.prompt_len + 1, args.requests)]
+    arrivals = (np.zeros(args.requests) if args.rate <= 0
+                else np.cumsum(rng.exponential(1.0 / args.rate, args.requests)))
+
     t0 = time.time()
-    outs = engine.run_all(max_batch=4)
+    submitted = 0
+    outs: dict[int, np.ndarray] = {}
+    while submitted < args.requests or engine.sched.has_work():
+        now = time.time() - t0
+        while submitted < args.requests and arrivals[submitted] <= now:
+            engine.submit(prompts[submitted], max_new_tokens=args.max_new,
+                          deadline_s=args.deadline)
+            submitted += 1
+        if not engine.step() and submitted < args.requests:
+            # open-loop idle gap: wait for the next arrival
+            time.sleep(max(0.0, arrivals[submitted] - (time.time() - t0)))
     dt = time.time() - t0
-    for i, o in enumerate(outs):
-        print(f"req {i}: {o.tolist()}")
+    for r in sorted(engine.sched.finished, key=lambda r: r.rid):
+        outs[r.rid] = np.asarray(r.tokens, np.int32)
+    for rid, o in sorted(outs.items()):
+        print(f"req {rid}: {o.tolist()}")
+
     s = engine.stats
-    print(f"\n{s['requests']} requests / {s['tokens_generated']} tokens in {dt:.2f}s "
-          f"(prefill {s['prefill_s']:.2f}s decode {s['decode_s']:.2f}s)")
+    tok_s = s["tokens_generated"] / dt if dt > 0 else float("inf")
+    print(f"\n{s['requests']} requests / {s['tokens_generated']} tokens in "
+          f"{dt:.2f}s ({tok_s:.1f} tok/s; prefill {s['prefill_s']:.2f}s "
+          f"decode {s['decode_s']:.2f}s over {s['decode_steps']} steps)")
+    print(f"latency p50/p99: {s['latency_p50_s'] * 1e3:.1f}/"
+          f"{s['latency_p99_s'] * 1e3:.1f} ms  first-token p50/p99: "
+          f"{s['first_token_p50_s'] * 1e3:.1f}/{s['first_token_p99_s'] * 1e3:.1f} ms")
+    print(f"slot utilization {s['slot_utilization']:.2f}, "
+          f"{s['prefill_compiles']} prefill bucket compiles, "
+          f"{s['dropped']} dropped")
 
 
 if __name__ == "__main__":

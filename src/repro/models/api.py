@@ -8,6 +8,10 @@ The launcher, dry-run and trainer talk only to this interface:
     logits, caches = m.prefill(params, batch, capacity)   # prefill_32k
     caches0 = m.init_caches(batch_size, capacity)
     logits, caches = m.decode_step(params, token, caches)  # decode_* / long_*
+    # continuous-batching insertion prefill (DESIGN.md §4): write ONE
+    # request's prefilled state into live pool slots instead of minting a
+    # fresh full-batch cache; batch may carry "lengths" for padded buckets
+    logits, caches0 = m.prefill_into(params, batch, caches0, slots, capacity=cap)
 
 Mixer dispatch is **plan-first** (DESIGN.md §13): ``get_model`` resolves the
 caller's :class:`~repro.core.policy.MixerPolicy` to concrete
@@ -42,9 +46,31 @@ class Model:
     prefill: Optional[Callable[..., Any]] = None
     decode_step: Optional[Callable[..., Any]] = None
     init_caches: Optional[Callable[..., Any]] = None
+    # insertion prefill (params, batch, cache, slots, *, capacity) ->
+    # (logits, cache): prefill a (small) request batch and scatter its state
+    # into the live slot pool — the continuous-batching serving contract
+    # (DESIGN.md §4). None for families without a slot-pool serving path.
+    prefill_into: Optional[Callable[..., Any]] = None
     # resolved mixer plans ({"train": ..., "infer": ...}) for FLARE-mixing
     # families; empty for pure-attention/SSM families
     plans: Mapping[str, Any] = field(default_factory=dict)
+
+
+def _make_prefill_into(prefill, init_caches):
+    """Generic insertion prefill: run the family prefill on the request
+    batch (right-padded bucket + "lengths"), then scatter the per-request
+    cache lanes into the pool at ``slots`` (serve.cache slot-axis discovery
+    keeps this family-agnostic). The legacy ``prefill`` contract (mint a
+    fresh full-batch cache) stays untouched as the compat path."""
+
+    def prefill_into(params, batch, cache, slots, *, capacity):
+        from repro.serve.cache import insert_slots, slot_axes
+
+        logits, part = prefill(params, batch, capacity)
+        return logits, insert_slots(cache, part, slots,
+                                    slot_axes(init_caches, capacity))
+
+    return prefill_into
 
 
 def _mixer_shape(cfg: ModelConfig, family: str, seq_len_hint: Optional[int]):
@@ -146,6 +172,9 @@ def get_model(cfg: ModelConfig, *, policy=None, mesh=None,
             logits, aux = t.lm_forward(p, b, cfg, mixer_plan=infer_plan)
             return logits[..., : cfg.vocab], aux
 
+        lm_prefill = lambda p, b, cap: t.lm_prefill(p, b, cfg, cap,
+                                                    mixer_plan=infer_plan)
+        lm_caches = lambda bs, cap: t.init_lm_caches(bs, cfg, cap)
         return Model(
             cfg=cfg,
             init=lambda key: t.init_lm(key, cfg),
@@ -153,10 +182,10 @@ def get_model(cfg: ModelConfig, *, policy=None, mesh=None,
                 lambda p, b: t.lm_loss(p, b, cfg, mixer_plan=train_plan),
                 train_error),
             forward=_fwd,
-            prefill=lambda p, b, cap: t.lm_prefill(p, b, cfg, cap,
-                                                   mixer_plan=infer_plan),
+            prefill=lm_prefill,
             decode_step=lambda p, tok, c: t.lm_decode_step(p, tok, c, cfg),
-            init_caches=lambda bs, cap: t.init_lm_caches(bs, cfg, cap),
+            init_caches=lm_caches,
+            prefill_into=_make_prefill_into(lm_prefill, lm_caches),
             plans=plans,
         )
     if fam in ("encdec", "audio"):
@@ -193,14 +222,17 @@ def get_model(cfg: ModelConfig, *, policy=None, mesh=None,
             logits, aux = r.rwkv_forward(p, b, cfg)
             return logits[..., : cfg.vocab], aux
 
+        rwkv_prefill = lambda p, b, cap: r.rwkv_prefill(p, b, cfg, cap)
+        rwkv_caches = lambda bs, cap: r.init_rwkv_caches(bs, cfg)
         return Model(
             cfg=cfg,
             init=lambda key: r.init_rwkv_lm(key, cfg),
             loss=lambda p, b: r.rwkv_loss(p, b, cfg),
             forward=_rfwd,
-            prefill=lambda p, b, cap: r.rwkv_prefill(p, b, cfg, cap),
+            prefill=rwkv_prefill,
             decode_step=lambda p, tok, c: r.rwkv_decode_step(p, tok, c, cfg),
-            init_caches=lambda bs, cap: r.init_rwkv_caches(bs, cfg),
+            init_caches=rwkv_caches,
+            prefill_into=_make_prefill_into(rwkv_prefill, rwkv_caches),
         )
     if fam == "hybrid":
         from repro.models import zamba as z
@@ -209,14 +241,17 @@ def get_model(cfg: ModelConfig, *, policy=None, mesh=None,
             logits, aux = z.zamba_forward(p, b, cfg)
             return logits[..., : cfg.vocab], aux
 
+        zamba_prefill = lambda p, b, cap: z.zamba_prefill(p, b, cfg, cap)
+        zamba_caches = lambda bs, cap: z.init_zamba_caches(bs, cfg, cap)
         return Model(
             cfg=cfg,
             init=lambda key: z.init_zamba(key, cfg),
             loss=lambda p, b: z.zamba_loss(p, b, cfg),
             forward=_zfwd,
-            prefill=lambda p, b, cap: z.zamba_prefill(p, b, cfg, cap),
+            prefill=zamba_prefill,
             decode_step=lambda p, tok, c: z.zamba_decode_step(p, tok, c, cfg),
-            init_caches=lambda bs, cap: z.init_zamba_caches(bs, cfg, cap),
+            init_caches=zamba_caches,
+            prefill_into=_make_prefill_into(zamba_prefill, zamba_caches),
         )
     if fam == "pde":
         from repro.models import pde

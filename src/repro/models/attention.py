@@ -134,7 +134,7 @@ def _chunked_attention(q, k, v, *, scale, causal, window, q_offset, chunk):
 class KVCache(NamedTuple):
     k: jax.Array      # [B, Hkv, S_cap, D] (ring buffer when windowed)
     v: jax.Array      # [B, Hkv, S_cap, D]
-    length: jax.Array  # [] int32 — total tokens seen so far
+    length: jax.Array  # [B] int32 — tokens seen so far, per sequence slot
 
 
 def init_kv_cache(batch: int, cfg: AttnConfig, capacity: int, dtype=jnp.bfloat16) -> KVCache:
@@ -142,8 +142,16 @@ def init_kv_cache(batch: int, cfg: AttnConfig, capacity: int, dtype=jnp.bfloat16
     return KVCache(
         k=jnp.zeros((batch, cfg.num_kv_heads, cap, cfg.head_dim), dtype),
         v=jnp.zeros((batch, cfg.num_kv_heads, cap, cfg.head_dim), dtype),
-        length=jnp.zeros((), jnp.int32),
+        length=jnp.zeros((batch,), jnp.int32),
     )
+
+
+def _per_slot(length: jax.Array, batch: int) -> jax.Array:
+    """Normalize a cache length/position leaf to per-slot [B] (legacy caches
+    carried one scalar for the whole wave)."""
+    if length.ndim == 0:
+        return jnp.broadcast_to(length, (batch,))
+    return length
 
 
 def init_gqa(key, cfg: AttnConfig, d_model: int, *, param_dtype=jnp.float32) -> dict:
@@ -227,18 +235,23 @@ def gqa_decode(
     k = apply_rope(k, ang)
 
     cap = cache.k.shape[2]
-    slot = jnp.mod(cache.length, cap)  # ring position (== length when unwindowed)
-    new_k = jax.lax.dynamic_update_slice(cache.k, k.astype(cache.k.dtype), (0, 0, slot, 0))
-    new_v = jax.lax.dynamic_update_slice(cache.v, v.astype(cache.v.dtype), (0, 0, slot, 0))
-    new_len = cache.length + 1
+    length = _per_slot(cache.length, b)
+    slot = jnp.mod(length, cap)  # [B] ring position (== length when unwindowed)
+    # per-slot write positions (slots run at different lengths under
+    # continuous batching): vmap the row update over the batch axis
+    upd = jax.vmap(lambda c, x_, s_: jax.lax.dynamic_update_slice(c, x_, (0, s_, 0)))
+    new_k = upd(cache.k, k.astype(cache.k.dtype), slot)
+    new_v = upd(cache.v, v.astype(cache.v.dtype), slot)
+    new_len = length + 1
 
     groups = cfg.num_heads // cfg.num_kv_heads
     kk = _expand_kv(new_k, groups).astype(q.dtype)
     vv = _expand_kv(new_v, groups).astype(q.dtype)
     scores = jnp.einsum("bhsd,bhtd->bhst", q, kk).astype(jnp.float32)
     scores = scores / math.sqrt(cfg.head_dim)
-    # valid slots: index < min(length+1, cap)
-    valid = jax.lax.broadcasted_iota(jnp.int32, (1, 1, 1, cap), 3) < jnp.minimum(new_len, cap)
+    # valid slots: index < min(length+1, cap), per sequence slot
+    valid = (jax.lax.broadcasted_iota(jnp.int32, (1, 1, 1, cap), 3)
+             < jnp.minimum(new_len, cap)[:, None, None, None])
     scores = jnp.where(valid, scores, -jnp.inf)
     w = jax.nn.softmax(scores, axis=-1)
     out = jnp.einsum("bhst,bhtd->bhsd", w.astype(vv.dtype), vv)
@@ -246,18 +259,29 @@ def gqa_decode(
     return y, KVCache(new_k, new_v, new_len)
 
 
-def prefill_kv_cache(k: jax.Array, v: jax.Array, cfg: AttnConfig, capacity: int) -> KVCache:
-    """Pack prefill K/V [B, Hkv, S, D] into a fresh cache of `capacity`."""
+def prefill_kv_cache(k: jax.Array, v: jax.Array, cfg: AttnConfig, capacity: int,
+                     lengths: jax.Array | None = None) -> KVCache:
+    """Pack prefill K/V [B, Hkv, S, D] into a fresh cache of `capacity`.
+
+    ``lengths`` [B]: true (un-padded) prompt lengths when S is a right-padded
+    bucket. Rows past a sequence's length are garbage but stay invisible —
+    the decode validity mask and write slot are driven by ``length``.
+    """
     b, hkv, s, d = k.shape
     cap = capacity if cfg.sliding_window is None else min(capacity, cfg.sliding_window)
+    length = jnp.full((b,), s, jnp.int32) if lengths is None else lengths
     if s >= cap:
-        return KVCache(k[:, :, s - cap:].astype(jnp.bfloat16),
-                       v[:, :, s - cap:].astype(jnp.bfloat16),
-                       jnp.asarray(s, jnp.int32))
+        if lengths is None:
+            return KVCache(k[:, :, s - cap:].astype(jnp.bfloat16),
+                           v[:, :, s - cap:].astype(jnp.bfloat16), length)
+        # keep the last `cap` REAL tokens of each row (right-padded bucket)
+        start = jnp.clip(length - cap, 0, s - cap)
+        sl = jax.vmap(lambda c, s_: jax.lax.dynamic_slice(c, (0, s_, 0), (hkv, cap, d)))
+        return KVCache(sl(k, start).astype(jnp.bfloat16),
+                       sl(v, start).astype(jnp.bfloat16), length)
     pad = ((0, 0), (0, 0), (0, cap - s), (0, 0))
     return KVCache(jnp.pad(k, pad).astype(jnp.bfloat16),
-                   jnp.pad(v, pad).astype(jnp.bfloat16),
-                   jnp.asarray(s, jnp.int32))
+                   jnp.pad(v, pad).astype(jnp.bfloat16), length)
 
 
 # ---------------------------------------------------------------------------
@@ -268,7 +292,7 @@ def prefill_kv_cache(k: jax.Array, v: jax.Array, cfg: AttnConfig, capacity: int)
 class MLACache(NamedTuple):
     c_kv: jax.Array    # [B, S_cap, kv_lora_rank]  compressed latents
     k_rope: jax.Array  # [B, S_cap, qk_rope_head_dim]  shared rotary key
-    length: jax.Array  # [] int32
+    length: jax.Array  # [B] int32, per sequence slot
 
 
 def init_mla_cache(batch: int, cfg: AttnConfig, capacity: int, dtype=jnp.bfloat16) -> MLACache:
@@ -276,7 +300,7 @@ def init_mla_cache(batch: int, cfg: AttnConfig, capacity: int, dtype=jnp.bfloat1
     return MLACache(
         c_kv=jnp.zeros((batch, capacity, m.kv_lora_rank), dtype),
         k_rope=jnp.zeros((batch, capacity, m.qk_rope_head_dim), dtype),
-        length=jnp.zeros((), jnp.int32),
+        length=jnp.zeros((batch,), jnp.int32),
     )
 
 
@@ -374,17 +398,21 @@ def mla_decode(
     ang = rope_angles(positions, m.qk_rope_head_dim, cfg.rope_theta)
     kr_new = apply_rope(kr_new, ang)
 
+    b = x.shape[0]
     cap = cache.c_kv.shape[1]
-    slot = jnp.mod(cache.length, cap)
-    c_all = jax.lax.dynamic_update_slice(cache.c_kv, c_new.astype(cache.c_kv.dtype), (0, slot, 0))
-    kr_all = jax.lax.dynamic_update_slice(cache.k_rope, kr_new.astype(cache.k_rope.dtype), (0, slot, 0))
-    new_len = cache.length + 1
+    length = _per_slot(cache.length, b)
+    slot = jnp.mod(length, cap)  # [B]
+    upd = jax.vmap(lambda c, x_, s_: jax.lax.dynamic_update_slice(c, x_, (s_, 0)))
+    c_all = upd(cache.c_kv, c_new.astype(cache.c_kv.dtype), slot)
+    kr_all = upd(cache.k_rope, kr_new.astype(cache.k_rope.dtype), slot)
+    new_len = length + 1
 
     scale = 1.0 / math.sqrt(m.qk_nope_head_dim + m.qk_rope_head_dim)
     s_nope = jnp.einsum("bhsr,btr->bhst", q_abs, c_all.astype(x.dtype))
     s_rope = jnp.einsum("bhsd,btd->bhst", q_rope, kr_all.astype(x.dtype))
     scores = (s_nope + s_rope).astype(jnp.float32) * scale
-    valid = jax.lax.broadcasted_iota(jnp.int32, (1, 1, 1, cap), 3) < jnp.minimum(new_len, cap)
+    valid = (jax.lax.broadcasted_iota(jnp.int32, (1, 1, 1, cap), 3)
+             < jnp.minimum(new_len, cap)[:, None, None, None])
     scores = jnp.where(valid, scores, -jnp.inf)
     w = jax.nn.softmax(scores, axis=-1)
     ctx = jnp.einsum("bhst,btr->bhsr", w.astype(x.dtype), c_all.astype(x.dtype))  # latent context
@@ -395,14 +423,22 @@ def mla_decode(
     return y, MLACache(c_all, kr_all, new_len)
 
 
-def prefill_mla_cache(c_kv: jax.Array, k_rope: jax.Array, capacity: int) -> MLACache:
+def prefill_mla_cache(c_kv: jax.Array, k_rope: jax.Array, capacity: int,
+                      lengths: jax.Array | None = None) -> MLACache:
     b, s, r = c_kv.shape
+    length = jnp.full((b,), s, jnp.int32) if lengths is None else lengths
     if s >= capacity:
-        return MLACache(c_kv[:, s - capacity:].astype(jnp.bfloat16),
-                        k_rope[:, s - capacity:].astype(jnp.bfloat16),
-                        jnp.asarray(s, jnp.int32))
+        if lengths is None:
+            return MLACache(c_kv[:, s - capacity:].astype(jnp.bfloat16),
+                            k_rope[:, s - capacity:].astype(jnp.bfloat16), length)
+        start = jnp.clip(length - capacity, 0, s - capacity)
+        sl = lambda d_: jax.vmap(
+            lambda c, s_: jax.lax.dynamic_slice(c, (s_, 0), (capacity, d_)))
+        return MLACache(sl(r)(c_kv, start).astype(jnp.bfloat16),
+                        sl(k_rope.shape[-1])(k_rope, start).astype(jnp.bfloat16),
+                        length)
     return MLACache(
         jnp.pad(c_kv, ((0, 0), (0, capacity - s), (0, 0))).astype(jnp.bfloat16),
         jnp.pad(k_rope, ((0, 0), (0, capacity - s), (0, 0))).astype(jnp.bfloat16),
-        jnp.asarray(s, jnp.int32),
+        length,
     )

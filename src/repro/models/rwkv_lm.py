@@ -66,7 +66,7 @@ def rwkv_loss(params, batch, cfg: ModelConfig, *, impl: str = "chunked"):
 
 class RWKVCaches(NamedTuple):
     states: Any      # stacked RWKVState [L, ...]
-    pos: jax.Array
+    pos: jax.Array   # [B] int32, per sequence slot
 
 
 def init_rwkv_caches(batch: int, cfg: ModelConfig) -> RWKVCaches:
@@ -81,24 +81,37 @@ def init_rwkv_caches(batch: int, cfg: ModelConfig) -> RWKVCaches:
         )
 
     states = jax.tree.map(lambda *xs: jnp.stack(xs), *[one(i) for i in range(cfg.num_layers)])
-    return RWKVCaches(states, jnp.zeros((), jnp.int32))
+    return RWKVCaches(states, jnp.zeros((batch,), jnp.int32))
 
 
 def rwkv_prefill(params, batch, cfg: ModelConfig, capacity: int = 0, *, impl: str = "chunked"):
-    """Run the prompt, collect per-layer recurrent states."""
+    """Run the prompt, collect per-layer recurrent states.
+
+    ``batch["lengths"]`` ([B] int32, optional): true prompt lengths for
+    right-padded serving buckets — padded positions become recurrence no-ops
+    (see rwkv6_block) so the carried states match the un-padded prompt."""
     cd = jnp.dtype(cfg.compute_dtype)
     tokens = batch["tokens"]
+    lengths = batch.get("lengths")
     x = params["embed"]["table"].astype(cd)[tokens]
     x = layernorm(params["ln0"], x)
 
     def body(x, layer):
-        x, st = rwkv6_block(layer, x, cfg.ssm, impl=impl)
+        x, st = rwkv6_block(layer, x, cfg.ssm, impl=impl, lengths=lengths)
         return x, st
 
     x, states = jax.lax.scan(body, x, params["layers"])
-    x = layernorm(params["final_norm"], x[:, -1:])
+    b, s = tokens.shape
+    if lengths is None:
+        x = x[:, -1:]
+        pos = jnp.full((b,), s, jnp.int32)
+    else:
+        idx = jnp.clip(lengths - 1, 0, s - 1)[:, None, None]
+        x = jnp.take_along_axis(x, jnp.broadcast_to(idx, (b, 1, x.shape[2])), axis=1)
+        pos = lengths
+    x = layernorm(params["final_norm"], x)
     logits = dense(params["lm_head"], x)[:, 0, : cfg.vocab].astype(jnp.float32)
-    return logits, RWKVCaches(states, jnp.asarray(tokens.shape[1], jnp.int32))
+    return logits, RWKVCaches(states, pos)
 
 
 def rwkv_decode_step(params, token, caches: RWKVCaches, cfg: ModelConfig):

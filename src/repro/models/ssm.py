@@ -181,6 +181,23 @@ def _token_shift(x: jax.Array, last: jax.Array | None = None) -> jax.Array:
     return sx.at[:, :1].set(first)
 
 
+def _pad_mask(lengths: jax.Array | None, b: int, t: int) -> jax.Array | None:
+    """[B, T] bool, True = real token (right-padded serving buckets)."""
+    if lengths is None:
+        return None
+    return jax.lax.broadcasted_iota(jnp.int32, (b, t), 1) < lengths[:, None]
+
+
+def _last_real(x: jax.Array, lengths: jax.Array | None) -> jax.Array:
+    """x: [B, T, C] -> [B, C], the row at each sequence's last REAL position
+    (position T-1 when ``lengths`` is None)."""
+    if lengths is None:
+        return x[:, -1, :]
+    idx = jnp.clip(lengths - 1, 0, x.shape[1] - 1)[:, None, None]
+    idx = jnp.broadcast_to(idx, (x.shape[0], 1, x.shape[2]))
+    return jnp.take_along_axis(x, idx, axis=1)[:, 0]
+
+
 class RWKVState(NamedTuple):
     tm_last: jax.Array   # [B, C] last input of time-mix
     cm_last: jax.Array   # [B, C] last input of channel-mix
@@ -188,8 +205,15 @@ class RWKVState(NamedTuple):
 
 
 def rwkv6_time_mix(params: dict, x: jax.Array, cfg: SSMConfig, *,
-                   state: RWKVState | None = None, impl: str = "chunked"):
-    """x: [B, T, C] (already LN'd). Returns (y, new (tm_last, wkv))."""
+                   state: RWKVState | None = None, impl: str = "chunked",
+                   lengths: jax.Array | None = None):
+    """x: [B, T, C] (already LN'd). Returns (y, new (tm_last, wkv)).
+
+    ``lengths`` [B]: true prompt lengths when T is a right-padded serving
+    bucket. Padded positions become WKV no-ops (k=0 kills their state
+    contribution, decay w=1 leaves the state undecayed) and the carried
+    tm_last is the input at each row's last REAL position — so the state
+    handed to decode is exactly that of the un-padded prompt."""
     b, t, c = x.shape
     d = cfg.head_dim
     h = c // d
@@ -217,6 +241,13 @@ def rwkv6_time_mix(params: dict, x: jax.Array, cfg: SSMConfig, *,
     )
     w = jnp.exp(-jnp.exp(ww)).reshape(b, t, h, d)  # in (0,1)
 
+    mask = _pad_mask(lengths, b, t)
+    if mask is not None:
+        # padded positions are recurrence no-ops: zero key (no kv outer
+        # product enters the state), unit decay (state passes through)
+        k = jnp.where(mask[..., None, None], k, 0.0)
+        w = jnp.where(mask[..., None, None], w, 1.0)
+
     s0 = None if state is None else state.wkv
     if impl == "chunked" and t % cfg.chunk == 0 and t > 1:
         y, s = rwkv6_wkv_chunked(r, k, v, w, params["u"], s0, chunk=cfg.chunk)
@@ -231,10 +262,11 @@ def rwkv6_time_mix(params: dict, x: jax.Array, cfg: SSMConfig, *,
     y = yh.reshape(b, t, c) * params["ln_x"]["scale"].astype(jnp.float32) + params["ln_x"]["bias"].astype(jnp.float32)
     y = y.astype(x.dtype) * g
     out = dense(params["w_o"], y)
-    return out, (x[:, -1, :].astype(jnp.float32), s)
+    return out, (_last_real(x, lengths).astype(jnp.float32), s)
 
 
-def rwkv6_channel_mix(params: dict, x: jax.Array, *, last: jax.Array | None = None):
+def rwkv6_channel_mix(params: dict, x: jax.Array, *, last: jax.Array | None = None,
+                      lengths: jax.Array | None = None):
     """x: [B, T, C] (already LN'd). Returns (y, new last-token).
     Elementwise lerp runs in the compute dtype (§Perf cell B iteration 2)."""
     sx = _token_shift(x, last)
@@ -243,17 +275,22 @@ def rwkv6_channel_mix(params: dict, x: jax.Array, *, last: jax.Array | None = No
     xr = x + dx * params["cm_mu_r"].astype(x.dtype)
     kk = jnp.square(jax.nn.relu(dense(params["cm_k"], xk)))
     out = jax.nn.sigmoid(dense(params["cm_r"], xr)) * dense(params["cm_v"], kk)
-    return out, x[:, -1, :].astype(jnp.float32)
+    return out, _last_real(x, lengths).astype(jnp.float32)
 
 
 def rwkv6_block(params: dict, x: jax.Array, cfg: SSMConfig, *,
-                state: RWKVState | None = None, impl: str = "chunked"):
-    """Full RWKV6 layer: x + TimeMix(LN1(x)); x + ChannelMix(LN2(x))."""
+                state: RWKVState | None = None, impl: str = "chunked",
+                lengths: jax.Array | None = None):
+    """Full RWKV6 layer: x + TimeMix(LN1(x)); x + ChannelMix(LN2(x)).
+    ``lengths``: see rwkv6_time_mix (right-padded serving buckets)."""
     tm_in = layernorm(params["ln1"], x)
-    tm_out, (tm_last, wkv) = rwkv6_time_mix(params, tm_in, cfg, state=state, impl=impl)
+    tm_out, (tm_last, wkv) = rwkv6_time_mix(params, tm_in, cfg, state=state, impl=impl,
+                                            lengths=lengths)
     x = x + tm_out
     cm_in = layernorm(params["ln2"], x)
-    cm_out, cm_last = rwkv6_channel_mix(params, cm_in, last=None if state is None else state.cm_last)
+    cm_out, cm_last = rwkv6_channel_mix(params, cm_in,
+                                        last=None if state is None else state.cm_last,
+                                        lengths=lengths)
     x = x + cm_out
     return x, RWKVState(tm_last, cm_last, wkv)
 
@@ -290,8 +327,12 @@ def init_mamba2_layer(key, d_model: int, cfg: SSMConfig, *, param_dtype=jnp.floa
 
 
 def _causal_conv1d(x: jax.Array, w: jax.Array, b: jax.Array,
-                   state: jax.Array | None = None):
-    """Depthwise causal conv. x: [B, T, C], w: [C, K]. Returns (y, new_state)."""
+                   state: jax.Array | None = None,
+                   lengths: jax.Array | None = None):
+    """Depthwise causal conv. x: [B, T, C], w: [C, K]. Returns (y, new_state).
+
+    ``lengths``: with a right-padded bucket the carried state must be the
+    K-1 inputs ending at each row's last REAL token, not the padded tail."""
     kk = w.shape[1]
     xf = x.astype(jnp.float32).transpose(0, 2, 1)  # [B, C, T]
     if state is None:
@@ -301,7 +342,13 @@ def _causal_conv1d(x: jax.Array, w: jax.Array, b: jax.Array,
     xp = jnp.concatenate([pad, xf], axis=-1)  # [B, C, T+K-1]
     y = sum(xp[:, :, i : i + xf.shape[-1]] * w[:, i].astype(jnp.float32)[None, :, None] for i in range(kk))
     y = y + b.astype(jnp.float32)[None, :, None]
-    new_state = xp[:, :, -(kk - 1):]
+    if lengths is None:
+        new_state = xp[:, :, -(kk - 1):]
+    else:
+        # window [len-K+1, len) in token coords == [len, len+K-1) in xp coords
+        c = xp.shape[1]
+        new_state = jax.vmap(
+            lambda r, s_: jax.lax.dynamic_slice(r, (0, s_), (c, kk - 1)))(xp, lengths)
     return y.transpose(0, 2, 1).astype(x.dtype), new_state
 
 
@@ -374,8 +421,14 @@ def ssd_chunked(x, dt, a_log, bmat, cmat, d_skip, s0=None, *, chunk: int = 64):
 
 
 def mamba2_block(params: dict, x: jax.Array, cfg: SSMConfig, *,
-                 state: Mamba2State | None = None, impl: str = "chunked"):
-    """Full Mamba2 layer with pre-norm and residual. x: [B, T, C]."""
+                 state: Mamba2State | None = None, impl: str = "chunked",
+                 lengths: jax.Array | None = None):
+    """Full Mamba2 layer with pre-norm and residual. x: [B, T, C].
+
+    ``lengths`` [B]: right-padded-bucket masking — padded positions get
+    dt=0 (unit decay, zero state contribution) and the conv state is taken
+    at each row's last real token, so the carried ``Mamba2State`` is exactly
+    that of the un-padded prompt."""
     b, t, c = x.shape
     d_inner = cfg.expand * c
     p = cfg.head_dim
@@ -387,11 +440,17 @@ def mamba2_block(params: dict, x: jax.Array, cfg: SSMConfig, *,
     zxbcdt = dense(params["in_proj"], xin)
     z, xbc, dt = jnp.split(zxbcdt, [d_inner, 2 * d_inner + 2 * n], axis=-1)
     conv_state = None if state is None else state.conv
-    xbc, new_conv = _causal_conv1d(xbc, params["conv_w"], params["conv_b"], conv_state)
+    xbc, new_conv = _causal_conv1d(xbc, params["conv_w"], params["conv_b"], conv_state,
+                                   lengths=lengths)
     xbc = jax.nn.silu(xbc)
     xs, bmat, cmat = jnp.split(xbc, [d_inner, d_inner + n], axis=-1)
     xs = xs.reshape(b, t, h, p)
     dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"].astype(jnp.float32))
+    mask = _pad_mask(lengths, b, t)
+    if mask is not None:
+        # dt=0 makes padded positions SSD no-ops: decay exp(0*A)=1, zero
+        # (dt*x)(x)B contribution — the state carries over them untouched
+        dt = dt * mask[..., None]
 
     s0 = None if state is None else state.ssm
     if impl == "chunked" and t % cfg.chunk == 0 and t > 1:

@@ -329,7 +329,7 @@ def lm_loss(params, batch, cfg: ModelConfig, *, impl: str = "auto",
 class LMCaches(NamedTuple):
     dense: Any          # stacked caches for the leading dense layers (or None)
     layers: Any         # stacked caches for the scanned layers
-    pos: jax.Array      # [] int32 next position
+    pos: jax.Array      # [B] int32 next position, per sequence slot
 
 
 def init_lm_caches(batch: int, cfg: ModelConfig, capacity: int) -> LMCaches:
@@ -348,8 +348,28 @@ def init_lm_caches(batch: int, cfg: ModelConfig, capacity: int) -> LMCaches:
     return LMCaches(
         dense=stackn(n_dense) if n_dense else None,
         layers=stackn(n_scan),
-        pos=jnp.zeros((), jnp.int32),
+        pos=jnp.zeros((batch,), jnp.int32),
     )
+
+
+def _last_valid(x: jax.Array, lengths: Optional[jax.Array]) -> jax.Array:
+    """x: [B, S, C] -> [B, 1, C] at each row's last REAL position (serving
+    prefill right-pads prompts to a bucket; see DESIGN.md §4)."""
+    if lengths is None:
+        return x[:, -1:]
+    idx = jnp.clip(lengths - 1, 0, x.shape[1] - 1)[:, None, None]
+    return jnp.take_along_axis(
+        x, jnp.broadcast_to(idx, (x.shape[0], 1, x.shape[2])), axis=1)
+
+
+def _decode_positions(pos: jax.Array, b: int, mrope: bool):
+    """Per-slot decode positions from the cache's [B] position vector
+    (legacy scalar positions broadcast)."""
+    if pos.ndim == 0:
+        pos = jnp.broadcast_to(pos, (b,))
+    if mrope:
+        return jnp.broadcast_to(pos[None, :, None], (3, b, 1))
+    return pos[:, None]
 
 
 def _layer_decode(layer, x, cfg: ModelConfig, cache, *, positions, dense_ffn=False):
@@ -385,10 +405,7 @@ def lm_decode_step(params, token, caches: LMCaches, cfg: ModelConfig):
     else:
         b = token.shape[0]
         x = params["embed"]["table"].astype(cd)[token]
-    if cfg.attn.mrope_sections is not None:
-        positions = jnp.broadcast_to(caches.pos, (3, b, 1))
-    else:
-        positions = jnp.broadcast_to(caches.pos, (b, 1))
+    positions = _decode_positions(caches.pos, b, cfg.attn.mrope_sections is not None)
 
     def body(x, inp):
         layer, cache = inp
@@ -418,22 +435,32 @@ def lm_prefill(params, batch, cfg: ModelConfig, capacity: int, *, impl: str = "a
                mixer_plan=None):
     """Run the full prompt, return (last-token logits [B, V], populated caches).
 
+    ``batch["lengths"]`` ([B] int32, optional): true prompt lengths when the
+    token array is a right-padded serving bucket (DESIGN.md §4). Causality
+    keeps real positions exact under right-padding; the mask only has to keep
+    padded positions out of the carried stream states, cache lengths, and
+    the returned logits (taken at each row's last real position).
+
     ``mixer_plan`` is accepted for API symmetry; the flare_stream prefill is
     the *stateful* chunked path (it must return the latent state for decode),
     which is pinned to flare_causal_with_state rather than registry-run."""
+    lengths = batch.get("lengths")
     x, positions = _embed_inputs(params, batch, cfg)
-    s = x.shape[1]
+    b, s = x.shape[:2]
+    mask = None
+    if lengths is not None:
+        mask = jax.lax.broadcasted_iota(jnp.int32, (b, s), 1) < lengths[:, None]
 
     def body(x, layer):
         xin = _norm_apply(cfg, layer["norm1"], x)
         if cfg.attn.kind == "gqa":
             a, (k, v) = gqa_forward(layer["attn"], xin, cfg.attn, positions=positions,
                                     causal=True, impl=impl, return_kv=True)
-            cache = prefill_kv_cache(k, v, cfg.attn, capacity)
+            cache = prefill_kv_cache(k, v, cfg.attn, capacity, lengths)
         elif cfg.attn.kind == "mla":
             a, (ckv, kr) = mla_forward(layer["attn"], xin, cfg.attn, positions=positions,
                                        causal=True, impl=impl, return_kv=True)
-            cache = prefill_mla_cache(ckv, kr, capacity)
+            cache = prefill_mla_cache(ckv, kr, capacity, lengths)
         else:  # flare_stream: chunked causal prefill, keep final latent state
             from repro.core.flare import _merge_heads, _split_heads
             from repro.core.flare_stream import flare_causal_with_state
@@ -443,7 +470,8 @@ def lm_prefill(params, batch, cfg: ModelConfig, capacity: int, *, impl: str = "a
             k = _split_heads(resmlp(fl["k_proj"], xin), h)
             v = _split_heads(resmlp(fl["v_proj"], xin), h)
             q = fl["q_latent"].astype(x.dtype)
-            st, y = flare_causal_with_state(q, k, v, chunk_size=cfg.attn.flare_chunk)
+            st, y = flare_causal_with_state(q, k, v, chunk_size=cfg.attn.flare_chunk,
+                                            mask=mask)
             a = dense(fl["out_proj"], _merge_heads(y))
             cache = st
         x = x + a
@@ -462,7 +490,7 @@ def lm_prefill(params, batch, cfg: ModelConfig, capacity: int, *, impl: str = "a
             xin = _norm_apply(cfg, layer["norm1"], x)
             a, (ckv, kr) = mla_forward(layer["attn"], xin, cfg.attn, positions=positions,
                                        causal=True, impl=impl, return_kv=True)
-            cache = prefill_mla_cache(ckv, kr, capacity)
+            cache = prefill_mla_cache(ckv, kr, capacity, lengths)
             x = x + a
             x = x + swiglu(layer["mlp"], _norm_apply(cfg, layer["norm2"], x))
             return x, cache
@@ -471,13 +499,14 @@ def lm_prefill(params, batch, cfg: ModelConfig, capacity: int, *, impl: str = "a
     else:
         dense_caches = None
     x, layer_caches = jax.lax.scan(body, x, params["layers"])
-    x = _norm_apply(cfg, params["final_norm"], x[:, -1:])
+    x = _norm_apply(cfg, params["final_norm"], _last_valid(x, lengths))
     if cfg.tie_embeddings:
         logits = x @ params["embed"]["table"].astype(x.dtype).T
     else:
         logits = dense(params["lm_head"], x)
     logits = logits[:, 0, : cfg.vocab].astype(jnp.float32)
-    return logits, LMCaches(dense_caches, layer_caches, jnp.asarray(s, jnp.int32))
+    pos = jnp.full((b,), s, jnp.int32) if lengths is None else lengths
+    return logits, LMCaches(dense_caches, layer_caches, pos)
 
 
 # ---------------------------------------------------------------------------
@@ -655,7 +684,7 @@ def encdec_loss(params, batch, cfg: ModelConfig, *, impl: str = "auto",
 class EncDecCaches(NamedTuple):
     self_caches: Any      # stacked KVCache [L, ...]
     memory: jax.Array     # [B, S_src, C] encoder output
-    pos: jax.Array
+    pos: jax.Array        # [B] int32, per sequence slot
 
 
 def encdec_prefill(params, batch, cfg: ModelConfig, capacity: int, *, impl: str = "auto",
@@ -682,14 +711,15 @@ def encdec_prefill(params, batch, cfg: ModelConfig, capacity: int, *, impl: str 
     y, caches = jax.lax.scan(body, y, params["decoder"])
     y = _norm_apply(cfg, params["final_norm"], y[:, -1:])
     logits = dense(params["lm_head"], y)[:, 0, : cfg.vocab].astype(jnp.float32)
-    return logits, EncDecCaches(caches, memory, jnp.asarray(tokens.shape[1], jnp.int32))
+    pos = jnp.full((tokens.shape[0],), tokens.shape[1], jnp.int32)
+    return logits, EncDecCaches(caches, memory, pos)
 
 
 def encdec_decode_step(params, token, caches: EncDecCaches, cfg: ModelConfig):
     cd = jnp.dtype(cfg.compute_dtype)
     y = params["embed"]["table"].astype(cd)[token]  # [B, 1, C]
     b = y.shape[0]
-    positions = jnp.broadcast_to(caches.pos, (b, 1))
+    positions = _decode_positions(caches.pos, b, False)
     mem_pos = text_positions(caches.memory.shape[0], caches.memory.shape[1])
 
     def body(y, inp):

@@ -101,7 +101,8 @@ def init_zamba(key, cfg: ModelConfig) -> dict:
 
 
 def _shared_block(shared, lora_q, lora_k, lora_v, lora_gate, x, x0, cfg: ModelConfig,
-                  *, positions, cache=None, decode=False, impl="auto", capacity=0):
+                  *, positions, cache=None, decode=False, impl="auto", capacity=0,
+                  lengths=None):
     """One invocation of the shared attention block with LoRA deltas."""
     h = dense(shared["in_proj"], jnp.concatenate([x, x0], axis=-1))
     hin = _norm_apply(cfg, shared["norm1"], h)
@@ -124,15 +125,21 @@ def _shared_block(shared, lora_q, lora_k, lora_v, lora_gate, x, x0, cfg: ModelCo
     groups = a.num_heads // a.num_kv_heads
     new_cache = None
     if decode:
+        from repro.models.attention import _per_slot
+
+        bsz = q.shape[0]
         cap = cache.k.shape[2]
-        slot = jnp.mod(cache.length, cap)
-        nk = jax.lax.dynamic_update_slice(cache.k, k.astype(cache.k.dtype), (0, 0, slot, 0))
-        nv = jax.lax.dynamic_update_slice(cache.v, v.astype(cache.v.dtype), (0, 0, slot, 0))
-        nlen = cache.length + 1
+        length = _per_slot(cache.length, bsz)
+        slot = jnp.mod(length, cap)  # [B]
+        upd = jax.vmap(lambda c, x_, s_: jax.lax.dynamic_update_slice(c, x_, (0, s_, 0)))
+        nk = upd(cache.k, k.astype(cache.k.dtype), slot)
+        nv = upd(cache.v, v.astype(cache.v.dtype), slot)
+        nlen = length + 1
         kk = _expand_kv(nk, groups).astype(q.dtype)
         vv = _expand_kv(nv, groups).astype(q.dtype)
         scores = jnp.einsum("bhsd,bhtd->bhst", q, kk).astype(jnp.float32) / _math.sqrt(a.head_dim)
-        valid = jax.lax.broadcasted_iota(jnp.int32, (1, 1, 1, cap), 3) < jnp.minimum(nlen, cap)
+        valid = (jax.lax.broadcasted_iota(jnp.int32, (1, 1, 1, cap), 3)
+                 < jnp.minimum(nlen, cap)[:, None, None, None])
         scores = jnp.where(valid, scores, -jnp.inf)
         w = jax.nn.softmax(scores, axis=-1)
         out = jnp.einsum("bhst,bhtd->bhsd", w.astype(vv.dtype), vv)
@@ -144,7 +151,7 @@ def _shared_block(shared, lora_q, lora_k, lora_v, lora_gate, x, x0, cfg: ModelCo
                         scale=1.0 / _math.sqrt(a.head_dim), causal=True,
                         window=a.sliding_window, impl=impl)
         if capacity:
-            new_cache = prefill_kv_cache(k, v, a, capacity)
+            new_cache = prefill_kv_cache(k, v, a, capacity, lengths)
     y = dense(shared["attn"]["wo"], _unheads(out))
     h = h + y
     hin = _norm_apply(cfg, shared["norm2"], h)
@@ -233,7 +240,7 @@ def init_zamba_caches(batch: int, cfg: ModelConfig, capacity: int) -> ZambaCache
         mamba_tail=stackn(trailing) if trailing else None,
         attn=caches,
         x0_tok=None,
-        pos=jnp.zeros((), jnp.int32),
+        pos=jnp.zeros((batch,), jnp.int32),
     )
 
 
@@ -242,7 +249,9 @@ def zamba_decode_step(params, token, caches: ZambaCaches, cfg: ModelConfig):
     x0 = params["embed"]["table"].astype(cd)[token]  # [B, 1, C]
     x = x0
     b = x.shape[0]
-    positions = jnp.broadcast_to(caches.pos, (b, 1))
+    from repro.models.transformer import _decode_positions
+
+    positions = _decode_positions(caches.pos, b, False)
     shared = params["shared"]
 
     def group_body(x, inp):
@@ -280,9 +289,15 @@ def zamba_decode_step(params, token, caches: ZambaCaches, cfg: ModelConfig):
 
 
 def zamba_prefill(params, batch, cfg: ModelConfig, capacity: int, *, impl: str = "auto"):
-    """Prompt pass collecting mamba states + shared-attn KV caches."""
+    """Prompt pass collecting mamba states + shared-attn KV caches.
+
+    ``batch["lengths"]`` ([B] int32, optional): true prompt lengths for
+    right-padded serving buckets — threaded into the mamba blocks (no-op
+    padded positions) and KV cache packing so carried states match the
+    un-padded prompt (DESIGN.md §4)."""
     cd = jnp.dtype(cfg.compute_dtype)
     tokens = batch["tokens"]
+    lengths = batch.get("lengths")
     x0 = params["embed"]["table"].astype(cd)[tokens]
     x = x0
     positions = text_positions(x.shape[0], x.shape[1])
@@ -292,7 +307,7 @@ def zamba_prefill(params, batch, cfg: ModelConfig, capacity: int, *, impl: str =
         group_params, li = inp
 
         def mamba_body(x, layer):
-            x, st = mamba2_block(layer, x, cfg.ssm, impl="chunked")
+            x, st = mamba2_block(layer, x, cfg.ssm, impl="chunked", lengths=lengths)
             return x, st
 
         x, mstates = jax.lax.scan(mamba_body, x, group_params)
@@ -301,20 +316,24 @@ def zamba_prefill(params, batch, cfg: ModelConfig, capacity: int, *, impl: str =
         lv = {"a": shared["lora_v"]["a"][li], "b": shared["lora_v"]["b"][li]}
         lg = {"a": shared["lora_gate"]["a"][li], "b": shared["lora_gate"]["b"][li]}
         x, cache = _shared_block(shared, lq, lk, lv, lg, x, x0, cfg,
-                                 positions=positions, impl=impl, capacity=capacity)
+                                 positions=positions, impl=impl, capacity=capacity,
+                                 lengths=lengths)
         return x, (mstates, cache)
 
     g = shared["lora_q"]["a"].shape[0]
     x, (groups, attn_caches) = jax.lax.scan(group_body, x, (params["mamba_groups"], jnp.arange(g)))
     if params["mamba_tail"] is not None:
         def tail_body(x, layer):
-            x, st = mamba2_block(layer, x, cfg.ssm, impl="chunked")
+            x, st = mamba2_block(layer, x, cfg.ssm, impl="chunked", lengths=lengths)
             return x, st
 
         x, tail_states = jax.lax.scan(tail_body, x, params["mamba_tail"])
     else:
         tail_states = None
-    x = _norm_apply(cfg, params["final_norm"], x[:, -1:])
+    b, s = tokens.shape
+    from repro.models.transformer import _last_valid
+
+    x = _norm_apply(cfg, params["final_norm"], _last_valid(x, lengths))
     logits = dense(params["lm_head"], x)[:, 0, : cfg.vocab].astype(jnp.float32)
-    return logits, ZambaCaches(
-        groups, tail_states, attn_caches, None, jnp.asarray(tokens.shape[1], jnp.int32))
+    pos = jnp.full((b,), s, jnp.int32) if lengths is None else lengths
+    return logits, ZambaCaches(groups, tail_states, attn_caches, None, pos)

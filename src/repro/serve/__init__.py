@@ -1,3 +1,6 @@
+from repro.serve.cache import ModelSlotCache, SlotCache, insert_slots, slot_axes
 from repro.serve.engine import ServeEngine
+from repro.serve.scheduler import ServeRequest, SlotScheduler
 
-__all__ = ["ServeEngine"]
+__all__ = ["ServeEngine", "ServeRequest", "SlotScheduler", "SlotCache",
+           "ModelSlotCache", "insert_slots", "slot_axes"]

@@ -1,0 +1,124 @@
+"""Slot-indexed state caches for continuous batching (DESIGN.md §4).
+
+A serving **slot** is one batch lane of the engine's persistent cache pool:
+the pool is allocated once (``init_caches(slots, capacity)``) and lives for
+the engine's lifetime; requests are *inserted* into free slots at admission
+and slots are *reset* at retirement. Three ops define the protocol:
+
+  - ``init(slots)``            : fresh pool (or per-request part) pytree
+  - ``insert(pool, part, s)``  : write ``part``'s batch lanes into slots ``s``
+  - ``reset(pool, s)``         : restore slots ``s`` to their init values
+
+Every cache family in this repo — transformer KV (:class:`KVCache`),
+compressed MLA (:class:`MLACache`), FLARE stream (:class:`FlareState`,
+whose dedicated lane ops live in ``core.flare_stream``), and the recurrent
+rwkv/ssm/zamba states — is a pytree whose leaves each carry the batch on
+*some* axis (layer stacking shifts it: ``[L, B, ...]``, zamba's grouped
+mamba states sit at ``[G, per_group, B, ...]``). Rather than hand-writing
+per-family insert/reset, :func:`slot_axes` *discovers* the batch axis of
+every leaf by comparing ``jax.eval_shape`` of the init function at two batch
+sizes — the axis whose extent differs is the slot axis; leaves with no such
+axis are slot-shared and left untouched. Reset is insertion of a freshly
+initialized single-slot part, which is what makes it exact for leaves whose
+init value is not zero (``FlareState.m_max`` must return to -inf).
+
+All ops are jit-safe: slot indices are traced scatter indices, axes are
+static Python ints resolved at trace time.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, List, Optional, Protocol
+
+import jax
+import jax.numpy as jnp
+
+
+class SlotCache(Protocol):
+    """The slot-pool contract the serving engine schedules against."""
+
+    def init(self, slots: int) -> Any: ...
+
+    def insert(self, pool: Any, part: Any, slots: jax.Array) -> Any: ...
+
+    def reset(self, pool: Any, slots: jax.Array) -> Any: ...
+
+    def describe(self) -> str: ...
+
+
+def _slot_axis(small, big) -> Optional[int]:
+    if small.shape == big.shape:
+        return None
+    diffs = [i for i, (a, b) in enumerate(zip(small.shape, big.shape)) if a != b]
+    if len(small.shape) != len(big.shape) or len(diffs) != 1:
+        raise ValueError(
+            f"cannot identify a unique slot axis: {small.shape} vs {big.shape}")
+    return diffs[0]
+
+
+def slot_axes(init_fn: Callable[[int, int], Any], capacity: int) -> List[Optional[int]]:
+    """Per-leaf slot (batch) axes of ``init_fn(batch, capacity)``'s pytree,
+    in flatten order. ``None`` marks a slot-shared leaf.
+
+    Discovery compares abstract shapes at batch sizes 1 and 2 — allocation-
+    free (``jax.eval_shape``) and family-agnostic.
+    """
+    small = jax.tree.leaves(jax.eval_shape(lambda: init_fn(1, capacity)))
+    big = jax.tree.leaves(jax.eval_shape(lambda: init_fn(2, capacity)))
+    return [_slot_axis(a, b) for a, b in zip(small, big)]
+
+
+def insert_slots(pool: Any, part: Any, slots: jax.Array,
+                 axes: List[Optional[int]]) -> Any:
+    """Write ``part``'s slot lanes into ``pool`` at indices ``slots``.
+
+    ``part`` is a cache pytree of the same structure with ``len(slots)``
+    lanes (typically 1 — per-request insertion prefill). Scatter per leaf
+    along its discovered slot axis; slot-shared leaves keep pool's value.
+    """
+    pool_leaves, treedef = jax.tree.flatten(pool)
+    part_leaves, part_def = jax.tree.flatten(part)
+    if treedef != part_def:
+        raise ValueError(f"cache structure mismatch: {treedef} vs {part_def}")
+
+    def one(p, q, ax):
+        if ax is None:
+            return p
+        idx = (slice(None),) * ax + (slots,)
+        return p.at[idx].set(q.astype(p.dtype))
+
+    return jax.tree.unflatten(
+        treedef, [one(p, q, ax) for p, q, ax in zip(pool_leaves, part_leaves, axes)])
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelSlotCache:
+    """:class:`SlotCache` over any model family's ``init_caches`` pytree —
+    KV, MLA, FLARE-stream and recurrent caches all go through this one
+    implementation (axis discovery replaces per-family code)."""
+
+    init_fn: Callable[[int, int], Any]   # (batch, capacity) -> cache pytree
+    capacity: int
+
+    def init(self, slots: int) -> Any:
+        return self.init_fn(slots, self.capacity)
+
+    @property
+    def axes(self) -> List[Optional[int]]:
+        return slot_axes(self.init_fn, self.capacity)
+
+    def insert(self, pool: Any, part: Any, slots: jax.Array) -> Any:
+        return insert_slots(pool, part, slots, self.axes)
+
+    def reset(self, pool: Any, slots: jax.Array) -> Any:
+        """Retirement: reused slots must carry NO trace of the previous
+        request — implemented as insertion of a fresh init part (exact for
+        non-zero init values like FlareState.m_max = -inf)."""
+        return self.insert(pool, self.init(int(slots.shape[0])), slots)
+
+    def describe(self) -> str:
+        shapes = jax.eval_shape(lambda: self.init_fn(1, self.capacity))
+        leaves = jax.tree.leaves(shapes)
+        per_slot = sum(l.size * jnp.dtype(l.dtype).itemsize for l in leaves)
+        return (f"slot-pool[{len(leaves)} leaves, "
+                f"{per_slot / 1e6:.2f} MB/slot @ capacity={self.capacity}]")

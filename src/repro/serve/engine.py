@@ -1,12 +1,28 @@
-"""Batched serving engine: prefill + decode with KV/recurrent caches.
+"""Continuous-batching serving engine: slot-pool state caches, per-request
+insertion prefill, retire-and-admit decode loop (DESIGN.md §4).
 
-Wave-based batching: queued requests are padded to a common prompt length,
-prefilled together, then decoded step-by-step; sequences retire on EOS or
-max_new_tokens (their slots keep decoding but outputs are masked — the
-static-shape-friendly formulation; a production scheduler would swap in new
-requests, which the fixed cache layout here supports via slot reuse).
+The engine owns a **fixed pool of `slots` cache lanes** allocated once
+(`model.init_caches(slots, capacity)`) and persisting across its lifetime.
+Requests are prefilled **individually** (prompt right-padded to a power-of-
+two bucket, true length carried in `batch["lengths"]` so padding never
+enters the caches) and *inserted* into a free slot via the model's
+`prefill_into` contract; every decode step advances all slots at once
+(static shapes, one compiled step function) and finished sequences retire
+immediately — their slot is reset and handed to the next queued request on
+the very next step. Unlike the previous wave-based engine, a retired slot
+never burns decode steps waiting for the slowest member of its wave; decode
+work tracks admitted work, which `stats["slot_utilization"]` reports.
 
-Sampling: greedy or temperature (deterministic per-engine seed).
+Scheduling (FIFO admission, free list, deadlines, latency percentiles) is
+`serve.scheduler.SlotScheduler`; slot insert/reset are the family-agnostic
+`serve.cache` ops. Compilation is bounded: prompt buckets are powers of two
+(O(log max_prompt) prefill variants — `stats["prefill_compiles"]`), decode
+is a single specialization.
+
+Sampling: greedy or temperature (deterministic per-engine seed). Greedy
+outputs are bit-identical to a solo run of each request on the same engine
+geometry (slot lanes are computed independently; pinned by
+tests/test_serve_continuous.py).
 """
 from __future__ import annotations
 
@@ -18,28 +34,50 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.serve.cache import ModelSlotCache
+from repro.serve.scheduler import ServeRequest, SlotScheduler
+
 
 @dataclasses.dataclass
 class Request:
+    """Legacy submit record (kept for API compatibility)."""
     prompt: np.ndarray           # [S] int32
     max_new_tokens: int = 32
     eos_id: int = -1             # -1: never stops early
 
 
 class ServeEngine:
-    def __init__(self, model, params, *, capacity: int = 512, temperature: float = 0.0,
-                 seed: int = 0):
+    def __init__(self, model, params, *, capacity: int = 512, slots: int = 8,
+                 temperature: float = 0.0, seed: int = 0, min_bucket: int = 8):
+        if model.prefill_into is None or model.init_caches is None:
+            raise ValueError(
+                f"{model.cfg.name} (family={model.cfg.family}) has no slot-pool "
+                "serving path (needs init_caches + prefill_into)")
         self.model = model
         self.params = params
         self.capacity = capacity
+        self.slots = slots
         self.temperature = temperature
+        self.min_bucket = min_bucket
         self.key = jax.random.PRNGKey(seed)
-        self._prefill = jax.jit(lambda p, b: model.prefill(p, b, capacity),
-                                static_argnums=())
+
+        self.slot_cache = ModelSlotCache(model.init_caches, capacity)
+        self.pool = self.slot_cache.init(slots)
+        self._prefill_into = jax.jit(
+            lambda p, b, c, s: model.prefill_into(p, b, c, s, capacity=capacity))
         self._decode = jax.jit(model.decode_step)
-        self.queue: list[Request] = []
-        self.stats = {"requests": 0, "tokens_generated": 0, "prefill_s": 0.0,
-                      "decode_s": 0.0, "mixer_backend": self._mixer_backend()}
+        self._reset_slot = jax.jit(self.slot_cache.reset)
+
+        self.sched = SlotScheduler(slots)
+        self._next_rid = 0
+        self._cur_tok = np.zeros(slots, np.int32)  # next token fed per slot
+        self._buckets_used: set[int] = set()
+        self.stats = {
+            "requests": 0, "tokens_generated": 0, "prefill_s": 0.0,
+            "decode_s": 0.0, "decode_steps": 0, "prefill_compiles": 0,
+            "slot_utilization": 0.0, "mixer_backend": self._mixer_backend(),
+            "cache": self.slot_cache.describe(),
+        }
 
     def _mixer_backend(self) -> Optional[str]:
         """The FLARE plan get_model resolved at build (for observability in
@@ -55,54 +93,121 @@ class ServeEngine:
         except Exception:  # pragma: no cover — stats must never break serving
             return None
 
-    def submit(self, prompt, max_new_tokens: int = 32, eos_id: int = -1):
-        self.queue.append(Request(np.asarray(prompt, np.int32), max_new_tokens, eos_id))
+    # ------------------------------------------------------------------
+    # queueing
+    # ------------------------------------------------------------------
+    def submit(self, prompt, max_new_tokens: int = 32, eos_id: int = -1,
+               deadline_s: Optional[float] = None, on_token=None) -> int:
+        """Queue a request; returns its request id. ``on_token`` streams each
+        generated token as ``on_token(rid, token)`` the step it is sampled."""
+        prompt = np.asarray(prompt, np.int32)
+        if prompt.ndim != 1 or prompt.size < 1:
+            raise ValueError("prompt must be a non-empty 1-D token array")
+        if prompt.size > self.capacity:
+            # loud rather than silently evicting from a capacity-bounded KV
+            # pool mid-prefill; capacity is the engine's context budget
+            raise ValueError(f"prompt length {prompt.size} exceeds engine "
+                             f"capacity {self.capacity}")
+        rid = self._next_rid
+        self._next_rid += 1
+        self.sched.submit(ServeRequest(
+            rid=rid, prompt=prompt, max_new_tokens=max_new_tokens,
+            eos_id=eos_id, deadline_s=deadline_s, on_token=on_token,
+            submit_t=time.time()))
+        return rid
 
-    def _sample(self, logits: jax.Array) -> jax.Array:
+    # ------------------------------------------------------------------
+    # the continuous loop
+    # ------------------------------------------------------------------
+    def _bucket(self, n: int) -> int:
+        b = self.min_bucket
+        while b < n:
+            b *= 2
+        return b
+
+    def _sample(self, logits: jax.Array) -> np.ndarray:
         if self.temperature <= 0.0:
-            return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+            return np.asarray(jnp.argmax(logits, axis=-1), np.int32)
         self.key, sub = jax.random.split(self.key)
-        return jax.random.categorical(sub, logits / self.temperature).astype(jnp.int32)
+        return np.asarray(
+            jax.random.categorical(sub, logits / self.temperature), np.int32)
 
-    def run_wave(self, max_batch: int = 8) -> list[np.ndarray]:
-        """Serve up to max_batch queued requests; returns generated ids."""
-        wave, self.queue = self.queue[:max_batch], self.queue[max_batch:]
-        if not wave:
-            return []
-        b = len(wave)
-        max_prompt = max(len(r.prompt) for r in wave)
-        max_new = max(r.max_new_tokens for r in wave)
-        # left-pad prompts with token 0 so the *last* position is real for all
-        prompts = np.zeros((b, max_prompt), np.int32)
-        for i, r in enumerate(wave):
-            prompts[i, max_prompt - len(r.prompt):] = r.prompt
+    def _emit(self, req: ServeRequest, token: int, now: float) -> bool:
+        """Record one generated token; returns True when the request is done."""
+        req.tokens.append(token)
+        if req.first_token_t is None:
+            req.first_token_t = now
+        if req.on_token is not None:
+            req.on_token(req.rid, token)
+        self.stats["tokens_generated"] += 1
+        return token == req.eos_id or len(req.tokens) >= req.max_new_tokens
 
-        t0 = time.time()
-        logits, caches = self._prefill(self.params, {"tokens": jnp.asarray(prompts)})
-        self.stats["prefill_s"] += time.time() - t0
+    def _retire(self, slot: int, now: float) -> None:
+        self.sched.retire(slot, now)
+        # leave NO state behind for the slot's next tenant (FlareState.m_max
+        # must return to -inf etc.); a single-lane reset compiles once
+        self.pool = self._reset_slot(self.pool, jnp.asarray([slot]))
+        self._cur_tok[slot] = 0
 
-        outputs = [[] for _ in range(b)]
-        done = np.zeros(b, bool)
-        tok = self._sample(logits)
-        t0 = time.time()
-        for step in range(max_new):
-            for i, r in enumerate(wave):
-                if not done[i]:
-                    t = int(tok[i])
-                    outputs[i].append(t)
-                    if t == r.eos_id or len(outputs[i]) >= r.max_new_tokens:
-                        done[i] = True
-            if done.all():
-                break
-            logits, caches = self._decode(self.params, tok[:, None], caches)
-            tok = self._sample(logits)
-        self.stats["decode_s"] += time.time() - t0
-        self.stats["requests"] += b
-        self.stats["tokens_generated"] += sum(len(o) for o in outputs)
-        return [np.asarray(o, np.int32) for o in outputs]
+    def _admit(self) -> None:
+        for req, slot in self.sched.admit(time.time()):
+            n = len(req.prompt)
+            bucket = self._bucket(n)
+            tokens = np.zeros((1, bucket), np.int32)
+            tokens[0, :n] = req.prompt  # right-padded: positions stay exact
+            batch = {"tokens": jnp.asarray(tokens),
+                     "lengths": jnp.asarray([n], jnp.int32)}
+            t0 = time.time()
+            logits, self.pool = self._prefill_into(
+                self.params, batch, self.pool, jnp.asarray([slot]))
+            self._buckets_used.add(bucket)
+            tok = int(self._sample(logits)[0])  # blocks: prefill has executed
+            now = time.time()
+            self.stats["prefill_s"] += now - t0
+            self.stats["requests"] += 1
+            if self._emit(req, tok, now):
+                self._retire(slot, now)
+            else:
+                self._cur_tok[slot] = tok
 
-    def run_all(self, max_batch: int = 8) -> list[np.ndarray]:
-        out = []
-        while self.queue:
-            out.extend(self.run_wave(max_batch))
-        return out
+    def step(self) -> bool:
+        """Admit queued work into free slots, run ONE decode step across the
+        pool, retire finished sequences. Returns True while work remains."""
+        self._admit()
+        if self.sched.running:
+            t0 = time.time()
+            logits, self.pool = self._decode(
+                self.params, jnp.asarray(self._cur_tok[:, None]), self.pool)
+            toks = self._sample(logits)
+            now = time.time()
+            self.stats["decode_s"] += now - t0
+            self.stats["decode_steps"] += 1
+            self.sched.note_decode_step()
+            for slot, req in list(self.sched.running.items()):
+                tok = int(toks[slot])
+                if self._emit(req, tok, now):
+                    self._retire(slot, now)
+                else:
+                    self._cur_tok[slot] = tok
+        self._refresh_stats()
+        return self.sched.has_work()
+
+    def _refresh_stats(self) -> None:
+        self.stats["prefill_compiles"] = len(self._buckets_used)
+        self.stats.update(self.sched.stats())
+
+    # ------------------------------------------------------------------
+    # convenience drivers
+    # ------------------------------------------------------------------
+    def run_all(self, max_batch: Optional[int] = None) -> list[np.ndarray]:
+        """Serve the queue to completion; returns generated ids for the
+        requests resolved by this call, in submission order (dropped
+        requests yield empty arrays). ``max_batch`` is accepted for backward
+        compatibility — concurrency is the engine's ``slots``."""
+        seen = {r.rid for r in self.sched.finished + self.sched.dropped}
+        while self.step():
+            pass
+        new = [r for r in self.sched.finished + self.sched.dropped
+               if r.rid not in seen]
+        return [np.asarray(r.tokens, np.int32)
+                for r in sorted(new, key=lambda r: r.rid)]

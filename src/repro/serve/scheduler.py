@@ -1,0 +1,116 @@
+"""Slot scheduler for the continuous-batching engine (DESIGN.md §4).
+
+Pure host-side bookkeeping — no jax. The engine owns the device pool; the
+scheduler owns *which request lives in which slot*:
+
+  - **FIFO admission**: waiting requests are admitted into free slots in
+    submission order, every step. Deterministic by construction (no
+    randomness, no reordering), which the reproducibility tests pin.
+  - **Slot free-list**: retirement returns a slot to the free list; the
+    lowest-numbered free slot is always assigned next.
+  - **Per-request deadlines**: a request whose deadline expires while still
+    queued is dropped at admission time (never occupies a slot); an admitted
+    request always runs to completion.
+  - **Stats**: per-request latencies (total + first-token) for p50/p99, and
+    per-decode-step slot-occupancy samples for the utilization stat the
+    no-idle-waste acceptance check reads.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Callable, Dict, List, Optional, Tuple
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class ServeRequest:
+    rid: int
+    prompt: np.ndarray                # [S] int32
+    max_new_tokens: int = 32
+    eos_id: int = -1                  # -1: never stops early
+    deadline_s: Optional[float] = None  # relative to submit_t; None = never
+    on_token: Optional[Callable[[int, int], None]] = None  # (rid, token)
+    submit_t: float = 0.0
+    # runtime bookkeeping (engine/scheduler owned)
+    slot: Optional[int] = None
+    tokens: List[int] = dataclasses.field(default_factory=list)
+    admit_t: Optional[float] = None
+    first_token_t: Optional[float] = None
+    finish_t: Optional[float] = None
+    dropped: bool = False
+
+    def expired(self, now: float) -> bool:
+        return self.deadline_s is not None and now - self.submit_t > self.deadline_s
+
+
+class SlotScheduler:
+    def __init__(self, num_slots: int):
+        if num_slots < 1:
+            raise ValueError("need at least one slot")
+        self.num_slots = num_slots
+        self.free: List[int] = list(range(num_slots))
+        self.waiting: deque[ServeRequest] = deque()
+        self.running: Dict[int, ServeRequest] = {}
+        self.finished: List[ServeRequest] = []
+        self.dropped: List[ServeRequest] = []
+        self.admission_log: List[Tuple[int, int]] = []  # (rid, slot)
+        self._util: List[int] = []  # active slots per decode step
+
+    # -- queue ------------------------------------------------------------
+    def submit(self, req: ServeRequest) -> None:
+        self.waiting.append(req)
+
+    def admit(self, now: float) -> List[Tuple[ServeRequest, int]]:
+        """Pop waiting requests into free slots, FIFO. Expired-deadline
+        requests are dropped without consuming a slot."""
+        admitted = []
+        while self.waiting and self.free:
+            req = self.waiting.popleft()
+            if req.expired(now):
+                req.dropped = True
+                req.finish_t = now
+                self.dropped.append(req)
+                continue
+            slot = self.free.pop(0)  # lowest free slot — deterministic
+            req.slot = slot
+            req.admit_t = now
+            self.running[slot] = req
+            self.admission_log.append((req.rid, slot))
+            admitted.append((req, slot))
+        return admitted
+
+    def retire(self, slot: int, now: float) -> ServeRequest:
+        req = self.running.pop(slot)
+        req.finish_t = now
+        self.finished.append(req)
+        self.free.append(slot)
+        self.free.sort()
+        return req
+
+    def has_work(self) -> bool:
+        return bool(self.waiting or self.running)
+
+    # -- stats ------------------------------------------------------------
+    def note_decode_step(self) -> None:
+        self._util.append(len(self.running))
+
+    def stats(self) -> dict:
+        done = [r for r in self.finished if r.finish_t is not None]
+        total = [r.finish_t - r.submit_t for r in done]
+        first = [r.first_token_t - r.submit_t for r in done
+                 if r.first_token_t is not None]
+        pct = lambda xs, q: float(np.percentile(xs, q)) if xs else float("nan")
+        util = float(np.mean(self._util) / self.num_slots) if self._util else 0.0
+        return {
+            "finished": len(self.finished),
+            "dropped": len(self.dropped),
+            "waiting": len(self.waiting),
+            "running": len(self.running),
+            "latency_p50_s": pct(total, 50),
+            "latency_p99_s": pct(total, 99),
+            "first_token_p50_s": pct(first, 50),
+            "first_token_p99_s": pct(first, 99),
+            "slot_utilization": util,
+        }
