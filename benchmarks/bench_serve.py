@@ -5,6 +5,12 @@ Enters the tracked perf trajectory (BENCH_<tag>.json) with rows per arch:
     serve/<arch>/tok_s        us_per_call = wall us per generated token,
                               derived carries tok/s, p50/p99 latency (ms),
                               slot utilization and decode-step count.
+    serve/<arch>/paged_tok_s  the block-paged pool (DESIGN.md §4) against a
+                              dense pool of the SAME byte budget: derived
+                              carries admitted-slot peaks (paged vs dense),
+                              pool geometry/quant, and analytic HBM read
+                              bytes per decode step for both layouts — the
+                              IO the gather-decode kernel saves.
 
 Workload: a seeded mixed-length batch of requests with staggered
 max_new_tokens (exactly the shape that made the old wave engine waste
@@ -23,11 +29,19 @@ from benchmarks.common import emit
 from repro.configs import get_smoke_config
 from repro.models.api import get_model
 from repro.serve.engine import ServeEngine
+from repro.serve.pool import PagedModelCache
 
 ARCHS = ("flare_lm", "qwen2_1_5b", "rwkv6_3b")
+# KV-family archs whose pool memory (not compute) caps concurrency — the
+# paged rows demonstrate tokens-not-slots admission on these
+ARCHS_PAGED = ("qwen2_1_5b", "minicpm3_4b")
 SLOTS = 4
 CAPACITY = 64
 REQUESTS = 12
+PAGED_BLOCK = 8
+PAGED_QUANT = "int8"
+DENSE_SLOTS = 2      # the byte-budget yardstick: a dense pool of 2 slots
+PAGED_SLOTS = 8      # lane count the paged pool may fill within that budget
 
 
 def _bench_arch(arch: str, requests: int) -> None:
@@ -60,11 +74,81 @@ def _bench_arch(arch: str, requests: int) -> None:
          backend=backend)
 
 
+def _workload(engine: ServeEngine, vocab: int, requests: int) -> None:
+    rng = np.random.default_rng(0)
+    lens = rng.integers(4, 17, requests)
+    max_new = rng.integers(4, 17, requests)
+    for i in range(requests):
+        engine.submit(rng.integers(0, vocab, lens[i]),
+                      max_new_tokens=int(max_new[i]))
+
+
+def _drain(engine: ServeEngine):
+    """Warm compile caches on the first step, then time the drain. Returns
+    (wall_s, timed tokens, mean mapped blocks per decode step or None)."""
+    engine.step()
+    warm_toks = engine.stats["tokens_generated"]
+    mapped = []
+    t0 = time.time()
+    while engine.step():
+        if engine.paged:
+            mapped.append(engine.alloc.mapped_blocks())
+    dt = time.time() - t0
+    toks = engine.stats["tokens_generated"] - warm_toks
+    return dt, toks, (float(np.mean(mapped)) if mapped else None)
+
+
+def _bench_paged_arch(arch: str, requests: int) -> None:
+    """Paged vs dense at a FIXED pool byte budget (DENSE_SLOTS x CAPACITY
+    dense tokens): the paged pool spends the same bytes on quantized blocks
+    and admits by token availability, so it runs more concurrent slots."""
+    cfg = get_smoke_config(arch)
+    model = get_model(cfg, seq_len_hint=CAPACITY)
+    params = model.init(jax.random.PRNGKey(0))
+    acct = PagedModelCache(model.init_caches, CAPACITY,
+                           pool_tokens=PAGED_BLOCK, block=PAGED_BLOCK,
+                           quant=PAGED_QUANT)
+    tb_paged, tb_dense = acct.token_bytes_paged(), acct.token_bytes_dense()
+    budget_bytes = DENSE_SLOTS * CAPACITY * tb_dense
+    pool_tokens = int(budget_bytes // tb_paged) // PAGED_BLOCK * PAGED_BLOCK
+
+    # coalescing on BOTH engines: the row isolates paging (token-granular
+    # admission + block storage), not prefill batching
+    dense = ServeEngine(model, params, capacity=CAPACITY, slots=DENSE_SLOTS,
+                        seed=0, coalesce_prefill=True)
+    _workload(dense, cfg.vocab, requests)
+    dense_dt, dense_toks, _ = _drain(dense)
+
+    paged = ServeEngine(model, params, capacity=CAPACITY, slots=PAGED_SLOTS,
+                        seed=0, pool_tokens=pool_tokens, kv_quant=PAGED_QUANT,
+                        block_size=PAGED_BLOCK, coalesce_prefill=True)
+    _workload(paged, cfg.vocab, requests)
+    dt, toks, mean_mapped = _drain(paged)
+
+    s = paged.stats
+    # per-decode-step cache read traffic: a dense pool streams every lane's
+    # full capacity; the paged gather-decode kernel reads only mapped blocks
+    dense_rd = DENSE_SLOTS * CAPACITY * tb_dense
+    paged_rd = (mean_mapped or 0.0) * PAGED_BLOCK * tb_paged
+    emit(f"serve/{arch}/paged_tok_s", dt * 1e6 / max(toks, 1),
+         f"tok_s={toks / dt:.1f};dense_tok_s={dense_toks / dense_dt:.1f};"
+         f"admitted={s['admitted_peak']};dense_admitted={dense.stats['admitted_peak']};"
+         f"pool_tokens={pool_tokens};budget_MB={budget_bytes / 1e6:.2f};"
+         f"quant={PAGED_QUANT};block={PAGED_BLOCK};"
+         f"pages_appended={s['pool']['pages_appended']};"
+         f"coalesced={s['coalesced_prefills']};"
+         f"hbm_rd_B_per_step={paged_rd:.0f};dense_rd_B_per_step={dense_rd:.0f};"
+         f"util={s['slot_utilization']:.2f}",
+         backend=s["mixer_backend"])
+
+
 def run() -> None:
     smoke = os.environ.get("REPRO_BENCH_SERVE_SMOKE") == "1"
     archs = ARCHS[:1] if smoke else ARCHS
     for arch in archs:
         _bench_arch(arch, 4 if smoke else REQUESTS)
+    for arch in ARCHS_PAGED[:1] if smoke else ARCHS_PAGED:
+        _bench_paged_arch(arch, 6 if smoke else REQUESTS)
 
 
 if __name__ == "__main__":

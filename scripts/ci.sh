@@ -15,7 +15,11 @@ echo "== policy-resolution smoke (backend x policy eligibility) =="
 # canonical policy (bidi/causal x infer/train) has no eligible backend.
 # (-W: runpy warns that repro.core already imported dispatch — benign; the
 # __main__ stub delegates to the canonical module instance)
-python -W "ignore::RuntimeWarning" -m repro.core.dispatch --list
+dispatch_list="$(python -W "ignore::RuntimeWarning" -m repro.core.dispatch --list)"
+echo "$dispatch_list"
+# the paged serve pool's kernel must stay policy-addressable (DESIGN.md §4)
+echo "$dispatch_list" | grep -q "^paged " \
+    || { echo "ERROR: 'paged' backend missing from the registry"; exit 1; }
 
 echo "== fast tier (pytest -m 'not slow') =="
 python -m pytest -x -q -m "not slow"
@@ -29,7 +33,16 @@ python -m pytest -x -q tests/test_kernels.py tests/test_packed.py \
 echo "== continuous-batching serve smoke =="
 # slot-pool engine end-to-end on the FLARE-LM smoke config (DESIGN.md §4)
 python -m repro.launch.serve --arch flare_lm --smoke --requests 4 --max-new 8
-# one-row serving benchmark through the harness contract
+# one-row serving benchmark through the harness contract (includes a paged
+# row: admitted-slot + HBM-bytes columns at a fixed byte budget)
 REPRO_BENCH_TAG=none REPRO_BENCH_SERVE_SMOKE=1 python -m benchmarks.run serve
+
+echo "== paged-pool smoke (DESIGN.md §4 'Paged pool') =="
+# a pool small enough (48 tokens = 6 blocks, vs ~4 pages/request worst
+# case) to force page-granular admission backpressure, while max-new
+# pushes every request across at least one block boundary (page appends)
+python -m repro.launch.serve --arch qwen2_1_5b --smoke --requests 6 \
+    --max-new 12 --capacity 32 --slots 4 --pool-tokens 48 --block-size 8 \
+    --kv-quant int8 --coalesce
 
 echo "CI OK"

@@ -11,10 +11,11 @@ from repro.backends import (  # noqa: F401  (import for registration side effect
     causal,
     materialized,
     packed,
+    paged,
     pallas,
     sdpa,
     seqparallel,
 )
 
-__all__ = ["autotune", "causal", "materialized", "packed", "pallas", "sdpa",
-           "seqparallel"]
+__all__ = ["autotune", "causal", "materialized", "packed", "paged", "pallas",
+           "sdpa", "seqparallel"]

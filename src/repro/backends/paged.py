@@ -1,0 +1,80 @@
+"""``paged`` backend: the FLARE mixer with its encode stage executed by the
+block-paged gather-decode Pallas kernel (repro.kernels.paged_attention).
+
+FLARE's encode — M latent queries soft-attending over the N tokens — is
+exactly the paged kernel's G=M case, so the same kernel that serves the
+slot pool's gqa/mla decode reads also runs the FLARE mixer straight off
+block storage. Registered here against the MixerPolicy capability API it
+is addressable with zero call-site changes (``MixerPolicy(backends=
+("paged",))``); dense call sites page their K/V on the fly (identity page
+table), the serving pool hands the kernel its real page table.
+
+Bidirectional/forward-only: the decode stage (softmax over M latents per
+token) is a cheap dense einsum — the O(N) HBM traffic is all in encode.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.dispatch import (
+    Capabilities,
+    MixerBackend,
+    MixerPlan,
+    MixerShape,
+    register,
+)
+
+DEFAULT_BLOCK = 16
+
+
+def _plan(shape: MixerShape, mesh, dtype) -> MixerPlan:
+    return MixerPlan("paged", {"block": min(DEFAULT_BLOCK, shape.tokens)})
+
+
+def pack_pages(x, block: int):
+    """[B, H, N, D] -> ([B*P, block, H, D] pages, [B, P] identity page table).
+    The on-the-fly paging dense call sites use; the serving pool already
+    holds this layout."""
+    b, h, n, d = x.shape
+    p = -(-n // block)
+    xt = jnp.moveaxis(x, 1, 2)  # [B, N, H, D]
+    pad = p * block - n
+    if pad:
+        xt = jnp.pad(xt, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    pages = xt.reshape(b * p, block, h, d)
+    pt = jnp.arange(b * p, dtype=jnp.int32).reshape(b, p)
+    return pages, pt
+
+
+def _run(plan: MixerPlan, q, k, v):
+    from repro.kernels.paged_attention import paged_attention
+
+    b, h, n, d = k.shape
+    m = q.shape[1]
+    block = plan.params.get("block", DEFAULT_BLOCK)
+    kp, pt = pack_pages(k, block)
+    vp, _ = pack_pages(v, block)
+    lengths = jnp.full((b,), n, jnp.int32)
+    qb = jnp.broadcast_to(q.astype(k.dtype)[None], (b, h, m, d))
+    z = paged_attention(qb, kp, vp, pt, lengths, scale=1.0)  # encode [B,H,M,D]
+    # decode: per-token softmax over the M latents (paper Fig. 3, 2nd SDPA)
+    s = jnp.einsum("hmd,bhnd->bhmn", q.astype(jnp.float32),
+                   k.astype(jnp.float32))
+    w = jax.nn.softmax(s, axis=2)
+    return jnp.einsum("bhmn,bhmd->bhnd", w.astype(z.dtype), z).astype(v.dtype)
+
+
+register(MixerBackend(
+    name="paged",
+    caps=Capabilities(bidirectional=True, causal=False,
+                      device_kinds=("cpu", "tpu"),
+                      dtypes=("float32", "bfloat16"), grads=False),
+    plan=_plan,
+    run=_run,
+    # the win is reading block-paged serving state without densifying; on a
+    # dense call site it is just another fused encode — keep it named-only
+    # (never the "auto" pick) like the other serving-oriented forms
+    score=lambda shape, device: 1.0 if device == "tpu" else 0.5,
+    doc="FLARE encode via the block-paged gather-decode kernel (serve pool)",
+))

@@ -1,0 +1,183 @@
+"""Pallas gather-decode attention over block-paged K/V storage
+(DESIGN.md §4 "Paged pool").
+
+The serve-side paged pool (`repro.serve.pool`) stores token-axis cache
+leaves as ``[num_blocks(+trash), block, H, D]`` physical pages addressed
+through a per-slot page table. At high slot counts, decode throughput is
+HBM-bound on cache reads (FlashAttention's IO framing — PAPERS.md): a
+dense pool streams ``slots x capacity`` rows per step whether or not they
+hold tokens, while this kernel DMAs **only the pages a slot has mapped**
+— the page table and lengths ride in scalar-prefetch memory
+(``pltpu.PrefetchScalarGridSpec``) so each grid step's BlockSpec index_map
+picks the physical page to fetch, vLLM-style.
+
+Schedule: grid ``(B, H, P)`` with the page dimension innermost; running
+(max, den, acc) flash scratch across pages; rows past ``lengths[b]`` are
+masked (the same validity contract as ``models.attention
+.decode_valid_mask``, so garbage in partially written or still-unmapped
+pages — which the pool points at the trash sink — is invisible).
+
+The query axis G generalizes the consumer:
+  - G = 1:  gqa/mla single-token decode reads (per-head query),
+  - G = M:  the FLARE **encode** — M latent queries attending over the
+    token set is exactly this kernel, which is how the ``paged`` mixer
+    backend (repro.backends.paged) runs the encode stage straight off
+    block-paged storage.
+
+CPU/GPU run in interpret mode (ci parity tests); TPU compiles. TPU layout
+notes: D should be 128-lane padded and ``block`` a multiple of 8 — the
+wrapper pads D (and G to a sublane multiple) but cannot repack pages, so
+pick ``block_size`` accordingly when targeting TPU.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+LANE = 128
+
+
+def _vmem(shape, dtype):
+    from jax.experimental.pallas import tpu as pltpu
+
+    return pltpu.VMEM(shape, dtype)
+
+
+def _paged_kernel(pt_ref, len_ref, q_ref, k_ref, v_ref, o_ref,
+                  max_scr, den_scr, acc_scr, *, block, pages):
+    b = pl.program_id(0)
+    pi = pl.program_id(2)
+
+    @pl.when(pi == 0)
+    def _init():
+        max_scr[...] = jnp.full_like(max_scr, NEG_INF)
+        den_scr[...] = jnp.zeros_like(den_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0, 0]            # [G, D]
+    k = k_ref[0, :, 0, :]      # [block, D] — the page the index_map gathered
+    v = v_ref[0, :, 0, :]
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32)  # [G, block]
+    # rows at global index >= lengths[b] are unwritten/garbage (incl. the
+    # whole trash sink a not-yet-mapped page points at)
+    tok = pi * block + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+    ok = tok < len_ref[b]
+    s = jnp.where(ok, s, NEG_INF)
+
+    m_prev = max_scr[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+    alpha = jnp.exp(m_prev - m_new)
+    p = jnp.where(ok, jnp.exp(s - m_new[:, None]), 0.0)
+    den_scr[...] = den_scr[...] * alpha + jnp.sum(p, axis=-1)
+    acc_scr[...] = acc_scr[...] * alpha[:, None] + jax.lax.dot_general(
+        p.astype(v.dtype), v, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    max_scr[...] = m_new
+
+    @pl.when(pi == pages - 1)
+    def _finish():
+        den = jnp.maximum(den_scr[...], 1e-30)
+        o_ref[0, 0] = (acc_scr[...] / den[:, None]).astype(o_ref.dtype)
+
+
+def paged_attention_pallas(
+    q: jax.Array,          # [B, H, G, D]
+    k_pages: jax.Array,    # [NB, block, H, D] physical pages (+ trash row)
+    v_pages: jax.Array,    # [NB, block, H, D]
+    page_table: jax.Array,  # [B, P] int32 physical ids (trash for unmapped)
+    lengths: jax.Array,    # [B] int32 valid tokens per lane
+    *,
+    scale: float = 1.0,
+    interpret: bool = False,
+) -> jax.Array:
+    """Softmax(scale * q k^T over the mapped, valid tokens) @ v, reading
+    K/V page-by-page through the page table. Lanes with length 0 return 0."""
+    from jax.experimental.pallas import tpu as pltpu
+
+    bsz, h, g, d = q.shape
+    block = k_pages.shape[1]
+    pages = page_table.shape[1]
+    if scale != 1.0:
+        q = q * jnp.asarray(scale, q.dtype)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(bsz, h, pages),
+        in_specs=[
+            pl.BlockSpec((1, 1, g, d), lambda b, hh, p, pt, ln: (b, hh, 0, 0)),
+            pl.BlockSpec((1, block, 1, d),
+                         lambda b, hh, p, pt, ln: (pt[b, p], 0, hh, 0)),
+            pl.BlockSpec((1, block, 1, d),
+                         lambda b, hh, p, pt, ln: (pt[b, p], 0, hh, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, g, d),
+                               lambda b, hh, p, pt, ln: (b, hh, 0, 0)),
+        scratch_shapes=[
+            _vmem((g,), jnp.float32),
+            _vmem((g,), jnp.float32),
+            _vmem((g, d), jnp.float32),
+        ],
+    )
+    kernel = functools.partial(_paged_kernel, block=block, pages=pages)
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((bsz, h, g, d), v_pages.dtype),
+        interpret=interpret,
+    )(page_table, lengths, q, k_pages, v_pages)
+
+
+def _pad_axis(x: jax.Array, axis: int, multiple: int) -> jax.Array:
+    pad = (-x.shape[axis]) % multiple
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+def paged_attention(
+    q: jax.Array,          # [B, H, G, D]
+    k_pages: jax.Array,    # [NB, block, H, D]
+    v_pages: jax.Array,    # [NB, block, H, D]
+    page_table: jax.Array,  # [B, P] int32
+    lengths: jax.Array,    # [B] int32
+    *,
+    scale: float = 1.0,
+    interpret: Optional[bool] = None,
+) -> jax.Array:
+    """Padding wrapper (ops.py idiom): D to the 128-lane boundary, G to a
+    sublane multiple; zero columns don't change q.k scores, padded output
+    rows/cols are sliced away. Pages themselves are never repacked."""
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    bsz, h, g, d = q.shape
+    qp = _pad_axis(_pad_axis(q, 3, LANE), 2, 8)
+    kp = _pad_axis(k_pages, 3, LANE)
+    vp = _pad_axis(v_pages, 3, LANE)
+    o = paged_attention_pallas(qp, kp, vp, page_table.astype(jnp.int32),
+                               lengths.astype(jnp.int32), scale=scale,
+                               interpret=interpret)
+    return o[:, :, :g, :d]
+
+
+def paged_attention_ref(q, k_pages, v_pages, page_table, lengths, *,
+                        scale: float = 1.0) -> jax.Array:
+    """jnp oracle: gather the dense view, mask index >= length, soft-max.
+    Mirrors what the serve-side views.gather_leaf + decode read compute."""
+    k = k_pages[page_table]  # [B, P, block, H, D]
+    v = v_pages[page_table]
+    bsz, p, blk, h, d = k.shape
+    k = k.reshape(bsz, p * blk, h, d).transpose(0, 2, 1, 3)  # [B, H, T, D]
+    v = v.reshape(bsz, p * blk, h, d).transpose(0, 2, 1, 3)
+    s = jnp.einsum("bhgd,bhtd->bhgt", q, k).astype(jnp.float32) * scale
+    tok = jax.lax.broadcasted_iota(jnp.int32, (1, 1, 1, p * blk), 3)
+    s = jnp.where(tok < lengths[:, None, None, None], s, -jnp.inf)
+    w = jax.nn.softmax(s, axis=-1)
+    w = jnp.where(jnp.isnan(w), 0.0, w)  # all-masked lanes -> 0 like the kernel
+    return jnp.einsum("bhgt,bhtd->bhgd", w.astype(v.dtype), v)

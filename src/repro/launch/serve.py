@@ -37,6 +37,18 @@ def main():
                          "requests are dropped at admission)")
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--pool-tokens", type=int, default=None,
+                    help="total pooled KV tokens — switches the engine to the "
+                         "block-paged pool (DESIGN.md §4); admission is then "
+                         "bounded by tokens, not slots")
+    ap.add_argument("--kv-quant", default="none", choices=("none", "int8", "fp8"),
+                    help="paged-pool storage quantization (dequant on read)")
+    ap.add_argument("--block-size", type=int, default=16,
+                    help="paged-pool block size in tokens")
+    ap.add_argument("--coalesce", action="store_true",
+                    help="batch same-bucket admissions into one prefill "
+                         "launch (throughput mode; lanes are no longer "
+                         "bit-identical to solo runs)")
     ap.add_argument("--mixer", default=None,
                     help="FLARE mixer backend preference, comma-separated "
                          "(e.g. 'causal_pallas,causal_stream'); default: auto")
@@ -60,7 +72,10 @@ def main():
     params = model.init(jax.random.PRNGKey(0))
 
     engine = ServeEngine(model, params, capacity=args.capacity, slots=args.slots,
-                         temperature=args.temperature, seed=args.seed)
+                         temperature=args.temperature, seed=args.seed,
+                         pool_tokens=args.pool_tokens, kv_quant=args.kv_quant,
+                         block_size=args.block_size,
+                         coalesce_prefill=args.coalesce)
     print(f"engine: {args.slots} slots, capacity {args.capacity}, "
           f"{engine.stats['cache']}")
 
@@ -100,7 +115,14 @@ def main():
           f"{s['first_token_p50_s'] * 1e3:.1f}/{s['first_token_p99_s'] * 1e3:.1f} ms")
     print(f"slot utilization {s['slot_utilization']:.2f}, "
           f"{s['prefill_compiles']} prefill bucket compiles, "
+          f"{s['coalesced_prefills']} coalesced launches, "
           f"{s['dropped']} dropped")
+    if engine.paged:
+        p = s["pool"]
+        print(f"paged pool: {p['blocks_mapped']}/{p['blocks_total']} blocks "
+              f"mapped (peak {p['blocks_peak_mapped']}), "
+              f"{p['pages_appended']} pages appended at block boundaries, "
+              f"admitted peak {s['admitted_peak']}/{args.slots} slots")
 
 
 if __name__ == "__main__":

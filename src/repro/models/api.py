@@ -56,12 +56,16 @@ class Model:
     plans: Mapping[str, Any] = field(default_factory=dict)
 
 
-def _make_prefill_into(prefill, init_caches):
+def make_prefill_into(prefill, init_caches):
     """Generic insertion prefill: run the family prefill on the request
     batch (right-padded bucket + "lengths"), then scatter the per-request
     cache lanes into the pool at ``slots`` (serve.cache slot-axis discovery
     keeps this family-agnostic). The legacy ``prefill`` contract (mint a
-    fresh full-batch cache) stays untouched as the compat path."""
+    fresh full-batch cache) stays untouched as the compat path — the serve
+    engine builds this same adapter (with a DeprecationWarning) for models
+    that ship only ``prefill``. Paged pools route through
+    ``serve.pool.PagedModelCache.make_prefill_into`` instead (the token
+    leaves land in block storage, not slot lanes — DESIGN.md §4)."""
 
     def prefill_into(params, batch, cache, slots, *, capacity):
         from repro.serve.cache import insert_slots, slot_axes
@@ -185,7 +189,7 @@ def get_model(cfg: ModelConfig, *, policy=None, mesh=None,
             prefill=lm_prefill,
             decode_step=lambda p, tok, c: t.lm_decode_step(p, tok, c, cfg),
             init_caches=lm_caches,
-            prefill_into=_make_prefill_into(lm_prefill, lm_caches),
+            prefill_into=make_prefill_into(lm_prefill, lm_caches),
             plans=plans,
         )
     if fam in ("encdec", "audio"):
@@ -232,7 +236,7 @@ def get_model(cfg: ModelConfig, *, policy=None, mesh=None,
             prefill=rwkv_prefill,
             decode_step=lambda p, tok, c: r.rwkv_decode_step(p, tok, c, cfg),
             init_caches=rwkv_caches,
-            prefill_into=_make_prefill_into(rwkv_prefill, rwkv_caches),
+            prefill_into=make_prefill_into(rwkv_prefill, rwkv_caches),
         )
     if fam == "hybrid":
         from repro.models import zamba as z
@@ -251,7 +255,7 @@ def get_model(cfg: ModelConfig, *, policy=None, mesh=None,
             prefill=zamba_prefill,
             decode_step=lambda p, tok, c: z.zamba_decode_step(p, tok, c, cfg),
             init_caches=zamba_caches,
-            prefill_into=_make_prefill_into(zamba_prefill, zamba_caches),
+            prefill_into=make_prefill_into(zamba_prefill, zamba_caches),
         )
     if fam == "pde":
         from repro.models import pde

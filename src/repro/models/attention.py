@@ -154,6 +154,19 @@ def _per_slot(length: jax.Array, batch: int) -> jax.Array:
     return length
 
 
+def decode_valid_mask(new_len: jax.Array, cap: int) -> jax.Array:
+    """[B] lengths -> [B, 1, 1, cap] bool: cache rows visible to this decode
+    step (index < min(length, cap), per sequence slot).
+
+    This mask is ALSO what makes block-paged decode reads exact: a paged
+    pool (serve.pool, DESIGN.md §4) gathers a slot's pages into the dense
+    layout with garbage in yet-unwritten/unmapped positions, all of which
+    sit at indices >= length and are discarded here. gqa/mla decode and the
+    paged gather-decode kernel's reference share this single definition."""
+    return (jax.lax.broadcasted_iota(jnp.int32, (1, 1, 1, cap), 3)
+            < jnp.minimum(new_len, cap)[:, None, None, None])
+
+
 def init_gqa(key, cfg: AttnConfig, d_model: int, *, param_dtype=jnp.float32) -> dict:
     kq, kk, kv, ko = jax.random.split(key, 4)
     return {
@@ -249,10 +262,7 @@ def gqa_decode(
     vv = _expand_kv(new_v, groups).astype(q.dtype)
     scores = jnp.einsum("bhsd,bhtd->bhst", q, kk).astype(jnp.float32)
     scores = scores / math.sqrt(cfg.head_dim)
-    # valid slots: index < min(length+1, cap), per sequence slot
-    valid = (jax.lax.broadcasted_iota(jnp.int32, (1, 1, 1, cap), 3)
-             < jnp.minimum(new_len, cap)[:, None, None, None])
-    scores = jnp.where(valid, scores, -jnp.inf)
+    scores = jnp.where(decode_valid_mask(new_len, cap), scores, -jnp.inf)
     w = jax.nn.softmax(scores, axis=-1)
     out = jnp.einsum("bhst,bhtd->bhsd", w.astype(vv.dtype), vv)
     y = dense(params["wo"], _unheads(out))
@@ -411,9 +421,7 @@ def mla_decode(
     s_nope = jnp.einsum("bhsr,btr->bhst", q_abs, c_all.astype(x.dtype))
     s_rope = jnp.einsum("bhsd,btd->bhst", q_rope, kr_all.astype(x.dtype))
     scores = (s_nope + s_rope).astype(jnp.float32) * scale
-    valid = (jax.lax.broadcasted_iota(jnp.int32, (1, 1, 1, cap), 3)
-             < jnp.minimum(new_len, cap)[:, None, None, None])
-    scores = jnp.where(valid, scores, -jnp.inf)
+    scores = jnp.where(decode_valid_mask(new_len, cap), scores, -jnp.inf)
     w = jax.nn.softmax(scores, axis=-1)
     ctx = jnp.einsum("bhst,btr->bhsr", w.astype(x.dtype), c_all.astype(x.dtype))  # latent context
     # Absorb W_uv on the way out: v_h = W_uv_h c  =>  out_h = ctx_h @ W_uv_h

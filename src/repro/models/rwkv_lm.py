@@ -115,6 +115,11 @@ def rwkv_prefill(params, batch, cfg: ModelConfig, capacity: int = 0, *, impl: st
 
 
 def rwkv_decode_step(params, token, caches: RWKVCaches, cfg: ModelConfig):
+    # paged-pool serving passes a PagedCacheView; rwkv state has no token
+    # axis so the view degenerates to a dense pass-through (DESIGN.md §4)
+    from repro.serve.pool.views import resolve_cache_view
+
+    caches, writeback = resolve_cache_view(caches)
     cd = jnp.dtype(cfg.compute_dtype)
     x = params["embed"]["table"].astype(cd)[token]  # [B, 1, C]
     x = layernorm(params["ln0"], x)
@@ -127,4 +132,4 @@ def rwkv_decode_step(params, token, caches: RWKVCaches, cfg: ModelConfig):
     x, new_states = jax.lax.scan(body, x, (params["layers"], caches.states))
     x = layernorm(params["final_norm"], x)
     logits = dense(params["lm_head"], x)[:, 0, : cfg.vocab].astype(jnp.float32)
-    return logits, RWKVCaches(new_states, caches.pos + 1)
+    return logits, writeback(RWKVCaches(new_states, caches.pos + 1))

@@ -397,7 +397,15 @@ def _layer_decode(layer, x, cfg: ModelConfig, cache, *, positions, dense_ffn=Fal
 
 
 def lm_decode_step(params, token, caches: LMCaches, cfg: ModelConfig):
-    """One-token decode. token: [B, 1] int32 -> (logits [B, V], caches)."""
+    """One-token decode. token: [B, 1] int32 -> (logits [B, V], caches).
+
+    ``caches`` may also be a :class:`repro.serve.pool.views.PagedCacheView`
+    (the block-paged pool, DESIGN.md §4): decode reads then route through
+    the view adapter — dense gather on entry, single-token write-back on
+    exit — with the decode math below untouched."""
+    from repro.serve.pool.views import resolve_cache_view
+
+    caches, writeback = resolve_cache_view(caches)
     cd = jnp.dtype(cfg.compute_dtype)
     if cfg.inputs_are_embeddings:
         x = token.astype(cd)  # [B, 1, C] embeddings passed directly
@@ -428,7 +436,8 @@ def lm_decode_step(params, token, caches: LMCaches, cfg: ModelConfig):
     else:
         logits = dense(params["lm_head"], x)
     logits = mask_padded_logits(logits[:, 0].astype(jnp.float32), cfg.vocab)
-    return logits[:, : cfg.vocab], LMCaches(new_dense, new_caches, caches.pos + 1)
+    return (logits[:, : cfg.vocab],
+            writeback(LMCaches(new_dense, new_caches, caches.pos + 1)))
 
 
 def lm_prefill(params, batch, cfg: ModelConfig, capacity: int, *, impl: str = "auto",

@@ -245,6 +245,12 @@ def init_zamba_caches(batch: int, cfg: ModelConfig, capacity: int) -> ZambaCache
 
 
 def zamba_decode_step(params, token, caches: ZambaCaches, cfg: ModelConfig):
+    # paged-pool serving passes a PagedCacheView: the shared-attention KV is
+    # gathered from block storage on entry, the written token column is
+    # scattered back on exit; mamba states are dense pass-through
+    from repro.serve.pool.views import resolve_cache_view
+
+    caches, writeback = resolve_cache_view(caches)
     cd = jnp.dtype(cfg.compute_dtype)
     x0 = params["embed"]["table"].astype(cd)[token]  # [B, 1, C]
     x = x0
@@ -285,7 +291,8 @@ def zamba_decode_step(params, token, caches: ZambaCaches, cfg: ModelConfig):
         new_tail = None
     x = _norm_apply(cfg, params["final_norm"], x)
     logits = dense(params["lm_head"], x)[:, 0, : cfg.vocab].astype(jnp.float32)
-    return logits, ZambaCaches(new_groups, new_tail, new_attn, None, caches.pos + 1)
+    return logits, writeback(
+        ZambaCaches(new_groups, new_tail, new_attn, None, caches.pos + 1))
 
 
 def zamba_prefill(params, batch, cfg: ModelConfig, capacity: int, *, impl: str = "auto"):

@@ -24,6 +24,13 @@ init value is not zero (``FlareState.m_max`` must return to -inf).
 
 All ops are jit-safe: slot indices are traced scatter indices, axes are
 static Python ints resolved at trace time.
+
+This module is the **dense** pool: every slot's cache at the engine's full
+capacity. Its paged counterpart is :mod:`repro.serve.pool` (DESIGN.md §4
+"Paged pool"), which reuses the same eval-shape axis discovery (slot axis
+from batch 1 vs 2 — plus a token axis from capacity C vs 2C) to move
+capacity-tracking leaves into block-granular, optionally quantized storage
+sized in tokens rather than slots.
 """
 from __future__ import annotations
 

@@ -1,33 +1,54 @@
 """Continuous-batching serving engine: slot-pool state caches, per-request
 insertion prefill, retire-and-admit decode loop (DESIGN.md §4).
 
-The engine owns a **fixed pool of `slots` cache lanes** allocated once
-(`model.init_caches(slots, capacity)`) and persisting across its lifetime.
-Requests are prefilled **individually** (prompt right-padded to a power-of-
-two bucket, true length carried in `batch["lengths"]` so padding never
-enters the caches) and *inserted* into a free slot via the model's
-`prefill_into` contract; every decode step advances all slots at once
-(static shapes, one compiled step function) and finished sequences retire
-immediately — their slot is reset and handed to the next queued request on
-the very next step. Unlike the previous wave-based engine, a retired slot
-never burns decode steps waiting for the slowest member of its wave; decode
-work tracks admitted work, which `stats["slot_utilization"]` reports.
+The engine owns a **fixed pool of `slots` cache lanes** allocated once and
+persisting across its lifetime. Requests are prefilled (prompt right-padded
+to a power-of-two bucket, true length carried in ``batch["lengths"]`` so
+padding never enters the caches) and *inserted* into a free slot; every
+decode step advances all slots at once (static shapes, one compiled step
+function) and finished sequences retire immediately — their slot is reset
+and handed to the next queued request on the very next step.
 
-Scheduling (FIFO admission, free list, deadlines, latency percentiles) is
-`serve.scheduler.SlotScheduler`; slot insert/reset are the family-agnostic
-`serve.cache` ops. Compilation is bounded: prompt buckets are powers of two
-(O(log max_prompt) prefill variants — `stats["prefill_compiles"]`), decode
-is a single specialization.
+Two pool layouts (DESIGN.md §4):
+
+  - **dense** (default): ``model.init_caches(slots, capacity)`` — every
+    slot's KV/stream cache at the full capacity. Pool memory scales as
+    slots x capacity.
+  - **paged** (``pool_tokens=...``): token-axis leaves live in
+    block-granular, optionally int8/fp8-quantized storage sized in TOKENS
+    (`serve.pool`); a request is admitted only when the allocator can stake
+    its worst-case page count (its prompt bucket is mapped immediately,
+    further pages are appended as decode crosses block boundaries), and
+    retirement returns its pages to the free list. Decode reads route
+    through the ``serve.pool.views.PagedCacheView`` adapter handed to the
+    unchanged ``model.decode_step``. Admission backpressure is therefore in
+    tokens, not slots — the gqa/mla concurrency fix.
+
+Scheduling (FIFO admission with an optional block-availability gate, free
+list, deadlines, latency percentiles) is `serve.scheduler.SlotScheduler`.
+Compilation is bounded: prompt buckets are powers of two and decode is a
+single specialization; ``stats["prefill_compiles"]`` counts the distinct
+(bucket, lanes) prefill variants traced.
+
+Prefill coalescing (``coalesce_prefill=True``): admissions that share a
+bucket in the same scheduling cycle run as ONE batched prefill launch
+(``stats["coalesced_prefills"]``). Off by default: batching changes XLA's
+bf16 reduction grouping, so coalesced lanes are no longer bit-identical to
+a solo run — the default preserves the pinned greedy-parity contract;
+throughput-oriented callers (launch/serve.py --coalesce, bench_serve)
+opt in.
 
 Sampling: greedy or temperature (deterministic per-engine seed). Greedy
 outputs are bit-identical to a solo run of each request on the same engine
-geometry (slot lanes are computed independently; pinned by
-tests/test_serve_continuous.py).
+geometry — for the paged pool too, storage permitting (``kv_quant="none"``;
+int8/fp8 trade exactness for ~2-4x more resident tokens) — pinned by
+tests/test_serve_continuous.py and tests/test_paged_pool.py.
 """
 from __future__ import annotations
 
 import dataclasses
 import time
+import warnings
 from typing import Optional
 
 import jax
@@ -48,34 +69,79 @@ class Request:
 
 class ServeEngine:
     def __init__(self, model, params, *, capacity: int = 512, slots: int = 8,
-                 temperature: float = 0.0, seed: int = 0, min_bucket: int = 8):
-        if model.prefill_into is None or model.init_caches is None:
+                 temperature: float = 0.0, seed: int = 0, min_bucket: int = 8,
+                 pool_tokens: Optional[int] = None, kv_quant: str = "none",
+                 block_size: int = 16, coalesce_prefill: bool = False):
+        prefill_into = model.prefill_into
+        if prefill_into is None and model.prefill is not None \
+                and model.init_caches is not None:
+            # legacy compat: a model that ships only the full-batch `prefill`
+            # contract still serves, through the generic scatter adapter —
+            # mirrors the PR-3 `impl=` deprecation convention
+            warnings.warn(
+                f"{model.cfg.name}: model has no prefill_into — falling back "
+                "to the legacy full-prefill + slot-scatter compat path; "
+                "expose prefill_into (models.api.make_prefill_into) instead "
+                "(DESIGN.md §4)", DeprecationWarning, stacklevel=2)
+            from repro.models.api import make_prefill_into
+
+            prefill_into = make_prefill_into(model.prefill, model.init_caches)
+        if prefill_into is None or model.init_caches is None:
             raise ValueError(
                 f"{model.cfg.name} (family={model.cfg.family}) has no slot-pool "
-                "serving path (needs init_caches + prefill_into)")
+                "serving path (needs init_caches + prefill_into or prefill)")
         self.model = model
         self.params = params
         self.capacity = capacity
         self.slots = slots
         self.temperature = temperature
         self.min_bucket = min_bucket
+        self.coalesce = coalesce_prefill
         self.key = jax.random.PRNGKey(seed)
 
-        self.slot_cache = ModelSlotCache(model.init_caches, capacity)
-        self.pool = self.slot_cache.init(slots)
-        self._prefill_into = jax.jit(
-            lambda p, b, c, s: model.prefill_into(p, b, c, s, capacity=capacity))
+        self.paged = pool_tokens is not None
+        if self.paged:
+            from repro.serve.pool import PagedModelCache
+
+            if model.prefill is None:
+                # the paged insert needs the RAW family prefill (its token
+                # leaves go to block storage, not slot lanes) — the
+                # prefill_into adapter alone cannot feed a paged pool
+                raise ValueError(
+                    f"{model.cfg.name}: the paged pool (pool_tokens=...) "
+                    "needs the family prefill contract (model.prefill)")
+            self.block = block_size
+            self.slot_cache = PagedModelCache(
+                model.init_caches, capacity, pool_tokens=pool_tokens,
+                block=block_size, quant=kv_quant)
+            self.alloc = self.slot_cache.allocator()
+            self._has_paged = bool(self.slot_cache.spec.paged)
+            self.pool = self.slot_cache.init(slots)
+            self._pt = np.full((slots, self.slot_cache.max_pages),
+                               self.slot_cache.trash, np.int32)
+            self._lengths = np.zeros(slots, np.int64)
+            self._leases: dict = {}
+            self._const_view_args = (jnp.asarray(self._pt),
+                                     jnp.zeros(slots, jnp.int32))
+            self._prefill_into = jax.jit(
+                self.slot_cache.make_prefill_into(model.prefill))
+        else:
+            self.slot_cache = ModelSlotCache(model.init_caches, capacity)
+            self.pool = self.slot_cache.init(slots)
+            self._prefill_into = jax.jit(
+                lambda p, b, c, s: prefill_into(p, b, c, s, capacity=capacity))
         self._decode = jax.jit(model.decode_step)
         self._reset_slot = jax.jit(self.slot_cache.reset)
 
         self.sched = SlotScheduler(slots)
         self._next_rid = 0
         self._cur_tok = np.zeros(slots, np.int32)  # next token fed per slot
-        self._buckets_used: set[int] = set()
+        self._buckets_used: set = set()            # (bucket, lanes) traced
         self.stats = {
             "requests": 0, "tokens_generated": 0, "prefill_s": 0.0,
             "decode_s": 0.0, "decode_steps": 0, "prefill_compiles": 0,
-            "slot_utilization": 0.0, "mixer_backend": self._mixer_backend(),
+            "slot_utilization": 0.0, "coalesced_prefills": 0,
+            "admitted_peak": 0, "mixer_backend": self._mixer_backend(),
             "cache": self.slot_cache.describe(),
         }
 
@@ -108,6 +174,15 @@ class ServeEngine:
             # pool mid-prefill; capacity is the engine's context budget
             raise ValueError(f"prompt length {prompt.size} exceeds engine "
                              f"capacity {self.capacity}")
+        if self.paged and self._has_paged:
+            need = self._need_pages(prompt.size, max_new_tokens)
+            if need > self.alloc.num_blocks:
+                # would deadlock the FIFO queue: the head could never stake
+                # its reservation no matter how much retires
+                raise ValueError(
+                    f"request needs {need} pages but the pool only has "
+                    f"{self.alloc.num_blocks} blocks; raise pool_tokens or "
+                    "lower max_new_tokens")
         rid = self._next_rid
         self._next_rid += 1
         self.sched.submit(ServeRequest(
@@ -115,6 +190,55 @@ class ServeEngine:
             eos_id=eos_id, deadline_s=deadline_s, on_token=on_token,
             submit_t=time.time()))
         return rid
+
+    # ------------------------------------------------------------------
+    # paged-pool bookkeeping (all host-side; device work stays in pool/)
+    # ------------------------------------------------------------------
+    def _pages(self, tokens: int) -> int:
+        return -(-min(tokens, self.capacity) // self.block)
+
+    def _need_pages(self, prompt_len: int, max_new: int) -> int:
+        """A request's worst-case page count: its prompt bucket (mapped at
+        admission) or its full decode horizon, whichever is larger. The ONE
+        definition submit's feasibility check, the admission gate and the
+        actual reservation all share — if they ever disagreed, reserve()
+        could raise mid-admission, the OOM the design promises away."""
+        return max(self._pages(self._bucket(prompt_len)),
+                   self._pages(prompt_len + max_new))
+
+    def _can_admit(self, req: ServeRequest) -> bool:
+        """Block-aware admission gate: the allocator must be able to stake
+        the request's worst-case page count (prompt bucket now, decode
+        appends later — the reservation guarantees appends never OOM).
+        Families with no token-axis leaves (flare_lm's O(M) stream state,
+        rwkv) need no pages: their concurrency stays slot-bound.
+
+        ``_pending_pages`` accounts for earlier admissions of the SAME
+        scheduling cycle, whose reservations are taken only after
+        ``sched.admit`` returns — a True here is a commitment."""
+        if not self._has_paged:
+            return True
+        need = self._need_pages(len(req.prompt), req.max_new_tokens)
+        if self.alloc.available() - self._pending_pages < need:
+            return False
+        self._pending_pages += need
+        return True
+
+    def _stake_pages(self, req: ServeRequest, slot: int, bucket: int) -> np.ndarray:
+        """Reserve the request's horizon, map its bucket's pages, point the
+        slot's page table at them. Returns the mapped ids (for the prefill
+        scatter)."""
+        self._lengths[slot] = len(req.prompt)
+        if not self._has_paged:
+            self._leases[slot] = self.alloc.reserve(0)
+            return np.zeros(0, np.int32)
+        bucket_pages = self._pages(bucket)
+        lease = self.alloc.reserve(
+            self._need_pages(len(req.prompt), req.max_new_tokens))
+        ids = self.alloc.map(lease, bucket_pages)
+        self._leases[slot] = lease
+        self._pt[slot, :bucket_pages] = ids
+        return np.asarray(ids, np.int32)
 
     # ------------------------------------------------------------------
     # the continuous loop
@@ -148,36 +272,107 @@ class ServeEngine:
         # must return to -inf etc.); a single-lane reset compiles once
         self.pool = self._reset_slot(self.pool, jnp.asarray([slot]))
         self._cur_tok[slot] = 0
+        if self.paged:
+            # pages (mapped + unused reservation) back to the free list; the
+            # page-table row goes back to the trash sink
+            self.alloc.release(self._leases.pop(slot))
+            self._pt[slot] = self.slot_cache.trash
+            self._lengths[slot] = 0
 
-    def _admit(self) -> None:
-        for req, slot in self.sched.admit(time.time()):
-            n = len(req.prompt)
-            bucket = self._bucket(n)
-            tokens = np.zeros((1, bucket), np.int32)
-            tokens[0, :n] = req.prompt  # right-padded: positions stay exact
-            batch = {"tokens": jnp.asarray(tokens),
-                     "lengths": jnp.asarray([n], jnp.int32)}
-            t0 = time.time()
+    def _prefill_group(self, bucket: int, group) -> None:
+        """One prefill launch for ``group`` = [(req, slot), ...] admissions
+        sharing a bucket (len > 1 only under coalesce_prefill)."""
+        g = len(group)
+        tokens = np.zeros((g, bucket), np.int32)
+        lens = np.empty(g, np.int32)
+        for i, (req, _) in enumerate(group):
+            tokens[i, : len(req.prompt)] = req.prompt  # right-padded: exact
+            lens[i] = len(req.prompt)
+        batch = {"tokens": jnp.asarray(tokens),
+                 "lengths": jnp.asarray(lens, jnp.int32)}
+        slots_arr = jnp.asarray([slot for _, slot in group])
+        t0 = time.time()
+        if self.paged:
+            bids = np.stack([self._stake_pages(req, slot, bucket)
+                             for req, slot in group])
             logits, self.pool = self._prefill_into(
-                self.params, batch, self.pool, jnp.asarray([slot]))
-            self._buckets_used.add(bucket)
-            tok = int(self._sample(logits)[0])  # blocks: prefill has executed
-            now = time.time()
-            self.stats["prefill_s"] += now - t0
-            self.stats["requests"] += 1
-            if self._emit(req, tok, now):
+                self.params, batch, self.pool, slots_arr, jnp.asarray(bids))
+        else:
+            logits, self.pool = self._prefill_into(
+                self.params, batch, self.pool, slots_arr)
+        self._buckets_used.add((bucket, g))
+        if g > 1:
+            self.stats["coalesced_prefills"] += 1
+        toks = self._sample(logits)  # blocks: prefill has executed
+        now = time.time()
+        self.stats["prefill_s"] += now - t0
+        self.stats["requests"] += g
+        for i, (req, slot) in enumerate(group):
+            if self._emit(req, int(toks[i]), now):
                 self._retire(slot, now)
             else:
-                self._cur_tok[slot] = tok
+                self._cur_tok[slot] = int(toks[i])
+
+    def _admit(self) -> None:
+        self._pending_pages = 0
+        admitted = self.sched.admit(
+            time.time(), can_admit=self._can_admit if self.paged else None)
+        if not admitted:
+            return
+        if self.coalesce:
+            groups: dict = {}
+            for req, slot in admitted:
+                groups.setdefault(self._bucket(len(req.prompt)), []).append(
+                    (req, slot))
+            for bucket, group in groups.items():
+                self._prefill_group(bucket, group)
+        else:
+            for req, slot in admitted:
+                self._prefill_group(self._bucket(len(req.prompt)), [(req, slot)])
+
+    def _decode_pool(self, toks: jax.Array):
+        """One decode step over the whole pool. The paged pool goes through
+        the PagedCacheView adapter: pages are appended BEFORE the step when
+        a slot's next write position lands in an unmapped block (reservation
+        guarantees success), idle lanes write into the trash sink."""
+        if not self.paged:
+            logits, self.pool = self._decode(self.params, toks, self.pool)
+            return logits
+        from repro.serve.pool import PagedCacheView
+
+        if self._has_paged:
+            trash = self.slot_cache.trash
+            for slot in self.sched.running:
+                p = int(self._lengths[slot] % self.capacity)
+                j = p // self.block
+                if self._pt[slot, j] == trash:
+                    self._pt[slot, j] = self.alloc.append(self._leases[slot])
+            pt = jnp.asarray(self._pt)
+            write_pos = jnp.asarray(
+                (self._lengths % self.capacity).astype(np.int32))
+        else:
+            # degenerate pool (no token-axis leaves): page table and write
+            # positions are all-trash constants — reuse the cached device
+            # arrays instead of re-transferring them every step (the view's
+            # gather/write-back trace to identity under jit)
+            pt, write_pos = self._const_view_args
+        view = PagedCacheView(self.pool, pt, write_pos, self.slot_cache.spec)
+        logits, out = self._decode(self.params, toks, view)
+        self.pool = out.pool
+        if self._has_paged:
+            for slot in self.sched.running:
+                self._lengths[slot] += 1
+        return logits
 
     def step(self) -> bool:
         """Admit queued work into free slots, run ONE decode step across the
         pool, retire finished sequences. Returns True while work remains."""
         self._admit()
+        self.stats["admitted_peak"] = max(self.stats["admitted_peak"],
+                                          len(self.sched.running))
         if self.sched.running:
             t0 = time.time()
-            logits, self.pool = self._decode(
-                self.params, jnp.asarray(self._cur_tok[:, None]), self.pool)
+            logits = self._decode_pool(jnp.asarray(self._cur_tok[:, None]))
             toks = self._sample(logits)
             now = time.time()
             self.stats["decode_s"] += now - t0
@@ -195,6 +390,8 @@ class ServeEngine:
     def _refresh_stats(self) -> None:
         self.stats["prefill_compiles"] = len(self._buckets_used)
         self.stats.update(self.sched.stats())
+        if self.paged:
+            self.stats["pool"] = self.alloc.stats()  # incl. pages_appended
 
     # ------------------------------------------------------------------
     # convenience drivers

@@ -1,0 +1,29 @@
+"""Paged state-pool subsystem (DESIGN.md §4 "Paged pool").
+
+The continuous-batching engine's dense pool allocates every slot's KV /
+latent cache at the full engine capacity, so pool *memory* — not compute —
+caps concurrency for the KV-family baselines (gqa/mla). This package sizes
+the pool in **tokens** instead of slots:
+
+  - :mod:`blocks`      host-side block allocator: free list, per-request
+                       page leases, per-slot page tables
+  - :mod:`quant`       int8 / fp8 block storage with per-row scales,
+                       dequantized on read
+  - :mod:`views`       jit-side gather/scatter adapters between block
+                       storage and the dense cache layout the model decode
+                       steps consume (``PagedCacheView``)
+  - :mod:`paged_cache` :class:`PagedModelCache` — the ``SlotCache``-shaped
+                       facade the serving engine drives (discovery of slot
+                       and token axes, prefill insert, decode write-back)
+
+The TPU fast path for the gathered decode read is the Pallas kernel in
+:mod:`repro.kernels.paged_attention`, registered as the ``paged`` backend in
+:mod:`repro.backends`.
+"""
+from repro.serve.pool.blocks import BlockAllocator, PageLease
+from repro.serve.pool.paged_cache import PagedModelCache
+from repro.serve.pool.quant import get_quant
+from repro.serve.pool.views import PagedCacheView, resolve_cache_view
+
+__all__ = ["BlockAllocator", "PageLease", "PagedModelCache", "get_quant",
+           "PagedCacheView", "resolve_cache_view"]

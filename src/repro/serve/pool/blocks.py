@@ -1,0 +1,123 @@
+"""Host-side block allocator for the paged state pool (DESIGN.md §4).
+
+Pure Python bookkeeping, mirroring ``serve.scheduler``'s split of duties:
+the device owns the block *storage* (``paged_cache``), this module owns
+*which physical block holds which request's tokens*:
+
+  - **Free list**: physical block ids; the lowest free id is always handed
+    out next, so allocation is deterministic (the reproducibility tests pin
+    engine behaviour byte-for-byte).
+  - **Leases**: admission *stakes* a request's worst-case page count
+    (``reserve``) before any block is touched; pages are *mapped* lazily —
+    the prompt bucket's pages at admission, one more each time decode
+    crosses a block boundary. Because the reservation covers the full
+    horizon ``ceil(min(prompt + max_new, capacity) / block)``, a mapped
+    append can never fail mid-decode: backpressure happens only at
+    admission, never as a mid-flight OOM. (Reserve-bucket-only + preemption
+    is the follow-up that would relax this — ROADMAP.)
+  - **Double-free / foreign-free detection**: releasing a block that is not
+    currently mapped raises, which is what the allocator unit tests pin.
+
+The per-slot **page table** lives with the engine as a host ``numpy`` array
+(mirrored to the device per decode step); unmapped entries point at the
+dedicated trash block (id ``num_blocks``) so idle lanes' writes land in a
+sink no live request reads.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List
+
+
+@dataclasses.dataclass
+class PageLease:
+    """One admitted request's hold on the pool: ``reserved`` pages not yet
+    mapped plus the physical ids already ``mapped`` (in logical-page order)."""
+
+    reserved: int
+    mapped: List[int] = dataclasses.field(default_factory=list)
+
+
+class BlockAllocator:
+    def __init__(self, num_blocks: int, block: int):
+        if num_blocks < 1 or block < 1:
+            raise ValueError("need at least one block of at least one token")
+        self.num_blocks = num_blocks
+        self.block = block
+        self.trash = num_blocks  # reserved sink id; storage allocates +1
+        self._free: List[int] = list(range(num_blocks))
+        self._mapped: set = set()   # blocks currently held by some lease
+        self._reserved = 0
+        self.pages_appended = 0     # boundary-crossing maps (stats)
+        self.peak_mapped = 0        # high-water mark of mapped blocks
+
+    # -- admission -------------------------------------------------------
+    def available(self) -> int:
+        """Blocks neither mapped nor promised to an admitted request."""
+        return len(self._free) - self._reserved
+
+    def can_reserve(self, pages: int) -> bool:
+        return self.available() >= pages
+
+    def reserve(self, pages: int) -> PageLease:
+        if not self.can_reserve(pages):
+            raise RuntimeError(
+                f"pool exhausted: {pages} pages requested, "
+                f"{self.available()} available (of {self.num_blocks})")
+        self._reserved += pages
+        return PageLease(reserved=pages)
+
+    # -- mapping ---------------------------------------------------------
+    def map(self, lease: PageLease, pages: int = 1) -> List[int]:
+        """Convert ``pages`` of the lease's reservation into physical block
+        ids (lowest free ids first — deterministic)."""
+        if pages > lease.reserved:
+            raise RuntimeError(
+                f"lease holds {lease.reserved} reserved pages, asked for {pages}")
+        ids = self._free[:pages]
+        del self._free[:pages]
+        self._mapped.update(ids)
+        self._reserved -= pages
+        lease.reserved -= pages
+        lease.mapped.extend(ids)
+        self.peak_mapped = max(self.peak_mapped, self.mapped_blocks())
+        return ids
+
+    def append(self, lease: PageLease) -> int:
+        """Map one more page (a decode step crossed a block boundary)."""
+        (page,) = self.map(lease, 1)
+        self.pages_appended += 1
+        return page
+
+    # -- retirement ------------------------------------------------------
+    def release(self, lease: PageLease) -> None:
+        """Return a lease's mapped blocks and unused reservation to the
+        free list. Double-free AND foreign-free raise: a block is
+        releasable only while in the live mapped set — a stale lease whose
+        blocks went back (double free) or were re-mapped to another lease
+        and released twice (aliasing) both trip the check."""
+        for b in lease.mapped:  # one at a time: catches duplicates in-lease
+            if b not in self._mapped:
+                raise RuntimeError(f"double/foreign free of block {b}")
+            self._mapped.discard(b)
+        self._free.extend(lease.mapped)
+        self._free.sort()  # lowest-id-first stays deterministic after churn
+        # the unmapped remainder of the reservation becomes available again
+        self._reserved -= lease.reserved
+        assert self._reserved >= 0, "reservation accounting went negative"
+        lease.mapped.clear()
+        lease.reserved = 0
+
+    # -- stats -----------------------------------------------------------
+    def mapped_blocks(self) -> int:
+        return self.num_blocks - len(self._free)
+
+    def stats(self) -> dict:
+        return {
+            "blocks_total": self.num_blocks,
+            "blocks_free": len(self._free),
+            "blocks_mapped": self.mapped_blocks(),
+            "blocks_reserved": self._reserved,
+            "blocks_peak_mapped": self.peak_mapped,
+            "pages_appended": self.pages_appended,
+        }

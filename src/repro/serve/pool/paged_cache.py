@@ -1,0 +1,206 @@
+"""`PagedModelCache` — the paged counterpart of ``serve.cache.ModelSlotCache``
+(DESIGN.md §4 "Paged pool").
+
+Discovery, like the dense pool, is family-agnostic and allocation-free:
+
+  - the **slot axis** of every leaf comes from comparing ``jax.eval_shape``
+    of ``init_fn`` at batch 1 vs 2 (exactly ``serve.cache.slot_axes``);
+  - the **token axis** comes from comparing capacity C vs 2C — the axis
+    whose extent tracks capacity is the one worth paging. Leaves with no
+    such axis (FLARE stream state, rwkv/ssm recurrences, position/length
+    vectors, windowed ring buffers whose extent is window-bounded) stay in
+    a **dense per-slot pool**: they are already O(1) in capacity, which is
+    FLARE's serving pitch — its whole state is a "dense leaf" here.
+
+Token-axis leaves are stored block-granular in ``[num_blocks+1, block,
+*rest]`` storage (``views.py`` layouts; the ``+1`` is the trash sink) and
+share ONE page table per slot across every leaf and layer (vLLM-style: a
+logical token block maps to the same physical id in each leaf's storage).
+Pool capacity is therefore sized in **tokens** (``pool_tokens``), not
+slots; admission stakes pages through ``blocks.BlockAllocator`` and the
+engine appends pages as decode crosses block boundaries.
+
+``init`` runs under ``jax.jit`` so the dense token-leaf allocations inside
+``init_fn`` are dead-code-eliminated — the pool never materializes a
+slots x capacity cache.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Callable, List, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.serve.cache import _slot_axis
+from repro.serve.pool.blocks import BlockAllocator
+from repro.serve.pool.quant import get_quant
+from repro.serve.pool.views import PagedLeaf, PoolSpec, scatter_blocks
+
+
+def _axis_or_none(small, big) -> Optional[int]:
+    try:
+        return _slot_axis(small, big)
+    except ValueError:  # ambiguous (several axes moved) — leave it dense
+        return None
+
+
+class PagedModelCache:
+    """Block-granular, optionally quantized pool over any family's
+    ``init_caches(batch, capacity)`` pytree."""
+
+    def __init__(self, init_fn: Callable[[int, int], Any], capacity: int, *,
+                 pool_tokens: int, block: int = 16, quant: str = "none"):
+        if pool_tokens < block:
+            raise ValueError(f"pool_tokens={pool_tokens} < block={block}")
+        self.init_fn = init_fn
+        self.capacity = capacity
+        self.block = block
+        self.num_blocks = pool_tokens // block
+        self.quant = get_quant(quant)
+        self.max_pages = -(-capacity // block)
+
+        at_c = jax.eval_shape(lambda: init_fn(2, capacity))
+        leaves_c, treedef = jax.tree.flatten(at_c)
+        leaves_b1 = jax.tree.leaves(jax.eval_shape(lambda: init_fn(1, capacity)))
+        leaves_2c = jax.tree.leaves(jax.eval_shape(lambda: init_fn(2, 2 * capacity)))
+
+        roles: List = []
+        paged: List[PagedLeaf] = []
+        dense_axes: List[Optional[int]] = []
+        self._rest_shapes: List[tuple] = []
+        self._dense_shapes: List[Any] = []
+        for s1, sc, s2c in zip(leaves_b1, leaves_c, leaves_2c):
+            sax = _axis_or_none(s1, sc)
+            tax = _axis_or_none(sc, s2c)
+            # page only what is capacity-extent on a distinct axis of a
+            # per-slot leaf; everything else is the dense per-slot part
+            if sax is None or tax is None or tax == sax or sc.shape[tax] != capacity:
+                roles.append(("dense", len(dense_axes)))
+                dense_axes.append(sax)
+                self._dense_shapes.append(sc)
+            else:
+                rest = tuple(sc.shape[i] for i in range(sc.ndim)
+                             if i not in (sax, tax))
+                roles.append(("paged", len(paged)))
+                paged.append(PagedLeaf(slot_axis=sax, token_axis=tax,
+                                       view=capacity, dtype=jnp.dtype(sc.dtype).name))
+                self._rest_shapes.append(rest)
+        self.spec = PoolSpec(
+            treedef=treedef, roles=tuple(roles), paged=tuple(paged),
+            dense_slot_axes=tuple(dense_axes), block=block,
+            max_pages=self.max_pages, quant=self.quant)
+
+    # ------------------------------------------------------------------
+    # construction
+    # ------------------------------------------------------------------
+    @property
+    def trash(self) -> int:
+        return self.num_blocks  # storage row reserved as the write sink
+
+    def allocator(self) -> BlockAllocator:
+        return BlockAllocator(self.num_blocks, self.block)
+
+    def _dense_leaves(self, slots: int):
+        leaves = jax.tree.leaves(self.init_fn(slots, self.capacity))
+        return tuple(leaf for leaf, (role, _) in zip(leaves, self.spec.roles)
+                     if role == "dense")
+
+    def init(self, slots: int) -> dict:
+        dense = jax.jit(self._dense_leaves, static_argnums=0)(slots)
+        data, scale = [], []
+        for meta, rest in zip(self.spec.paged, self._rest_shapes):
+            sd = self.quant.storage_dtype(meta.dtype)
+            data.append(jnp.zeros((self.num_blocks + 1, self.block) + rest, sd))
+            scale.append(jnp.ones((self.num_blocks + 1, self.block) + rest[:-1],
+                                  jnp.float32) if self.quant.scaled else None)
+        return {"dense": dense, "data": tuple(data), "scale": tuple(scale)}
+
+    # ------------------------------------------------------------------
+    # jit-side ops the engine compiles
+    # ------------------------------------------------------------------
+    def _scatter_dense(self, dense: tuple, parts: tuple, slots: jax.Array) -> tuple:
+        out = []
+        for p, q, ax in zip(dense, parts, self.spec.dense_slot_axes):
+            if ax is None:
+                out.append(p)
+            else:
+                idx = (slice(None),) * ax + (slots,)
+                out.append(p.at[idx].set(q.astype(p.dtype)))
+        return tuple(out)
+
+    def make_prefill_into(self, prefill_fn: Callable[..., Any]):
+        """Paged insertion prefill: run the family prefill on the request
+        bucket, scatter dense leaves into the slot lanes and block-split the
+        token leaves into the mapped physical pages ``block_ids`` [G, P]."""
+
+        def prefill_into(params, batch, pool, slots, block_ids):
+            logits, part = prefill_fn(params, batch, self.capacity)
+            part_leaves = jax.tree.leaves(part)
+            dense_parts, data, scale = [], list(pool["data"]), list(pool["scale"])
+            for leaf, (role, j) in zip(part_leaves, self.spec.roles):
+                if role == "dense":
+                    dense_parts.append(leaf)
+                else:
+                    data[j], scale[j] = scatter_blocks(
+                        data[j], scale[j], leaf, block_ids,
+                        self.spec.paged[j], self.spec)
+            dense = self._scatter_dense(pool["dense"], tuple(dense_parts), slots)
+            return logits, {"dense": dense, "data": tuple(data),
+                            "scale": tuple(scale)}
+
+        return prefill_into
+
+    def reset(self, pool: dict, slots: jax.Array) -> dict:
+        """Retirement: dense leaves back to their init values (the same
+        fresh-part insertion the dense pool uses — FlareState.m_max must
+        return to -inf). Block storage needs no wipe: freed pages are
+        re-mapped before they are ever readable again (prefill insert /
+        append precede any read, and unmapped gathers sit behind the decode
+        validity masks)."""
+        fresh = self._dense_leaves(int(slots.shape[0]))
+        return {"dense": self._scatter_dense(pool["dense"], fresh, slots),
+                "data": pool["data"], "scale": pool["scale"]}
+
+    # ------------------------------------------------------------------
+    # accounting (bench / describe)
+    # ------------------------------------------------------------------
+    def token_bytes_paged(self) -> float:
+        """Stored bytes per pooled token (payload + per-row scales),
+        summed over every paged leaf (= every layer's K/V or latent row)."""
+        total = 0.0
+        for meta, rest in zip(self.spec.paged, self._rest_shapes):
+            n = math.prod(rest)
+            total += n * self.quant.storage_dtype(meta.dtype).itemsize
+            if self.quant.scaled:
+                total += math.prod(rest[:-1]) * 4
+        return total
+
+    def token_bytes_dense(self) -> float:
+        """Bytes per token a dense (un-paged, un-quantized) pool stores."""
+        return float(sum(math.prod(rest) * jnp.dtype(meta.dtype).itemsize
+                         for meta, rest in zip(self.spec.paged, self._rest_shapes)))
+
+    def slot_bytes_dense_leaves(self) -> float:
+        """Per-slot bytes of the dense (non-token) part — FLARE's O(M)
+        stream state, recurrent states, lengths."""
+        total = 0.0
+        for shape, ax in zip(self._dense_shapes, self.spec.dense_slot_axes):
+            if ax is None:
+                continue
+            total += (shape.size // shape.shape[ax]) * jnp.dtype(shape.dtype).itemsize
+        return total
+
+    def pool_bytes(self) -> float:
+        """Bytes held by block storage (excluding the trash sink row)."""
+        return self.num_blocks * self.block * self.token_bytes_paged()
+
+    def describe(self) -> str:
+        return (f"paged-pool[{len(self.spec.paged)} paged + "
+                f"{len(self.spec.dense_slot_axes)} dense leaves, "
+                f"{self.num_blocks}x{self.block}-token blocks (+trash), "
+                f"quant={self.quant.name}, "
+                f"{self.pool_bytes() / 1e6:.2f} MB storage, "
+                f"{self.token_bytes_paged():.0f} B/token vs "
+                f"{self.token_bytes_dense():.0f} dense, "
+                f"{self.slot_bytes_dense_leaves() / 1e6:.3f} MB/slot dense part]")

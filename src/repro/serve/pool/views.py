@@ -1,0 +1,232 @@
+"""Gather/scatter adapters between block storage and dense cache layout
+(DESIGN.md §4 "Paged pool").
+
+A paged leaf lives in **storage layout** ``[num_blocks+1, block, *rest]``
+(the ``+1`` is the trash sink block; ``rest`` = the leaf's shape minus its
+slot and token axes, original order preserved). These pure functions move
+tensors between that layout and the dense leaf layout the model decode
+steps consume:
+
+  - :func:`gather_leaf`    page table -> dense leaf (dequant on read)
+  - :func:`scatter_blocks` prefill insert: a request's bucket, block-split
+                           and quantized, into its mapped physical pages
+  - :func:`scatter_token`  decode write-back: the single column decode
+                           wrote, re-quantized, into (page, offset)
+
+:class:`PagedCacheView` packages (pool state, page table, write positions)
+as a pytree that can stand in for the dense caches argument of
+``model.decode_step``: the model resolves it via :func:`resolve_cache_view`
+— gather on entry, a write-back closure on exit — so decode *reads route
+through the view adapter* with no change to the decode math. Idle lanes'
+writes land in the trash block (their page-table rows are all-trash), and
+garbage gathered from unmapped pages is invisible behind the decode
+validity masks (index < length).
+
+Everything here is jit-traced; the static leaf bookkeeping rides in the
+hashable :class:`PoolSpec` aux data.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.serve.pool.quant import QuantSpec, dequantize, quantize
+
+
+# ---------------------------------------------------------------------------
+# Static leaf bookkeeping
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class PagedLeaf:
+    """Static facts about one token-axis leaf."""
+
+    slot_axis: int
+    token_axis: int
+    view: int            # dense token extent the model expects (== capacity)
+    dtype: str           # dense-leaf dtype name (dequant target)
+
+
+@dataclasses.dataclass(frozen=True)
+class PoolSpec:
+    """Hashable pytree-aux description of a paged pool: which leaf (in
+    flatten order) is dense vs paged, plus block geometry and quant mode."""
+
+    treedef: Any                       # jax treedef of the full cache pytree
+    roles: Tuple[Tuple[str, int], ...]  # per leaf: ("dense", i) | ("paged", j)
+    paged: Tuple[PagedLeaf, ...]       # per paged leaf j
+    dense_slot_axes: Tuple[Optional[int], ...]  # per dense leaf i
+    block: int
+    max_pages: int
+    quant: QuantSpec
+
+
+# ---------------------------------------------------------------------------
+# Layout transforms
+# ---------------------------------------------------------------------------
+
+
+def _perm(ndim: int, sax: int, tax: int):
+    rest = [i for i in range(ndim) if i not in (sax, tax)]
+    return [sax, tax] + rest
+
+
+def to_pool_layout(leaf: jax.Array, sax: int, tax: int) -> jax.Array:
+    """[..., S@sax, ..., T@tax, ...] -> [S, T, *rest]."""
+    return leaf.transpose(_perm(leaf.ndim, sax, tax))
+
+
+def from_pool_layout(x: jax.Array, sax: int, tax: int) -> jax.Array:
+    """Inverse of :func:`to_pool_layout`."""
+    perm = _perm(x.ndim, sax, tax)
+    inv = [0] * len(perm)
+    for i, p in enumerate(perm):
+        inv[p] = i
+    return x.transpose(inv)
+
+
+def _pad_tokens(x: jax.Array, to: int) -> jax.Array:
+    pad = to - x.shape[1]
+    if pad <= 0:
+        return x[:, :to]
+    widths = [(0, 0)] * x.ndim
+    widths[1] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+# ---------------------------------------------------------------------------
+# Leaf ops
+# ---------------------------------------------------------------------------
+
+
+def gather_leaf(data: jax.Array, scale: Optional[jax.Array], pt: jax.Array,
+                meta: PagedLeaf, spec: PoolSpec) -> jax.Array:
+    """Reconstruct a dense leaf for all slots from block storage.
+
+    pt: [S, P] physical block ids (trash for unmapped — gathered garbage is
+    behind the decode validity mask).
+    """
+    raw = data[pt]                                   # [S, P, block, *rest]
+    sc = scale[pt] if scale is not None else None    # [S, P, block, *rest[:-1]]
+    x = dequantize(spec.quant, raw, sc, jnp.dtype(meta.dtype))
+    s, p, blk = x.shape[:3]
+    x = x.reshape((s, p * blk) + x.shape[3:])[:, :meta.view]
+    return from_pool_layout(x, meta.slot_axis, meta.token_axis)
+
+
+def scatter_blocks(data: jax.Array, scale: Optional[jax.Array],
+                   part_leaf: jax.Array, block_ids: jax.Array,
+                   meta: PagedLeaf, spec: PoolSpec):
+    """Prefill insert: write ``part_leaf``'s first ``P*block`` tokens (the
+    request's bucket) into physical pages ``block_ids`` [G, P]."""
+    g, npages = block_ids.shape
+    y = to_pool_layout(part_leaf, meta.slot_axis, meta.token_axis)  # [G, view, *rest]
+    y = _pad_tokens(y, npages * spec.block)
+    y = y.reshape((g, npages, spec.block) + y.shape[2:])
+    q, sc = quantize(spec.quant, y)
+    data = data.at[block_ids].set(q.astype(data.dtype))
+    if scale is not None:
+        scale = scale.at[block_ids].set(sc)
+    return data, scale
+
+
+def scatter_token(data: jax.Array, scale: Optional[jax.Array],
+                  new_leaf: jax.Array, pt: jax.Array, write_pos: jax.Array,
+                  meta: PagedLeaf, spec: PoolSpec):
+    """Decode write-back: extract the column decode wrote (position
+    ``write_pos[s]`` per slot) and store it at (page, offset). Idle slots'
+    page-table rows are all-trash, so their writes land in the sink."""
+    y = to_pool_layout(new_leaf, meta.slot_axis, meta.token_axis)  # [S, view, *rest]
+    s = y.shape[0]
+    idx = write_pos.reshape((s, 1) + (1,) * (y.ndim - 2))
+    col = jnp.take_along_axis(y, jnp.broadcast_to(idx, (s, 1) + y.shape[2:]),
+                              axis=1)[:, 0]                       # [S, *rest]
+    q, sc = quantize(spec.quant, col)
+    page = jnp.take_along_axis(pt, (write_pos // spec.block)[:, None], axis=1)[:, 0]
+    off = write_pos % spec.block
+    data = data.at[page, off].set(q.astype(data.dtype))
+    if scale is not None:
+        scale = scale.at[page, off].set(sc)
+    return data, scale
+
+
+# ---------------------------------------------------------------------------
+# The decode-step view adapter
+# ---------------------------------------------------------------------------
+
+
+class PagedCacheView:
+    """Stands in for the dense caches pytree in ``model.decode_step``.
+
+    children: pool state (dense leaves + block storage + scales), the
+    device page table [S, P] and per-slot write positions [S]; aux: the
+    static :class:`PoolSpec`. The engine builds one per decode step; the
+    model's decode entry resolves it (``resolve_cache_view``) into a dense
+    gather + a write-back closure and returns the written-back view, whose
+    ``.pool`` the engine carries forward.
+    """
+
+    def __init__(self, pool: dict, pt: jax.Array, write_pos: jax.Array,
+                 spec: PoolSpec):
+        self.pool = pool
+        self.pt = pt
+        self.write_pos = write_pos
+        self.spec = spec
+
+    def gather(self):
+        """Dense caches pytree reconstructed from the pool."""
+        spec = self.spec
+        leaves = []
+        for role, j in spec.roles:
+            if role == "dense":
+                leaves.append(self.pool["dense"][j])
+            else:
+                leaves.append(gather_leaf(self.pool["data"][j],
+                                          self.pool["scale"][j], self.pt,
+                                          spec.paged[j], spec))
+        return jax.tree.unflatten(spec.treedef, leaves)
+
+    def writeback(self, new_caches) -> "PagedCacheView":
+        """Fold the decode-updated dense caches back into the pool: dense
+        leaves replaced wholesale (exactly the dense engine's behaviour),
+        paged leaves receive only the single written token column."""
+        spec = self.spec
+        new_leaves = jax.tree.leaves(new_caches)
+        dense = list(self.pool["dense"])
+        data = list(self.pool["data"])
+        scale = list(self.pool["scale"])
+        for leaf, (role, j) in zip(new_leaves, spec.roles):
+            if role == "dense":
+                dense[j] = leaf
+            else:
+                data[j], scale[j] = scatter_token(
+                    data[j], scale[j], leaf, self.pt, self.write_pos,
+                    spec.paged[j], spec)
+        pool = {"dense": tuple(dense), "data": tuple(data), "scale": tuple(scale)}
+        return PagedCacheView(pool, self.pt, self.write_pos, spec)
+
+
+def _view_flatten(v: PagedCacheView):
+    return (v.pool, v.pt, v.write_pos), v.spec
+
+
+def _view_unflatten(spec, children):
+    pool, pt, write_pos = children
+    return PagedCacheView(pool, pt, write_pos, spec)
+
+
+jax.tree_util.register_pytree_node(PagedCacheView, _view_flatten, _view_unflatten)
+
+
+def resolve_cache_view(caches):
+    """The decode-step entry hook: a ``PagedCacheView`` resolves to (dense
+    gather, write-back closure); anything else passes through untouched.
+    Model decode steps call this once at the top so paged and dense pools
+    share one decode implementation (DESIGN.md §4)."""
+    if isinstance(caches, PagedCacheView):
+        return caches.gather(), caches.writeback
+    return caches, lambda c: c

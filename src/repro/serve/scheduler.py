@@ -62,17 +62,30 @@ class SlotScheduler:
     def submit(self, req: ServeRequest) -> None:
         self.waiting.append(req)
 
-    def admit(self, now: float) -> List[Tuple[ServeRequest, int]]:
+    def admit(self, now: float,
+              can_admit: Optional[Callable[[ServeRequest], bool]] = None,
+              ) -> List[Tuple[ServeRequest, int]]:
         """Pop waiting requests into free slots, FIFO. Expired-deadline
-        requests are dropped without consuming a slot."""
+        requests are dropped without consuming a slot (or any pool pages —
+        expiry is checked before the resource gate).
+
+        ``can_admit`` is the engine's resource gate (the paged pool's
+        block-availability check): when the HEAD of the queue fails it,
+        admission stops for this cycle rather than skipping ahead — pool
+        pressure is backpressure, never reordering, so admission order
+        stays FIFO by construction."""
         admitted = []
         while self.waiting and self.free:
-            req = self.waiting.popleft()
+            req = self.waiting[0]
             if req.expired(now):
+                self.waiting.popleft()
                 req.dropped = True
                 req.finish_t = now
                 self.dropped.append(req)
                 continue
+            if can_admit is not None and not can_admit(req):
+                break
+            self.waiting.popleft()
             slot = self.free.pop(0)  # lowest free slot — deterministic
             req.slot = slot
             req.admit_t = now

@@ -224,6 +224,62 @@ def test_prefill_compiles_bounded_by_buckets():
     assert eng.stats["prefill_compiles"] == 2  # one new bucket (32)
 
 
+def test_deadline_expiry_queued_returns_slots_and_pages():
+    """A request whose deadline expires while QUEUED is dropped without
+    ever holding a slot or (paged pool) any pages; after the drain both
+    free lists are whole again."""
+    model, params = _model("gqa")
+    eng = ServeEngine(model, params, capacity=32, slots=1,
+                      pool_tokens=64, block_size=8)
+    eng.submit(np.arange(6, dtype=np.int32), max_new_tokens=6)
+    eng.submit(np.arange(6, dtype=np.int32), max_new_tokens=6,
+               deadline_s=-1.0)  # expired before it can ever be admitted
+    eng.submit(np.arange(4, dtype=np.int32), max_new_tokens=4)
+    outs = eng.run_all()
+    assert eng.stats["dropped"] == 1
+    assert len(outs[1]) == 0 and len(outs[0]) == 6 and len(outs[2]) == 4
+    assert eng.sched.free == [0]                       # slot came back
+    st = eng.stats["pool"]
+    assert st["blocks_free"] == st["blocks_total"]     # pages came back
+    assert st["blocks_reserved"] == 0
+
+
+def test_fifo_admission_under_block_backpressure():
+    """Pool pressure is backpressure, never reordering: when the queue head
+    cannot stake its pages, later (smaller) requests must NOT jump ahead —
+    admission order stays FIFO across interleaved retire/admit cycles."""
+    model, params = _model("gqa")
+    # 5 blocks of 8 tokens; slots are plentiful so pages are the only gate
+    eng = ServeEngine(model, params, capacity=32, slots=3,
+                      pool_tokens=40, block_size=8)
+    eng.submit(np.arange(8, dtype=np.int32), max_new_tokens=12)    # 3 pages
+    eng.submit(np.arange(16, dtype=np.int32), max_new_tokens=16)   # 4 pages
+    eng.submit(np.arange(4, dtype=np.int32), max_new_tokens=2)     # 1 page
+    outs = eng.run_all()
+    assert eng.stats["finished"] == 3
+    rids = [rid for rid, _ in eng.sched.admission_log]
+    assert rids == [0, 1, 2]  # rid 2 fit from the start but waited for 1
+    assert [len(o) for o in outs] == [12, 16, 2]
+
+
+def test_scheduler_can_admit_gate_is_fifo():
+    """Unit form of the gate contract: a blocked head stops the cycle
+    (nothing behind it admits), and expiry is checked before the gate so a
+    dead head cannot wedge the queue."""
+    sched = SlotScheduler(3)
+    for rid in range(3):
+        sched.submit(ServeRequest(rid=rid, prompt=np.zeros(1, np.int32),
+                                  submit_t=0.0))
+    admitted = sched.admit(now=1.0, can_admit=lambda r: r.rid != 1)
+    assert [r.rid for r, _ in admitted] == [0]
+    assert [r.rid for r in sched.waiting] == [1, 2]
+    # an expired blocked head is dropped, unblocking the queue
+    sched.waiting[0].deadline_s = 0.5
+    admitted = sched.admit(now=2.0, can_admit=lambda r: r.rid != 1)
+    assert [r.rid for r, _ in admitted] == [2]
+    assert sched.dropped[0].rid == 1
+
+
 def test_scheduler_unit():
     sched = SlotScheduler(2)
     for rid in range(4):
