@@ -49,29 +49,28 @@ def _bench_arch(arch: str, requests: int) -> None:
     model = get_model(cfg, seq_len_hint=CAPACITY)
     params = model.init(jax.random.PRNGKey(0))
     engine = ServeEngine(model, params, capacity=CAPACITY, slots=SLOTS, seed=0)
+    # front-load every compile (prefill buckets + fused decode step) so the
+    # timed drain is pure steady state — the warmup-cache idiom
+    engine.warmup(max_prompt_len=16)
     rng = np.random.default_rng(0)
     lens = rng.integers(4, 17, requests)
     max_new = rng.integers(4, 17, requests)
     for i in range(requests):
         engine.submit(rng.integers(0, cfg.vocab, lens[i]),
                       max_new_tokens=int(max_new[i]))
-    # warm the compile caches (prefill buckets + decode) outside the timing;
-    # tokens emitted by the warm-up step are excluded from the rate
-    engine.step()
-    warm_toks = engine.stats["tokens_generated"]
     t0 = time.time()
     while engine.step():
         pass
     dt = time.time() - t0
     s = engine.stats
-    toks = s["tokens_generated"] - warm_toks
-    backend = s["mixer_backend"]
+    toks = s["tokens_generated"]
     emit(f"serve/{arch}/tok_s", dt * 1e6 / max(toks, 1),
          f"tok_s={toks / dt:.1f};p50_ms={s['latency_p50_s'] * 1e3:.1f};"
          f"p99_ms={s['latency_p99_s'] * 1e3:.1f};"
          f"util={s['slot_utilization']:.2f};steps={s['decode_steps']};"
-         f"slots={SLOTS};requests={requests}",
-         backend=backend)
+         f"slots={SLOTS};requests={requests};"
+         f"compiles={s['decode_compiles']}",
+         backend=s["mixer_backend"] or s["decode_backend"])
 
 
 def _workload(engine: ServeEngine, vocab: int, requests: int) -> None:
@@ -84,18 +83,17 @@ def _workload(engine: ServeEngine, vocab: int, requests: int) -> None:
 
 
 def _drain(engine: ServeEngine):
-    """Warm compile caches on the first step, then time the drain. Returns
+    """Front-load compiles via warmup(), then time the drain. Returns
     (wall_s, timed tokens, mean mapped blocks per decode step or None)."""
-    engine.step()
-    warm_toks = engine.stats["tokens_generated"]
+    engine.warmup(max_prompt_len=16)
     mapped = []
     t0 = time.time()
     while engine.step():
         if engine.paged:
             mapped.append(engine.alloc.mapped_blocks())
     dt = time.time() - t0
-    toks = engine.stats["tokens_generated"] - warm_toks
-    return dt, toks, (float(np.mean(mapped)) if mapped else None)
+    return dt, engine.stats["tokens_generated"], (
+        float(np.mean(mapped)) if mapped else None)
 
 
 def _bench_paged_arch(arch: str, requests: int) -> None:
@@ -138,8 +136,8 @@ def _bench_paged_arch(arch: str, requests: int) -> None:
          f"pages_appended={s['pool']['pages_appended']};"
          f"coalesced={s['coalesced_prefills']};"
          f"hbm_rd_B_per_step={paged_rd:.0f};dense_rd_B_per_step={dense_rd:.0f};"
-         f"util={s['slot_utilization']:.2f}",
-         backend=s["mixer_backend"])
+         f"util={s['slot_utilization']:.2f};compiles={s['decode_compiles']}",
+         backend=s["mixer_backend"] or s["decode_backend"])
 
 
 def run() -> None:

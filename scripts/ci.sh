@@ -20,6 +20,22 @@ echo "$dispatch_list"
 # the paged serve pool's kernel must stay policy-addressable (DESIGN.md §4)
 echo "$dispatch_list" | grep -q "^paged " \
     || { echo "ERROR: 'paged' backend missing from the registry"; exit 1; }
+# ...and auto-resolvable for decode-shaped pools (latents=1 scores above the
+# dense backends) while staying out of dense call sites — the fused decode
+# step's routing contract (DESIGN.md §4 "Fused decode step")
+python - <<'PY'
+import jax.numpy as jnp
+from repro.core.dispatch import MixerShape
+from repro.core.policy import MixerPolicy, resolve_policy
+
+decode = MixerShape(batch=4, heads=2, tokens=64, latents=1, head_dim=8)
+plan = resolve_policy(MixerPolicy(), decode, jnp.dtype("bfloat16"), causal=False)
+assert plan.backend == "paged", f"decode-shaped auto pick: {plan.backend}"
+dense = MixerShape(batch=4, heads=2, tokens=64, latents=8, head_dim=8)
+plan = resolve_policy(MixerPolicy(), dense, jnp.dtype("bfloat16"), causal=False)
+assert plan.backend != "paged", f"dense M>1 site leaked to paged: {plan.backend}"
+print(f"paged routing OK (decode->paged, dense->{plan.backend})")
+PY
 
 echo "== fast tier (pytest -m 'not slow') =="
 python -m pytest -x -q -m "not slow"
@@ -44,5 +60,18 @@ echo "== paged-pool smoke (DESIGN.md §4 'Paged pool') =="
 python -m repro.launch.serve --arch qwen2_1_5b --smoke --requests 6 \
     --max-new 12 --capacity 32 --slots 4 --pool-tokens 48 --block-size 8 \
     --kv-quant int8 --coalesce
+
+echo "== fused decode-step smoke (DESIGN.md §4 'Fused decode step') =="
+# kernel-backed paged decode (forced, not auto) with warmup: the steady-state
+# loop must add ZERO decode-step compiles after warmup, and the fused
+# sampler must keep per-step host syncs at 0 (both enforced by the launcher)
+out="$(python -m repro.launch.serve --arch qwen2_1_5b --smoke --requests 6 \
+    --max-new 12 --capacity 32 --slots 4 --pool-tokens 96 --block-size 8 \
+    --decode-backend paged --warmup --max-decode-compiles 0)"
+echo "$out"
+echo "$out" | grep -q "decode backend: paged(" \
+    || { echo "ERROR: serve smoke did not route through the paged kernel"; exit 1; }
+echo "$out" | grep -q "host syncs/step: 0.0" \
+    || { echo "ERROR: fused decode step is syncing logits to the host"; exit 1; }
 
 echo "CI OK"

@@ -65,6 +65,19 @@ def _run(plan: MixerPlan, q, k, v):
     return jnp.einsum("bhmn,bhmd->bhnd", w.astype(z.dtype), z).astype(v.dtype)
 
 
+def _score(shape: MixerShape, device: str) -> float:
+    # the win is reading block-paged serving state without densifying.
+    # latents == 1 is the decode-read signature (a single query row per
+    # head against a long token axis) that only the serving engine's plan
+    # resolution produces — score far above every dense backend there so
+    # "auto" routes paged decode through the kernel. Dense mixer call
+    # sites always carry M > 1 latents and fall back to the old
+    # named-only scores, so they never see this backend by accident.
+    if shape.latents == 1:
+        return 40.0
+    return 1.0 if device == "tpu" else 0.5
+
+
 register(MixerBackend(
     name="paged",
     caps=Capabilities(bidirectional=True, causal=False,
@@ -72,9 +85,6 @@ register(MixerBackend(
                       dtypes=("float32", "bfloat16"), grads=False),
     plan=_plan,
     run=_run,
-    # the win is reading block-paged serving state without densifying; on a
-    # dense call site it is just another fused encode — keep it named-only
-    # (never the "auto" pick) like the other serving-oriented forms
-    score=lambda shape, device: 1.0 if device == "tpu" else 0.5,
+    score=_score,
     doc="FLARE encode via the block-paged gather-decode kernel (serve pool)",
 ))

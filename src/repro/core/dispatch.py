@@ -83,8 +83,8 @@ class MixerPlan:
     params: Mapping[str, Any] = dataclasses.field(default_factory=dict)
 
     def describe(self) -> str:
-        keys = ("block_m", "block_n", "pack", "tile", "chunk_size", "seq_axes",
-                "lat_axes", "mode")
+        keys = ("block_m", "block_n", "block", "pack", "tile", "chunk_size",
+                "seq_axes", "lat_axes", "mode", "quant")
         shown = {k: self.params[k] for k in keys if k in self.params}
         # ';'/'+'-separated so the string stays comma-free inside the 3-field
         # ``name,us_per_call,derived`` benchmark CSV contract

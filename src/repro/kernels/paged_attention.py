@@ -18,16 +18,29 @@ masked (the same validity contract as ``models.attention
 pages — which the pool points at the trash sink — is invisible).
 
 The query axis G generalizes the consumer:
-  - G = 1:  gqa/mla single-token decode reads (per-head query),
+  - G = 1:  gqa/mla single-token decode reads (per-head query; gqa folds
+    its query groups into G, mla its heads — the serving hot path,
+    models.attention routes here when the cache leaf is a kernel view),
   - G = M:  the FLARE **encode** — M latent queries attending over the
     token set is exactly this kernel, which is how the ``paged`` mixer
     backend (repro.backends.paged) runs the encode stage straight off
     block-paged storage.
 
-CPU/GPU run in interpret mode (ci parity tests); TPU compiles. TPU layout
-notes: D should be 128-lane padded and ``block`` a multiple of 8 — the
-wrapper pads D (and G to a sublane multiple) but cannot repack pages, so
-pick ``block_size`` accordingly when targeting TPU.
+Two optional extensions serve the quantized pool and MLA:
+  - ``k_scale``/``v_scale`` [NB, block, H]: per-token-row dequant scales
+    (serve.pool.quant). Dequant happens *inside* the kernel — scores are
+    ``(q k_int^T) * k_scale[t]`` and the value reduction folds ``v_scale``
+    into the probabilities, so int8/fp8 pages are never materialized wide.
+  - ``q2``/``k2_pages``(/``k2_scale``): a second additive score term,
+    ``s += q2 k2^T`` — the MLA absorbed decode (q_abs·c + q_rope·k_rope
+    over the same softmax, value = the latents themselves).
+
+CPU/GPU run in interpret mode (ci parity tests) — un-padded, since lane
+tiling is a TPU constraint. TPU compiles: D should be 128-lane padded and
+``block`` a multiple of 8 — the wrapper pads D (and G to a sublane
+multiple) but cannot repack pages, so pick ``block_size`` accordingly when
+targeting TPU (per-row scale refs carry a size-1 lane and may need a
+layout pass there; interpret mode is the supported CI path).
 """
 from __future__ import annotations
 
@@ -48,8 +61,20 @@ def _vmem(shape, dtype):
     return pltpu.VMEM(shape, dtype)
 
 
-def _paged_kernel(pt_ref, len_ref, q_ref, k_ref, v_ref, o_ref,
-                  max_scr, den_scr, acc_scr, *, block, pages):
+def _paged_kernel(pt_ref, len_ref, *refs, block, pages, scale, has_ks, has_vs,
+                  has_q2, has_k2s):
+    it = iter(refs)
+    q_ref, k_ref, v_ref = next(it), next(it), next(it)
+    ks_ref = next(it) if has_ks else None
+    vs_ref = next(it) if has_vs else None
+    q2_ref = next(it) if has_q2 else None
+    k2_ref = next(it) if has_q2 else None
+    k2s_ref = next(it) if has_k2s else None
+    o_ref, max_scr, den_scr, acc_scr = next(it), next(it), next(it), next(it)
+    # dtype mismatch (f32 decode queries over bf16/int8 pages) also needs
+    # the cast-to-f32 dot path; plain same-dtype calls keep the original ops
+    fused = has_ks or has_vs or has_q2 or q_ref.dtype != k_ref.dtype
+
     b = pl.program_id(0)
     pi = pl.program_id(2)
 
@@ -62,8 +87,30 @@ def _paged_kernel(pt_ref, len_ref, q_ref, k_ref, v_ref, o_ref,
     q = q_ref[0, 0]            # [G, D]
     k = k_ref[0, :, 0, :]      # [block, D] — the page the index_map gathered
     v = v_ref[0, :, 0, :]
-    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
-                            preferred_element_type=jnp.float32)  # [G, block]
+    if fused:
+        # dequant-on-read path: payloads may be int8/fp8 rows, so the dot
+        # runs in f32 and per-row scales fold in AFTER the contraction
+        # (s[g,t] = (q·k_int)[g,t] * scale[t] — scales are per token row)
+        s = jax.lax.dot_general(q.astype(jnp.float32), k.astype(jnp.float32),
+                                (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+        if has_ks:
+            s = s * ks_ref[0, :, 0][None, :]
+        if has_q2:
+            s2 = jax.lax.dot_general(
+                q2_ref[0, 0].astype(jnp.float32),
+                k2_ref[0, :, 0, :].astype(jnp.float32),
+                (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32)
+            if has_k2s:
+                s2 = s2 * k2s_ref[0, :, 0][None, :]
+            s = s + s2
+    else:
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)  # [G, block]
+    if scale != 1.0:
+        # post-dot in f32 — the same op order as the jnp decode paths
+        # (scores * scale), which is what keeps the routes token-exact
+        s = s * scale
     # rows at global index >= lengths[b] are unwritten/garbage (incl. the
     # whole trash sink a not-yet-mapped page points at)
     tok = pi * block + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
@@ -75,9 +122,16 @@ def _paged_kernel(pt_ref, len_ref, q_ref, k_ref, v_ref, o_ref,
     alpha = jnp.exp(m_prev - m_new)
     p = jnp.where(ok, jnp.exp(s - m_new[:, None]), 0.0)
     den_scr[...] = den_scr[...] * alpha + jnp.sum(p, axis=-1)
-    acc_scr[...] = acc_scr[...] * alpha[:, None] + jax.lax.dot_general(
-        p.astype(v.dtype), v, (((1,), (0,)), ((), ())),
-        preferred_element_type=jnp.float32)
+    if fused:
+        if has_vs:
+            p = p * vs_ref[0, :, 0][None, :]
+        pv = jax.lax.dot_general(p, v.astype(jnp.float32),
+                                 (((1,), (0,)), ((), ())),
+                                 preferred_element_type=jnp.float32)
+    else:
+        pv = jax.lax.dot_general(p.astype(v.dtype), v, (((1,), (0,)), ((), ())),
+                                 preferred_element_type=jnp.float32)
+    acc_scr[...] = acc_scr[...] * alpha[:, None] + pv
     max_scr[...] = m_new
 
     @pl.when(pi == pages - 1)
@@ -94,27 +148,49 @@ def paged_attention_pallas(
     lengths: jax.Array,    # [B] int32 valid tokens per lane
     *,
     scale: float = 1.0,
+    k_scale: Optional[jax.Array] = None,   # [NB, block, H] f32 row scales
+    v_scale: Optional[jax.Array] = None,   # [NB, block, H]
+    q2: Optional[jax.Array] = None,        # [B, H, G, D2] second score term
+    k2_pages: Optional[jax.Array] = None,  # [NB, block, H, D2]
+    k2_scale: Optional[jax.Array] = None,  # [NB, block, H]
+    out_dtype=None,
     interpret: bool = False,
 ) -> jax.Array:
-    """Softmax(scale * q k^T over the mapped, valid tokens) @ v, reading
-    K/V page-by-page through the page table. Lanes with length 0 return 0."""
+    """Softmax(scale * (q k^T [+ q2 k2^T]) over the mapped, valid tokens) @ v,
+    reading K/V page-by-page through the page table, dequantizing rows
+    in-register when scales are given. Lanes with length 0 return 0."""
     from jax.experimental.pallas import tpu as pltpu
 
     bsz, h, g, d = q.shape
     block = k_pages.shape[1]
     pages = page_table.shape[1]
-    if scale != 1.0:
-        q = q * jnp.asarray(scale, q.dtype)
+    q_spec = pl.BlockSpec((1, 1, g, d), lambda b, hh, p, pt, ln: (b, hh, 0, 0))
+    page_spec = lambda dd: pl.BlockSpec(
+        (1, block, 1, dd), lambda b, hh, p, pt, ln: (pt[b, p], 0, hh, 0))
+    row_spec = pl.BlockSpec((1, block, 1),
+                            lambda b, hh, p, pt, ln: (pt[b, p], 0, hh))
+    in_specs = [q_spec, page_spec(d), page_spec(d)]
+    operands = [q, k_pages, v_pages]
+    if k_scale is not None:
+        in_specs.append(row_spec)
+        operands.append(k_scale)
+    if v_scale is not None:
+        in_specs.append(row_spec)
+        operands.append(v_scale)
+    if q2 is not None:
+        d2 = q2.shape[-1]
+        in_specs += [pl.BlockSpec((1, 1, g, d2),
+                                  lambda b, hh, p, pt, ln: (b, hh, 0, 0)),
+                     page_spec(d2)]
+        operands += [q2, k2_pages]
+        if k2_scale is not None:
+            in_specs.append(row_spec)
+            operands.append(k2_scale)
+
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=2,
         grid=(bsz, h, pages),
-        in_specs=[
-            pl.BlockSpec((1, 1, g, d), lambda b, hh, p, pt, ln: (b, hh, 0, 0)),
-            pl.BlockSpec((1, block, 1, d),
-                         lambda b, hh, p, pt, ln: (pt[b, p], 0, hh, 0)),
-            pl.BlockSpec((1, block, 1, d),
-                         lambda b, hh, p, pt, ln: (pt[b, p], 0, hh, 0)),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((1, 1, g, d),
                                lambda b, hh, p, pt, ln: (b, hh, 0, 0)),
         scratch_shapes=[
@@ -123,13 +199,19 @@ def paged_attention_pallas(
             _vmem((g, d), jnp.float32),
         ],
     )
-    kernel = functools.partial(_paged_kernel, block=block, pages=pages)
+    kernel = functools.partial(_paged_kernel, block=block, pages=pages,
+                               scale=float(scale),
+                               has_ks=k_scale is not None,
+                               has_vs=v_scale is not None,
+                               has_q2=q2 is not None,
+                               has_k2s=k2_scale is not None)
     return pl.pallas_call(
         kernel,
         grid_spec=grid_spec,
-        out_shape=jax.ShapeDtypeStruct((bsz, h, g, d), v_pages.dtype),
+        out_shape=jax.ShapeDtypeStruct((bsz, h, g, d),
+                                       out_dtype or v_pages.dtype),
         interpret=interpret,
-    )(page_table, lengths, q, k_pages, v_pages)
+    )(page_table, lengths, *operands)
 
 
 def _pad_axis(x: jax.Array, axis: int, multiple: int) -> jax.Array:
@@ -149,35 +231,80 @@ def paged_attention(
     lengths: jax.Array,    # [B] int32
     *,
     scale: float = 1.0,
+    k_scale: Optional[jax.Array] = None,
+    v_scale: Optional[jax.Array] = None,
+    q2: Optional[jax.Array] = None,
+    k2_pages: Optional[jax.Array] = None,
+    k2_scale: Optional[jax.Array] = None,
+    out_dtype=None,
     interpret: Optional[bool] = None,
 ) -> jax.Array:
     """Padding wrapper (ops.py idiom): D to the 128-lane boundary, G to a
     sublane multiple; zero columns don't change q.k scores, padded output
-    rows/cols are sliced away. Pages themselves are never repacked."""
+    rows/cols are sliced away. Pages themselves are never repacked. Lane
+    tiling is a TPU constraint, so interpret mode (the CPU/GPU CI path)
+    skips the pads — the decode hot loop then moves exactly the mapped
+    bytes instead of 128-lane-wide copies of tiny heads."""
     if interpret is None:
         interpret = jax.default_backend() != "tpu"
     bsz, h, g, d = q.shape
-    qp = _pad_axis(_pad_axis(q, 3, LANE), 2, 8)
-    kp = _pad_axis(k_pages, 3, LANE)
-    vp = _pad_axis(v_pages, 3, LANE)
+    if interpret:
+        qp, kp, vp, q2p, k2p = q, k_pages, v_pages, q2, k2_pages
+    else:
+        qp = _pad_axis(_pad_axis(q, 3, LANE), 2, 8)
+        kp = _pad_axis(k_pages, 3, LANE)
+        vp = _pad_axis(v_pages, 3, LANE)
+        q2p = None if q2 is None else _pad_axis(_pad_axis(q2, 3, LANE), 2, 8)
+        k2p = None if k2_pages is None else _pad_axis(k2_pages, 3, LANE)
     o = paged_attention_pallas(qp, kp, vp, page_table.astype(jnp.int32),
                                lengths.astype(jnp.int32), scale=scale,
+                               k_scale=k_scale, v_scale=v_scale,
+                               q2=q2p, k2_pages=k2p, k2_scale=k2_scale,
+                               out_dtype=out_dtype,
                                interpret=interpret)
     return o[:, :, :g, :d]
 
 
+def _gather_rows(pages, page_table):
+    """[NB, block, H, ...] + [B, P] -> [B, H, P*block, ...]."""
+    x = pages[page_table]  # [B, P, block, H, ...]
+    bsz, p, blk = x.shape[:3]
+    x = x.reshape((bsz, p * blk) + x.shape[3:])
+    return jnp.moveaxis(x, 2, 1)
+
+
 def paged_attention_ref(q, k_pages, v_pages, page_table, lengths, *,
-                        scale: float = 1.0) -> jax.Array:
+                        scale: float = 1.0, k_scale=None, v_scale=None,
+                        q2=None, k2_pages=None, k2_scale=None,
+                        out_dtype=None) -> jax.Array:
     """jnp oracle: gather the dense view, mask index >= length, soft-max.
     Mirrors what the serve-side views.gather_leaf + decode read compute."""
-    k = k_pages[page_table]  # [B, P, block, H, D]
-    v = v_pages[page_table]
-    bsz, p, blk, h, d = k.shape
-    k = k.reshape(bsz, p * blk, h, d).transpose(0, 2, 1, 3)  # [B, H, T, D]
-    v = v.reshape(bsz, p * blk, h, d).transpose(0, 2, 1, 3)
-    s = jnp.einsum("bhgd,bhtd->bhgt", q, k).astype(jnp.float32) * scale
-    tok = jax.lax.broadcasted_iota(jnp.int32, (1, 1, 1, p * blk), 3)
+    fused = k_scale is not None or v_scale is not None or q2 is not None
+    k = _gather_rows(k_pages, page_table)  # [B, H, T, D]
+    v = _gather_rows(v_pages, page_table)
+    bsz, h, t, d = k.shape
+    if fused:
+        s = jnp.einsum("bhgd,bhtd->bhgt", q.astype(jnp.float32),
+                       k.astype(jnp.float32)) * scale
+        if k_scale is not None:
+            s = s * _gather_rows(k_scale, page_table)[:, :, None, :]
+        if q2 is not None:
+            s2 = jnp.einsum("bhgd,bhtd->bhgt", q2.astype(jnp.float32),
+                            _gather_rows(k2_pages, page_table)
+                            .astype(jnp.float32)) * scale
+            if k2_scale is not None:
+                s2 = s2 * _gather_rows(k2_scale, page_table)[:, :, None, :]
+            s = s + s2
+    else:
+        s = jnp.einsum("bhgd,bhtd->bhgt", q, k).astype(jnp.float32) * scale
+    tok = jax.lax.broadcasted_iota(jnp.int32, (1, 1, 1, t), 3)
     s = jnp.where(tok < lengths[:, None, None, None], s, -jnp.inf)
     w = jax.nn.softmax(s, axis=-1)
     w = jnp.where(jnp.isnan(w), 0.0, w)  # all-masked lanes -> 0 like the kernel
-    return jnp.einsum("bhgt,bhtd->bhgd", w.astype(v.dtype), v)
+    if fused:
+        if v_scale is not None:
+            w = w * _gather_rows(v_scale, page_table)[:, :, None, :]
+        o = jnp.einsum("bhgt,bhtd->bhgd", w, v.astype(jnp.float32))
+        return o.astype(out_dtype or q.dtype)
+    o = jnp.einsum("bhgt,bhtd->bhgd", w.astype(v.dtype), v)
+    return o if out_dtype is None else o.astype(out_dtype)

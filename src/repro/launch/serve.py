@@ -36,6 +36,24 @@ def main():
                     help="per-request deadline in seconds (expired queued "
                          "requests are dropped at admission)")
     ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--sample", default="greedy", choices=("greedy", "topk"),
+                    help="on-device sampler compiled into the decode step "
+                         "(greedy argmax, or top-k + temperature)")
+    ap.add_argument("--top-k", type=int, default=0,
+                    help="k for --sample topk")
+    ap.add_argument("--warmup", action="store_true",
+                    help="pre-compile every (bucket, lanes) prefill and the "
+                         "fused decode step before serving, so steady state "
+                         "never recompiles")
+    ap.add_argument("--max-decode-compiles", type=int, default=None,
+                    help="exit nonzero if the serving loop compiled the "
+                         "decode step more than this many times (warmup "
+                         "compiles excluded)")
+    ap.add_argument("--decode-backend", default="auto",
+                    choices=("auto", "paged", "gather"),
+                    help="paged-pool decode read route: the Pallas "
+                         "gather-decode kernel ('paged'), the jnp dense "
+                         "gather ('gather'), or policy resolution ('auto')")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--pool-tokens", type=int, default=None,
                     help="total pooled KV tokens — switches the engine to the "
@@ -75,9 +93,19 @@ def main():
                          temperature=args.temperature, seed=args.seed,
                          pool_tokens=args.pool_tokens, kv_quant=args.kv_quant,
                          block_size=args.block_size,
-                         coalesce_prefill=args.coalesce)
+                         coalesce_prefill=args.coalesce,
+                         sample=args.sample, top_k=args.top_k,
+                         decode_backend=args.decode_backend)
     print(f"engine: {args.slots} slots, capacity {args.capacity}, "
           f"{engine.stats['cache']}")
+    print(f"decode backend: {engine.stats['decode_backend']}  "
+          f"sampler: {args.sample}"
+          + (f"(k={args.top_k})" if args.sample == "topk" else ""))
+    if args.warmup:
+        n = engine.warmup(max_prompt_len=args.prompt_len)
+        print(f"warmup: {n} programs compiled in "
+              f"{engine.stats['warmup_s']:.2f}s")
+    warm_decode_compiles = engine.stats["decode_compiles"]
 
     rng = np.random.default_rng(args.seed)
     # pre-draw the workload so --rate only changes arrival timing
@@ -117,6 +145,16 @@ def main():
           f"{s['prefill_compiles']} prefill bucket compiles, "
           f"{s['coalesced_prefills']} coalesced launches, "
           f"{s['dropped']} dropped")
+    serve_compiles = s["decode_compiles"] - warm_decode_compiles
+    print(f"decode compiles: {s['decode_compiles']} total, {serve_compiles} "
+          f"while serving; warmup: {s['warmup_compiles']} programs "
+          f"({s['warmup_s']:.2f}s); host syncs/step: "
+          f"{s['host_syncs_per_step']:.1f}")
+    if (args.max_decode_compiles is not None
+            and serve_compiles > args.max_decode_compiles):
+        raise SystemExit(f"decode step compiled {serve_compiles}x while "
+                         f"serving (bound {args.max_decode_compiles}) — the "
+                         "steady-state loop is retracing")
     if engine.paged:
         p = s["pool"]
         print(f"paged pool: {p['blocks_mapped']}/{p['blocks_total']} blocks "

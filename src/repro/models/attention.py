@@ -227,6 +227,70 @@ def gqa_forward(
     return y
 
 
+def gqa_cache_attend(
+    q: jax.Array,  # [B, H, 1, D] rope'd query for the new token
+    k: jax.Array,  # [B, Hkv, 1, D] rope'd key
+    v: jax.Array,  # [B, Hkv, 1, D]
+    cache: KVCache,
+    *,
+    groups: int,
+    head_dim: int,
+):
+    """Append the new token's K/V to the cache and attend q over the valid
+    prefix — the decode cache hot path, shared by :func:`gqa_decode` and
+    zamba's shared-attention block.
+
+    Two cache representations route here:
+      - dense ``[B, Hkv, cap, D]`` leaves: per-slot ring write
+        (vmapped dynamic_update_slice) + masked SDPA over the capacity;
+      - ``PagedTokenView`` handles (serve pool, kernel mode): the row is
+        appended straight into block storage and the read runs the Pallas
+        gather-decode kernel over the mapped pages (G = groups), never
+        materializing a dense gather.
+    """
+    from repro.serve.pool.views import PagedTokenView
+
+    b = q.shape[0]
+    length = _per_slot(cache.length, b)
+    new_len = length + 1
+
+    if isinstance(cache.k, PagedTokenView):
+        from repro.kernels.paged_attention import paged_attention
+
+        kview = cache.k.append(k[:, :, 0])   # [B, Hkv, D] row
+        vview = cache.v.append(v[:, :, 0])
+        k_pages, k_scale = kview.pages()
+        v_pages, v_scale = vview.pages()
+        hkv = k_pages.shape[2]
+        qk = q[:, :, 0].reshape(b, hkv, groups, head_dim).astype(jnp.float32)
+        out = paged_attention(
+            qk, k_pages, v_pages, kview.pt, new_len,
+            scale=1.0 / math.sqrt(head_dim),
+            k_scale=k_scale, v_scale=v_scale, out_dtype=q.dtype)
+        out = out.reshape(b, hkv * groups, head_dim)[:, :, None, :]
+        return out, KVCache(kview, vview, new_len)
+
+    cap = cache.k.shape[2]
+    slot = jnp.mod(length, cap)  # [B] ring position (== length when unwindowed)
+    # per-slot write positions (slots run at different lengths under
+    # continuous batching): vmap the row update over the batch axis
+    upd = jax.vmap(lambda c, x_, s_: jax.lax.dynamic_update_slice(c, x_, (0, s_, 0)))
+    new_k = upd(cache.k, k.astype(cache.k.dtype), slot)
+    new_v = upd(cache.v, v.astype(cache.v.dtype), slot)
+
+    # f32 scores/weights/value-dot with a post-dot scale multiply — the same
+    # formulation the paged gather-decode kernel computes, so the kernel and
+    # dense routes stay token-exact under greedy decode (pinned by tests)
+    kk = _expand_kv(new_k, groups).astype(jnp.float32)
+    vv = _expand_kv(new_v, groups).astype(jnp.float32)
+    scores = jnp.einsum("bhsd,bhtd->bhst", q.astype(jnp.float32), kk)
+    scores = scores * (1.0 / math.sqrt(head_dim))
+    scores = jnp.where(decode_valid_mask(new_len, cap), scores, -jnp.inf)
+    w = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhst,bhtd->bhsd", w, vv).astype(q.dtype)
+    return out, KVCache(new_k, new_v, new_len)
+
+
 def gqa_decode(
     params: dict,
     x: jax.Array,  # [B, 1, C] the new token
@@ -236,7 +300,6 @@ def gqa_decode(
     positions: jax.Array,  # [B, 1] or [3, B, 1] — absolute position of the new token
 ):
     """Single-token decode against a (possibly ring-buffered) cache."""
-    b = x.shape[0]
     q = _heads(dense(params["wq"], x), cfg.num_heads)  # [B, H, 1, D]
     k = _heads(dense(params["wk"], x), cfg.num_kv_heads)
     v = _heads(dense(params["wv"], x), cfg.num_kv_heads)
@@ -247,26 +310,11 @@ def gqa_decode(
     q = apply_rope(q, ang)
     k = apply_rope(k, ang)
 
-    cap = cache.k.shape[2]
-    length = _per_slot(cache.length, b)
-    slot = jnp.mod(length, cap)  # [B] ring position (== length when unwindowed)
-    # per-slot write positions (slots run at different lengths under
-    # continuous batching): vmap the row update over the batch axis
-    upd = jax.vmap(lambda c, x_, s_: jax.lax.dynamic_update_slice(c, x_, (0, s_, 0)))
-    new_k = upd(cache.k, k.astype(cache.k.dtype), slot)
-    new_v = upd(cache.v, v.astype(cache.v.dtype), slot)
-    new_len = length + 1
-
     groups = cfg.num_heads // cfg.num_kv_heads
-    kk = _expand_kv(new_k, groups).astype(q.dtype)
-    vv = _expand_kv(new_v, groups).astype(q.dtype)
-    scores = jnp.einsum("bhsd,bhtd->bhst", q, kk).astype(jnp.float32)
-    scores = scores / math.sqrt(cfg.head_dim)
-    scores = jnp.where(decode_valid_mask(new_len, cap), scores, -jnp.inf)
-    w = jax.nn.softmax(scores, axis=-1)
-    out = jnp.einsum("bhst,bhtd->bhsd", w.astype(vv.dtype), vv)
+    out, new_cache = gqa_cache_attend(q, k, v, cache, groups=groups,
+                                      head_dim=cfg.head_dim)
     y = dense(params["wo"], _unheads(out))
-    return y, KVCache(new_k, new_v, new_len)
+    return y, new_cache
 
 
 def prefill_kv_cache(k: jax.Array, v: jax.Array, cfg: AttnConfig, capacity: int,
@@ -409,26 +457,54 @@ def mla_decode(
     kr_new = apply_rope(kr_new, ang)
 
     b = x.shape[0]
-    cap = cache.c_kv.shape[1]
     length = _per_slot(cache.length, b)
-    slot = jnp.mod(length, cap)  # [B]
-    upd = jax.vmap(lambda c, x_, s_: jax.lax.dynamic_update_slice(c, x_, (s_, 0)))
-    c_all = upd(cache.c_kv, c_new.astype(cache.c_kv.dtype), slot)
-    kr_all = upd(cache.k_rope, kr_new.astype(cache.k_rope.dtype), slot)
     new_len = length + 1
-
     scale = 1.0 / math.sqrt(m.qk_nope_head_dim + m.qk_rope_head_dim)
-    s_nope = jnp.einsum("bhsr,btr->bhst", q_abs, c_all.astype(x.dtype))
-    s_rope = jnp.einsum("bhsd,btd->bhst", q_rope, kr_all.astype(x.dtype))
-    scores = (s_nope + s_rope).astype(jnp.float32) * scale
-    scores = jnp.where(decode_valid_mask(new_len, cap), scores, -jnp.inf)
-    w = jax.nn.softmax(scores, axis=-1)
-    ctx = jnp.einsum("bhst,btr->bhsr", w.astype(x.dtype), c_all.astype(x.dtype))  # latent context
+
+    from repro.serve.pool.views import PagedTokenView
+
+    if isinstance(cache.c_kv, PagedTokenView):
+        # Kernel route (serve pool): the compressed latents double as K AND
+        # V of the gather-decode kernel (H = 1 page head, G = the mla
+        # heads), with the rotary score q_rope·k_rope riding the kernel's
+        # second score term over the shared softmax.
+        from repro.kernels.paged_attention import paged_attention
+
+        cview = cache.c_kv.append(c_new[:, 0])    # [B, r] row
+        krview = cache.k_rope.append(kr_new[:, 0])
+        c_pages, c_scale = cview.pages()
+        kr_pages, kr_scale = krview.pages()
+        qa = q_abs[:, :, 0][:, None].astype(jnp.float32)   # [B, 1, H, r]
+        qr = q_rope[:, :, 0][:, None].astype(jnp.float32)  # [B, 1, H, rope]
+        ctx = paged_attention(
+            qa, c_pages, c_pages, cview.pt, new_len, scale=scale,
+            k_scale=c_scale, v_scale=c_scale,
+            q2=qr, k2_pages=kr_pages, k2_scale=kr_scale,
+            out_dtype=x.dtype)
+        ctx = ctx[:, 0][:, :, None, :]  # [B, H, 1, r] latent context
+        new_cache = MLACache(cview, krview, new_len)
+    else:
+        cap = cache.c_kv.shape[1]
+        slot = jnp.mod(length, cap)  # [B]
+        upd = jax.vmap(lambda c, x_, s_: jax.lax.dynamic_update_slice(c, x_, (s_, 0)))
+        c_all = upd(cache.c_kv, c_new.astype(cache.c_kv.dtype), slot)
+        kr_all = upd(cache.k_rope, kr_new.astype(cache.k_rope.dtype), slot)
+
+        # f32 formulation matching the kernel route (see gqa_cache_attend)
+        c32 = c_all.astype(jnp.float32)
+        s_nope = jnp.einsum("bhsr,btr->bhst", q_abs.astype(jnp.float32), c32)
+        s_rope = jnp.einsum("bhsd,btd->bhst", q_rope.astype(jnp.float32),
+                            kr_all.astype(jnp.float32))
+        scores = (s_nope + s_rope) * scale
+        scores = jnp.where(decode_valid_mask(new_len, cap), scores, -jnp.inf)
+        w = jax.nn.softmax(scores, axis=-1)
+        ctx = jnp.einsum("bhst,btr->bhsr", w, c32).astype(x.dtype)  # latent context
+        new_cache = MLACache(c_all, kr_all, new_len)
     # Absorb W_uv on the way out: v_h = W_uv_h c  =>  out_h = ctx_h @ W_uv_h
     w_uv = params["w_uv"]["kernel"].astype(x.dtype).reshape(m.kv_lora_rank, h, m.v_head_dim)
     out = jnp.einsum("bhsr,rhd->bhsd", ctx, w_uv)
     y = dense(params["w_o"], _unheads(out))
-    return y, MLACache(c_all, kr_all, new_len)
+    return y, new_cache
 
 
 def prefill_mla_cache(c_kv: jax.Array, k_rope: jax.Array, capacity: int,

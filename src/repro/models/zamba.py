@@ -125,27 +125,12 @@ def _shared_block(shared, lora_q, lora_k, lora_v, lora_gate, x, x0, cfg: ModelCo
     groups = a.num_heads // a.num_kv_heads
     new_cache = None
     if decode:
-        from repro.models.attention import _per_slot
+        # shared cache hot path (models.attention) — handles both the dense
+        # ring-buffer write and the serve pool's kernel-route paged leaves
+        from repro.models.attention import gqa_cache_attend
 
-        bsz = q.shape[0]
-        cap = cache.k.shape[2]
-        length = _per_slot(cache.length, bsz)
-        slot = jnp.mod(length, cap)  # [B]
-        upd = jax.vmap(lambda c, x_, s_: jax.lax.dynamic_update_slice(c, x_, (0, s_, 0)))
-        nk = upd(cache.k, k.astype(cache.k.dtype), slot)
-        nv = upd(cache.v, v.astype(cache.v.dtype), slot)
-        nlen = length + 1
-        kk = _expand_kv(nk, groups).astype(q.dtype)
-        vv = _expand_kv(nv, groups).astype(q.dtype)
-        scores = jnp.einsum("bhsd,bhtd->bhst", q, kk).astype(jnp.float32) / _math.sqrt(a.head_dim)
-        valid = (jax.lax.broadcasted_iota(jnp.int32, (1, 1, 1, cap), 3)
-                 < jnp.minimum(nlen, cap)[:, None, None, None])
-        scores = jnp.where(valid, scores, -jnp.inf)
-        w = jax.nn.softmax(scores, axis=-1)
-        out = jnp.einsum("bhst,bhtd->bhsd", w.astype(vv.dtype), vv)
-        from repro.models.attention import KVCache
-
-        new_cache = KVCache(nk, nv, nlen)
+        out, new_cache = gqa_cache_attend(q, k, v, cache, groups=groups,
+                                          head_dim=a.head_dim)
     else:
         out = attn_sdpa(q, _expand_kv(k, groups), _expand_kv(v, groups),
                         scale=1.0 / _math.sqrt(a.head_dim), causal=True,

@@ -24,11 +24,22 @@ Two pool layouts (DESIGN.md §4):
     unchanged ``model.decode_step``. Admission backpressure is therefore in
     tokens, not slots — the gqa/mla concurrency fix.
 
+**Fused decode step** (DESIGN.md §4): a decode step is ONE compiled device
+program — model decode (through the kernel-backed paged view when the
+engine's MixerPolicy resolution picks the ``paged`` backend for the pool's
+decode-read shape) plus on-device sampling — returning int32 token ids;
+the only per-step host<->device traffic is the fed tokens and the sampled
+ids. ``decode_backend=`` pins the route ("paged" forces the Pallas kernel,
+"gather" the jnp dense-gather view, "auto" resolves).
+
 Scheduling (FIFO admission with an optional block-availability gate, free
 list, deadlines, latency percentiles) is `serve.scheduler.SlotScheduler`.
 Compilation is bounded: prompt buckets are powers of two and decode is a
 single specialization; ``stats["prefill_compiles"]`` counts the distinct
-(bucket, lanes) prefill variants traced.
+(bucket, lanes) prefill variants traced, ``stats["decode_compiles"]`` the
+decode-step traces, and :meth:`ServeEngine.warmup` front-loads all of them
+(keyed on (bucket, lanes), the MaxText offline-inference idiom) so steady
+state never recompiles.
 
 Prefill coalescing (``coalesce_prefill=True``): admissions that share a
 bucket in the same scheduling cycle run as ONE batched prefill launch
@@ -71,7 +82,12 @@ class ServeEngine:
     def __init__(self, model, params, *, capacity: int = 512, slots: int = 8,
                  temperature: float = 0.0, seed: int = 0, min_bucket: int = 8,
                  pool_tokens: Optional[int] = None, kv_quant: str = "none",
-                 block_size: int = 16, coalesce_prefill: bool = False):
+                 block_size: int = 16, coalesce_prefill: bool = False,
+                 sample: str = "greedy", top_k: int = 0,
+                 decode_backend: str = "auto"):
+        if decode_backend not in ("auto", "paged", "gather"):
+            raise ValueError(f"unknown decode_backend {decode_backend!r} "
+                             "(auto | paged | gather)")
         prefill_into = model.prefill_into
         if prefill_into is None and model.prefill is not None \
                 and model.init_caches is not None:
@@ -95,9 +111,15 @@ class ServeEngine:
         self.capacity = capacity
         self.slots = slots
         self.temperature = temperature
+        self.sample_mode = sample
+        self.top_k = top_k
         self.min_bucket = min_bucket
         self.coalesce = coalesce_prefill
         self.key = jax.random.PRNGKey(seed)
+        from repro.serve.sampling import make_sampler
+
+        self._sampler, self._needs_key = make_sampler(temperature, sample, top_k)
+        self._sample_dev = jax.jit(self._sampler)  # prefill logits sampler
 
         self.paged = pool_tokens is not None
         if self.paged:
@@ -119,10 +141,11 @@ class ServeEngine:
             self.pool = self.slot_cache.init(slots)
             self._pt = np.full((slots, self.slot_cache.max_pages),
                                self.slot_cache.trash, np.int32)
+            self._pt_dev = jnp.asarray(self._pt)  # device mirror, re-uploaded
+            self._pt_dirty = False                # only when the table changed
             self._lengths = np.zeros(slots, np.int64)
             self._leases: dict = {}
-            self._const_view_args = (jnp.asarray(self._pt),
-                                     jnp.zeros(slots, jnp.int32))
+            self._const_view_args = (self._pt_dev, jnp.zeros(slots, jnp.int32))
             self._prefill_into = jax.jit(
                 self.slot_cache.make_prefill_into(model.prefill))
         else:
@@ -130,20 +153,121 @@ class ServeEngine:
             self.pool = self.slot_cache.init(slots)
             self._prefill_into = jax.jit(
                 lambda p, b, c, s: prefill_into(p, b, c, s, capacity=capacity))
-        self._decode = jax.jit(model.decode_step)
         self._reset_slot = jax.jit(self.slot_cache.reset)
+        self._decode_backend_opt = decode_backend
+        self._decode_plan = None
+        if self.paged and self._has_paged and decode_backend != "gather":
+            self._decode_plan = self._resolve_decode_plan()
+        if decode_backend == "paged" and self._decode_plan is None:
+            raise ValueError(
+                f"{model.cfg.name}: decode_backend='paged' but the paged "
+                "kernel route is not eligible (no paged token leaves, or "
+                "leaf shapes / backend contract reject the kernel)")
+        if self.paged:
+            spec = self.slot_cache.spec
+            self._view_spec = (dataclasses.replace(spec, kernel=True)
+                               if self._decode_plan is not None else spec)
+        self._decode_compiles = 0
+        self._decode_step = jax.jit(self._make_decode_step())
 
         self.sched = SlotScheduler(slots)
         self._next_rid = 0
         self._cur_tok = np.zeros(slots, np.int32)  # next token fed per slot
         self._buckets_used: set = set()            # (bucket, lanes) traced
+        self.last_logits = None  # device-side stash of the last step's logits
         self.stats = {
             "requests": 0, "tokens_generated": 0, "prefill_s": 0.0,
             "decode_s": 0.0, "decode_steps": 0, "prefill_compiles": 0,
             "slot_utilization": 0.0, "coalesced_prefills": 0,
             "admitted_peak": 0, "mixer_backend": self._mixer_backend(),
             "cache": self.slot_cache.describe(),
+            "decode_backend": self._describe_decode_backend(),
+            "decode_compiles": 0, "warmup_compiles": 0, "warmup_s": 0.0,
+            "sample_host_syncs": 0, "host_syncs_per_step": 0.0,
         }
+
+    # ------------------------------------------------------------------
+    # the fused decode step (DESIGN.md §4 "Fused decode step")
+    # ------------------------------------------------------------------
+    def _resolve_decode_plan(self):
+        """MixerPolicy resolution for the pool's decode-read shape. The
+        shape has ``latents=1`` — one query row per head over the token
+        axis, the decode-read signature only serving produces — which the
+        ``paged`` backend scores far above every dense backend, so "auto"
+        routes kernel-shaped pools through it. Returns the resolved plan
+        (annotated with the pool's block/quant) or None when the kernel
+        route is not eligible (odd leaf shapes, contract failure) — the
+        jnp gather view stays as the fallback."""
+        spec = self.slot_cache.spec
+        tails = []
+        for j, meta in enumerate(spec.paged):
+            rest = self.pool["data"][j].shape[2:]
+            tail = rest[meta.lead:]
+            if len(tail) not in (1, 2):
+                return None  # no [block, H, D] kernel layout for this leaf
+            tails.append(tail)
+        from repro.core.dispatch import MixerPlan, MixerShape
+        from repro.core.policy import MixerPolicy, resolve_policy
+
+        shape = MixerShape(
+            batch=self.slots,
+            heads=max(t[0] if len(t) == 2 else 1 for t in tails),
+            tokens=self.capacity, latents=1,
+            head_dim=max(t[-1] for t in tails))
+        policy = (MixerPolicy(backends=("paged",))
+                  if self._decode_backend_opt == "paged" else MixerPolicy())
+        try:
+            plan = resolve_policy(policy, shape,
+                                  jnp.dtype(spec.paged[0].dtype), causal=False)
+        except Exception:
+            return None
+        if plan.backend != "paged":
+            return None
+        return MixerPlan("paged", {**plan.params, "block": spec.block,
+                                   "quant": spec.quant.name})
+
+    def _describe_decode_backend(self) -> str:
+        """The decode-step route, recorded per bench row (the satellite fix
+        for BENCH rows carrying backend: None)."""
+        if not self.paged:
+            return "dense"
+        if self._decode_plan is not None:
+            return self._decode_plan.describe()
+        return "paged-gather" if self._has_paged else "dense"
+
+    def _make_decode_step(self):
+        """Build the fused step: model decode + on-device sampling in ONE
+        compiled program returning (tokens int32[S], logits, pool). The
+        host sees only the sampled ids — no per-token logits round-trip.
+        The python body runs once per signature, so counting its calls
+        counts compiles (``stats["decode_compiles"]``)."""
+        if self.paged:
+            spec = self._view_spec
+
+            def _fused(params, toks, pool, pt, write_pos, key):
+                from repro.serve.pool import PagedCacheView
+
+                self._decode_compiles += 1  # trace-time only
+                view = PagedCacheView(pool, pt, write_pos, spec)
+                logits, out = self.model.decode_step(params, toks, view)
+                return self._sampler(logits, key), logits, out.pool
+        else:
+
+            def _fused(params, toks, pool, key):
+                self._decode_compiles += 1  # trace-time only
+                logits, new_pool = self.model.decode_step(params, toks, pool)
+                return self._sampler(logits, key), logits, new_pool
+
+        return _fused
+
+    def _next_key(self) -> jax.Array:
+        """Per-sampling-call PRNG key: split exactly like the legacy host
+        ``_sample`` so stochastic runs stay reproducible (and comparable)
+        across the host/device paths. Greedy consumes no entropy."""
+        if self._needs_key:
+            self.key, sub = jax.random.split(self.key)
+            return sub
+        return self.key
 
     def _mixer_backend(self) -> Optional[str]:
         """The FLARE plan get_model resolved at build (for observability in
@@ -238,6 +362,7 @@ class ServeEngine:
         ids = self.alloc.map(lease, bucket_pages)
         self._leases[slot] = lease
         self._pt[slot, :bucket_pages] = ids
+        self._pt_dirty = True
         return np.asarray(ids, np.int32)
 
     # ------------------------------------------------------------------
@@ -250,6 +375,17 @@ class ServeEngine:
         return b
 
     def _sample(self, logits: jax.Array) -> np.ndarray:
+        """Legacy host-side sampler — the per-token device->host round-trip
+        the fused step removed from the hot loop. Kept as the parity
+        reference for the device samplers (pinned by tests); each call is
+        a counted host sync."""
+        self.stats["sample_host_syncs"] += 1
+        if self.sample_mode == "topk":
+            self.key, sub = jax.random.split(self.key)
+            t = self.temperature if self.temperature > 0 else 1.0
+            kth = jax.lax.top_k(logits, self.top_k)[0][..., -1:]
+            masked = jnp.where(logits < kth, -jnp.inf, logits)
+            return np.asarray(jax.random.categorical(sub, masked / t), np.int32)
         if self.temperature <= 0.0:
             return np.asarray(jnp.argmax(logits, axis=-1), np.int32)
         self.key, sub = jax.random.split(self.key)
@@ -277,6 +413,7 @@ class ServeEngine:
             # page-table row goes back to the trash sink
             self.alloc.release(self._leases.pop(slot))
             self._pt[slot] = self.slot_cache.trash
+            self._pt_dirty = True
             self._lengths[slot] = 0
 
     def _prefill_group(self, bucket: int, group) -> None:
@@ -303,7 +440,9 @@ class ServeEngine:
         self._buckets_used.add((bucket, g))
         if g > 1:
             self.stats["coalesced_prefills"] += 1
-        toks = self._sample(logits)  # blocks: prefill has executed
+        # device sampler (same ops as the fused step); the transfer below
+        # blocks until prefill has executed
+        toks = np.asarray(self._sample_dev(logits, self._next_key()))
         now = time.time()
         self.stats["prefill_s"] += now - t0
         self.stats["requests"] += g
@@ -330,16 +469,21 @@ class ServeEngine:
             for req, slot in admitted:
                 self._prefill_group(self._bucket(len(req.prompt)), [(req, slot)])
 
-    def _decode_pool(self, toks: jax.Array):
-        """One decode step over the whole pool. The paged pool goes through
-        the PagedCacheView adapter: pages are appended BEFORE the step when
-        a slot's next write position lands in an unmapped block (reservation
-        guarantees success), idle lanes write into the trash sink."""
+    def _decode_pool(self, toks: jax.Array) -> jax.Array:
+        """One fused decode step over the whole pool — model decode AND
+        sampling in one compiled program; returns the sampled token ids
+        (device array, not yet synced). The paged pool goes through the
+        PagedCacheView adapter (kernel or gather route per the resolved
+        plan): pages are appended BEFORE the step when a slot's next write
+        position lands in an unmapped block (reservation guarantees
+        success), idle lanes write into the trash sink. The device page
+        table is re-uploaded only when the host table actually changed."""
+        key = self._next_key()
         if not self.paged:
-            logits, self.pool = self._decode(self.params, toks, self.pool)
-            return logits
-        from repro.serve.pool import PagedCacheView
-
+            toks_out, logits, self.pool = self._decode_step(
+                self.params, toks, self.pool, key)
+            self.last_logits = logits
+            return toks_out
         if self._has_paged:
             trash = self.slot_cache.trash
             for slot in self.sched.running:
@@ -347,7 +491,11 @@ class ServeEngine:
                 j = p // self.block
                 if self._pt[slot, j] == trash:
                     self._pt[slot, j] = self.alloc.append(self._leases[slot])
-            pt = jnp.asarray(self._pt)
+                    self._pt_dirty = True
+            if self._pt_dirty:
+                self._pt_dev = jnp.asarray(self._pt)
+                self._pt_dirty = False
+            pt = self._pt_dev
             write_pos = jnp.asarray(
                 (self._lengths % self.capacity).astype(np.int32))
         else:
@@ -356,13 +504,13 @@ class ServeEngine:
             # arrays instead of re-transferring them every step (the view's
             # gather/write-back trace to identity under jit)
             pt, write_pos = self._const_view_args
-        view = PagedCacheView(self.pool, pt, write_pos, self.slot_cache.spec)
-        logits, out = self._decode(self.params, toks, view)
-        self.pool = out.pool
+        toks_out, logits, self.pool = self._decode_step(
+            self.params, toks, self.pool, pt, write_pos, key)
+        self.last_logits = logits
         if self._has_paged:
             for slot in self.sched.running:
                 self._lengths[slot] += 1
-        return logits
+        return toks_out
 
     def step(self) -> bool:
         """Admit queued work into free slots, run ONE decode step across the
@@ -372,8 +520,9 @@ class ServeEngine:
                                           len(self.sched.running))
         if self.sched.running:
             t0 = time.time()
-            logits = self._decode_pool(jnp.asarray(self._cur_tok[:, None]))
-            toks = self._sample(logits)
+            toks_dev = self._decode_pool(jnp.asarray(self._cur_tok[:, None]))
+            # the ONLY device->host transfer of the step: S int32 token ids
+            toks = np.asarray(toks_dev)
             now = time.time()
             self.stats["decode_s"] += now - t0
             self.stats["decode_steps"] += 1
@@ -387,8 +536,68 @@ class ServeEngine:
         self._refresh_stats()
         return self.sched.has_work()
 
+    def warmup(self, max_prompt_len: Optional[int] = None,
+               max_lanes: Optional[int] = None) -> int:
+        """Front-load every compile the steady-state loop can hit (the
+        MaxText offline-inference warmup idiom): one prefill trace per
+        (bucket, lanes) key up to ``max_prompt_len`` / ``max_lanes``, plus
+        one fused decode-step trace, all against throwaway inputs — the
+        results are discarded and pool state is untouched (everything is
+        functional). Warmed keys land in the same (bucket, lanes) cache
+        the live loop consults, so they never retrace; after warmup,
+        ``stats["decode_compiles"]`` must not grow in steady state
+        (asserted by scripts/ci.sh). Returns the number of program
+        variants compiled."""
+        t0 = time.time()
+        top = min(max_prompt_len or self.capacity, self.capacity)
+        buckets = [self.min_bucket]
+        while buckets[-1] < top:
+            buckets.append(buckets[-1] * 2)
+        lanes = range(1, (max_lanes or (self.slots if self.coalesce else 1)) + 1)
+        compiled = 0
+        for g in lanes:
+            for bucket in buckets:
+                if (bucket, g) in self._buckets_used:
+                    continue
+                batch = {"tokens": jnp.zeros((g, bucket), jnp.int32),
+                         "lengths": jnp.ones((g,), jnp.int32)}
+                slots_arr = jnp.zeros((g,), jnp.int32)
+                if self.paged:
+                    bids = jnp.full((g, self._pages(bucket)),
+                                    self.slot_cache.trash, jnp.int32)
+                    out = self._prefill_into(self.params, batch, self.pool,
+                                             slots_arr, bids)
+                else:
+                    out = self._prefill_into(self.params, batch, self.pool,
+                                             slots_arr)
+                jax.block_until_ready(out[0])
+                self._buckets_used.add((bucket, g))
+                compiled += 1
+        dc_before = self._decode_compiles
+        toks = jnp.zeros((self.slots, 1), jnp.int32)
+        key = self.key  # traced only; warmup consumes no entropy
+        if self.paged:
+            if self._has_paged:
+                pt, write_pos = self._pt_dev, jnp.zeros(self.slots, jnp.int32)
+            else:
+                pt, write_pos = self._const_view_args
+            out = self._decode_step(self.params, toks, self.pool, pt,
+                                    write_pos, key)
+        else:
+            out = self._decode_step(self.params, toks, self.pool, key)
+        jax.block_until_ready(out[0])
+        compiled += self._decode_compiles - dc_before
+        self.stats["warmup_compiles"] += compiled
+        self.stats["warmup_s"] += time.time() - t0
+        self._refresh_stats()
+        return compiled
+
     def _refresh_stats(self) -> None:
         self.stats["prefill_compiles"] = len(self._buckets_used)
+        self.stats["decode_compiles"] = self._decode_compiles
+        self.stats["host_syncs_per_step"] = (
+            self.stats["sample_host_syncs"]
+            / max(1, self.stats["decode_steps"]))
         self.stats.update(self.sched.stats())
         if self.paged:
             self.stats["pool"] = self.alloc.stats()  # incl. pages_appended

@@ -22,6 +22,16 @@ writes land in the trash block (their page-table rows are all-trash), and
 garbage gathered from unmapped pages is invisible behind the decode
 validity masks (index < length).
 
+When ``PoolSpec.kernel`` is set (the engine flips it after its decode
+``MixerPolicy`` resolution picks the ``paged`` backend), resolution takes
+the **kernel route** instead: paged leaf positions resolve to
+:class:`PagedTokenView` handles — block storage in kernel page layout plus
+the shared page table and precomputed (page, offset) — and the attention
+decode paths append the new token's row directly and hand the pages to
+``kernels.paged_attention``. No dense gather is ever materialized, and the
+write-back is one batched scatter per leaf keyed off the shared (page,
+offset) rather than per-leaf recomputation.
+
 Everything here is jit-traced; the static leaf bookkeeping rides in the
 hashable :class:`PoolSpec` aux data.
 """
@@ -50,6 +60,13 @@ class PagedLeaf:
     view: int            # dense token extent the model expects (== capacity)
     dtype: str           # dense-leaf dtype name (dequant target)
 
+    @property
+    def lead(self) -> int:
+        """Leaf axes preceding the slot axis (e.g. a stacked-layer L) —
+        these become scan axes, so the kernel layout moves them in front
+        of the physical-page axis."""
+        return sum(1 for i in range(self.slot_axis) if i != self.token_axis)
+
 
 @dataclasses.dataclass(frozen=True)
 class PoolSpec:
@@ -63,6 +80,7 @@ class PoolSpec:
     block: int
     max_pages: int
     quant: QuantSpec
+    kernel: bool = False  # resolve to PagedTokenView handles (Pallas decode)
 
 
 # ---------------------------------------------------------------------------
@@ -134,24 +152,113 @@ def scatter_blocks(data: jax.Array, scale: Optional[jax.Array],
     return data, scale
 
 
-def scatter_token(data: jax.Array, scale: Optional[jax.Array],
-                  new_leaf: jax.Array, pt: jax.Array, write_pos: jax.Array,
-                  meta: PagedLeaf, spec: PoolSpec):
+def token_page_off(pt: jax.Array, write_pos: jax.Array, block: int):
+    """(physical page, in-page offset) of each slot's write position. ONE
+    page table is shared across every leaf and layer, so the decode
+    write-back computes this pair once and every leaf's scatter keys off
+    it (the "batched scatter" of DESIGN.md §4's fused decode step)."""
+    page = jnp.take_along_axis(pt, (write_pos // block)[:, None], axis=1)[:, 0]
+    off = write_pos % block
+    return page, off
+
+
+def scatter_token_at(data: jax.Array, scale: Optional[jax.Array],
+                     new_leaf: jax.Array, page: jax.Array, off: jax.Array,
+                     write_pos: jax.Array, meta: PagedLeaf, spec: PoolSpec):
     """Decode write-back: extract the column decode wrote (position
-    ``write_pos[s]`` per slot) and store it at (page, offset). Idle slots'
-    page-table rows are all-trash, so their writes land in the sink."""
+    ``write_pos[s]`` per slot) and store it at the shared (page, offset).
+    Idle slots' page-table rows are all-trash, so their writes land in
+    the sink."""
     y = to_pool_layout(new_leaf, meta.slot_axis, meta.token_axis)  # [S, view, *rest]
     s = y.shape[0]
     idx = write_pos.reshape((s, 1) + (1,) * (y.ndim - 2))
     col = jnp.take_along_axis(y, jnp.broadcast_to(idx, (s, 1) + y.shape[2:]),
                               axis=1)[:, 0]                       # [S, *rest]
     q, sc = quantize(spec.quant, col)
-    page = jnp.take_along_axis(pt, (write_pos // spec.block)[:, None], axis=1)[:, 0]
-    off = write_pos % spec.block
     data = data.at[page, off].set(q.astype(data.dtype))
     if scale is not None:
         scale = scale.at[page, off].set(sc)
     return data, scale
+
+
+def scatter_token(data: jax.Array, scale: Optional[jax.Array],
+                  new_leaf: jax.Array, pt: jax.Array, write_pos: jax.Array,
+                  meta: PagedLeaf, spec: PoolSpec):
+    """Single-leaf convenience over :func:`scatter_token_at`."""
+    page, off = token_page_off(pt, write_pos, spec.block)
+    return scatter_token_at(data, scale, new_leaf, page, off, write_pos,
+                            meta, spec)
+
+
+# ---------------------------------------------------------------------------
+# Kernel-route leaf handle
+# ---------------------------------------------------------------------------
+
+
+class PagedTokenView:
+    """A paged cache leaf in **kernel page layout**, standing in for the
+    dense leaf inside the model's cache pytree when ``PoolSpec.kernel``.
+
+    Children: storage ``data`` ``[*lead, NB+1, block, *tail]`` (lead axes —
+    e.g. a stacked-layer L — moved in front so ``lax.scan`` over layers
+    slices them like any other cache leaf), optional per-row ``scale``,
+    the shared page table ``pt`` [S, P] and the precomputed write target
+    ``(page, off)`` [S] — all broadcast across lead so a scan iteration
+    reconstructs a per-layer view. The attention decode paths call
+    :meth:`append` for the new token's row (the batched write-back: the
+    single shared (page, off) keys every leaf's scatter) and hand
+    :meth:`pages` + ``pt`` to ``kernels.paged_attention``; no dense gather
+    is ever materialized.
+    """
+
+    def __init__(self, data, scale, pt, page, off, meta: PagedLeaf,
+                 block: int, quant: QuantSpec):
+        self.data = data
+        self.scale = scale
+        self.pt = pt
+        self.page = page
+        self.off = off
+        self.meta = meta
+        self.block = block
+        self.quant = quant
+
+    @property
+    def dtype(self):
+        return jnp.dtype(self.meta.dtype)
+
+    def append(self, col: jax.Array) -> "PagedTokenView":
+        """Write the new token's row ``col`` [S, *tail] (quantized) at each
+        slot's (page, offset); idle slots hit the trash sink."""
+        q, sc = quantize(self.quant, col)
+        data = self.data.at[self.page, self.off].set(q.astype(self.data.dtype))
+        scale = self.scale
+        if scale is not None:
+            scale = scale.at[self.page, self.off].set(sc)
+        return PagedTokenView(data, scale, self.pt, self.page, self.off,
+                              self.meta, self.block, self.quant)
+
+    def pages(self):
+        """(data, scale) shaped for the Pallas kernel: data [NB, block, H,
+        D] and scale [NB, block, H] — a featureless leaf (e.g. mla latent
+        rows, tail = (D,)) gets a singleton head axis."""
+        data, scale = self.data, self.scale
+        if data.ndim == 3:
+            data = data[:, :, None, :]
+            if scale is not None:
+                scale = scale[:, :, None]
+        return data, scale
+
+
+def _token_view_flatten(v: PagedTokenView):
+    return (v.data, v.scale, v.pt, v.page, v.off), (v.meta, v.block, v.quant)
+
+
+def _token_view_unflatten(aux, children):
+    return PagedTokenView(*children, *aux)
+
+
+jax.tree_util.register_pytree_node(PagedTokenView, _token_view_flatten,
+                                   _token_view_unflatten)
 
 
 # ---------------------------------------------------------------------------
@@ -193,19 +300,82 @@ class PagedCacheView:
     def writeback(self, new_caches) -> "PagedCacheView":
         """Fold the decode-updated dense caches back into the pool: dense
         leaves replaced wholesale (exactly the dense engine's behaviour),
-        paged leaves receive only the single written token column."""
+        paged leaves receive only the single written token column — one
+        batched scatter per leaf keyed off the shared (page, offset) pair,
+        computed once for the whole pytree."""
         spec = self.spec
         new_leaves = jax.tree.leaves(new_caches)
+        dense = list(self.pool["dense"])
+        data = list(self.pool["data"])
+        scale = list(self.pool["scale"])
+        page, off = token_page_off(self.pt, self.write_pos, spec.block)
+        for leaf, (role, j) in zip(new_leaves, spec.roles):
+            if role == "dense":
+                dense[j] = leaf
+            else:
+                data[j], scale[j] = scatter_token_at(
+                    data[j], scale[j], leaf, page, off, self.write_pos,
+                    spec.paged[j], spec)
+        pool = {"dense": tuple(dense), "data": tuple(data), "scale": tuple(scale)}
+        return PagedCacheView(pool, self.pt, self.write_pos, spec)
+
+    # -- kernel route (PoolSpec.kernel) -----------------------------------
+
+    def kernel_caches(self):
+        """Caches pytree with paged leaf positions holding
+        :class:`PagedTokenView` handles in kernel page layout — the
+        attention decode paths read pages through the Pallas kernel and
+        append the new row in place, so no dense gather happens."""
+        spec = self.spec
+        page, off = token_page_off(self.pt, self.write_pos, spec.block)
+        leaves = []
+        for role, j in spec.roles:
+            if role == "dense":
+                leaves.append(self.pool["dense"][j])
+                continue
+            meta = spec.paged[j]
+            data = self.pool["data"][j]
+            scale = self.pool["scale"][j]
+            lead = meta.lead
+            if lead:
+                src = tuple(range(2, 2 + lead))
+                dst = tuple(range(lead))
+                data = jnp.moveaxis(data, src, dst)
+                if scale is not None:
+                    scale = jnp.moveaxis(scale, src, dst)
+            lead_shape = data.shape[:lead]
+            pt = jnp.broadcast_to(self.pt, lead_shape + self.pt.shape)
+            pg = jnp.broadcast_to(page, lead_shape + page.shape)
+            of = jnp.broadcast_to(off, lead_shape + off.shape)
+            leaves.append(PagedTokenView(data, scale, pt, pg, of, meta,
+                                         spec.block, spec.quant))
+        return jax.tree.unflatten(spec.treedef, leaves)
+
+    def kernel_writeback(self, new_caches) -> "PagedCacheView":
+        """Fold kernel-route caches back: paged leaves already hold the
+        appended storage (``PagedTokenView.append`` wrote the row), so
+        they just move back to canonical ``[NB+1, block, *rest]`` layout;
+        dense leaves are replaced wholesale."""
+        spec = self.spec
+        is_view = lambda x: isinstance(x, PagedTokenView)
+        new_leaves = jax.tree.leaves(new_caches, is_leaf=is_view)
         dense = list(self.pool["dense"])
         data = list(self.pool["data"])
         scale = list(self.pool["scale"])
         for leaf, (role, j) in zip(new_leaves, spec.roles):
             if role == "dense":
                 dense[j] = leaf
-            else:
-                data[j], scale[j] = scatter_token(
-                    data[j], scale[j], leaf, self.pt, self.write_pos,
-                    spec.paged[j], spec)
+                continue
+            meta = spec.paged[j]
+            lead = meta.lead
+            d, s = leaf.data, leaf.scale
+            if lead:
+                src = tuple(range(lead))
+                dst = tuple(range(2, 2 + lead))
+                d = jnp.moveaxis(d, src, dst)
+                if s is not None:
+                    s = jnp.moveaxis(s, src, dst)
+            data[j], scale[j] = d, s
         pool = {"dense": tuple(dense), "data": tuple(data), "scale": tuple(scale)}
         return PagedCacheView(pool, self.pt, self.write_pos, spec)
 
@@ -223,10 +393,14 @@ jax.tree_util.register_pytree_node(PagedCacheView, _view_flatten, _view_unflatte
 
 
 def resolve_cache_view(caches):
-    """The decode-step entry hook: a ``PagedCacheView`` resolves to (dense
-    gather, write-back closure); anything else passes through untouched.
+    """The decode-step entry hook: a ``PagedCacheView`` resolves to (cache
+    pytree, write-back closure); anything else passes through untouched.
     Model decode steps call this once at the top so paged and dense pools
-    share one decode implementation (DESIGN.md §4)."""
+    share one decode implementation (DESIGN.md §4). ``PoolSpec.kernel``
+    picks the route: kernel handles (Pallas gather-decode, in-place
+    append) vs the jnp dense-gather fallback."""
     if isinstance(caches, PagedCacheView):
+        if caches.spec.kernel:
+            return caches.kernel_caches(), caches.kernel_writeback
         return caches.gather(), caches.writeback
     return caches, lambda c: c

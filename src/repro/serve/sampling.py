@@ -1,0 +1,56 @@
+"""On-device token sampling for the fused decode step (DESIGN.md §4).
+
+The legacy hot loop pulled full-vocab logits to the host every step and
+sampled in numpy (``ServeEngine._sample``) — a per-token device→host
+round-trip of ``slots * vocab`` floats. These samplers run *inside* the
+compiled decode step instead, so the only thing crossing the boundary per
+step is the int32 token ids.
+
+Contract: ``fn(logits [S, V] , key) -> tokens int32 [S]``. Every sampler
+takes a key for a uniform jit signature; greedy ignores it (and
+``needs_key=False`` tells the engine not to burn PRNG state on it). The
+ops are kept bit-identical to the host path so the two are interchangeable
+(pinned by tests/test_serve_continuous.py):
+
+  - greedy:       argmax over vocab (temperature <= 0)
+  - temperature:  ``categorical(key, logits / T)``
+  - topk:         logits outside the top-k set masked to -inf, then the
+                  temperature sampler
+"""
+from __future__ import annotations
+
+from typing import Callable, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def make_sampler(temperature: float, sample: str = "greedy",
+                 top_k: int = 0) -> Tuple[Callable, bool]:
+    """Build the device sampler for the engine's (sample, temperature,
+    top_k) knobs. Returns ``(fn, needs_key)``."""
+    if sample not in ("greedy", "topk"):
+        raise ValueError(f"unknown sample mode {sample!r}")
+    if sample == "topk":
+        if top_k < 1:
+            raise ValueError("sample='topk' needs top_k >= 1")
+        t = temperature if temperature > 0 else 1.0
+
+        def _topk(logits, key):
+            kth = jax.lax.top_k(logits, top_k)[0][..., -1:]
+            masked = jnp.where(logits < kth, -jnp.inf, logits)
+            return jax.random.categorical(key, masked / t).astype(jnp.int32)
+
+        return _topk, True
+    if temperature > 0:
+
+        def _temp(logits, key):
+            return jax.random.categorical(key, logits / temperature).astype(jnp.int32)
+
+        return _temp, True
+
+    def _greedy(logits, key):
+        del key
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+
+    return _greedy, False

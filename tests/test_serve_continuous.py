@@ -296,3 +296,75 @@ def test_scheduler_unit():
     st = sched.stats()
     assert st["finished"] == 1 and st["slot_utilization"] == 1.0
     assert np.isfinite(st["latency_p50_s"])
+
+
+# ---------------------------------------------------------------------------
+# on-device sampling (fused decode step, DESIGN.md §4)
+# ---------------------------------------------------------------------------
+
+
+def test_device_sampler_matches_host_sample():
+    """Unit parity: the compiled-step samplers (repro.serve.sampling) are
+    bit-identical to the legacy host ``_sample`` path for greedy /
+    temperature / top-k given the same key, and the host path counts its
+    sync while the device path is key-compatible with ``_next_key``."""
+    from repro.serve.sampling import make_sampler
+
+    model, params = _model("gqa")
+    logits = jax.random.normal(jax.random.PRNGKey(7), (4, model.cfg.vocab),
+                               jnp.float32)
+    for kw in (dict(temperature=0.0),
+               dict(temperature=0.7),
+               dict(temperature=0.9, sample="topk", top_k=5)):
+        eng = ServeEngine(model, params, capacity=32, slots=4, **kw)
+        key_before = eng.key
+        host = eng._sample(logits)
+        fn, needs_key = make_sampler(kw.get("temperature", 0.0),
+                                     sample=kw.get("sample", "greedy"),
+                                     top_k=kw.get("top_k", 0))
+        if needs_key:
+            _, sub = jax.random.split(key_before)  # _next_key's split
+            dev = np.asarray(fn(logits, sub))
+        else:
+            dev = np.asarray(fn(logits, key_before))
+        assert dev.tolist() == host.tolist(), f"sampler diverged for {kw}"
+        assert eng.stats["sample_host_syncs"] == 1  # host path counted
+
+
+def test_topk_sampling_deterministic_across_backends():
+    """Stochastic top-k decode end to end: identical seed => identical
+    sequences on the jnp-gather and kernel-backed paged routes (logits are
+    bit-identical under quant='none' and the PRNG split sequence is
+    shared), and the fused step never syncs logits to the host."""
+    model, params = _model("gqa")
+    reqs = _requests(model.cfg.vocab, n=4)
+    outs = {}
+    for name, be in (("gather", "gather"), ("kernel", "paged")):
+        eng = ServeEngine(model, params, capacity=32, slots=2,
+                          pool_tokens=96, block_size=8, seed=3,
+                          temperature=0.8, sample="topk", top_k=8,
+                          decode_backend=be)
+        for prompt, mn in reqs:
+            eng.submit(prompt, max_new_tokens=mn)
+        outs[name] = [o.tolist() for o in eng.run_all()]
+        assert eng.stats["sample_host_syncs"] == 0
+    assert outs["gather"] == outs["kernel"]
+
+
+def test_warmup_precompiles_decode_and_prefill():
+    """warmup() front-loads every (bucket, lanes) prefill trace and the
+    decode step; the serving loop afterwards adds ZERO decode compiles and
+    zero prefill compiles, and warmup stats record the work."""
+    model, params = _model("gqa")
+    eng = ServeEngine(model, params, capacity=32, slots=2,
+                      pool_tokens=96, block_size=8)
+    n = eng.warmup(max_prompt_len=16)
+    assert n > 0 and eng.stats["warmup_compiles"] == n
+    compiles_after_warmup = eng._decode_compiles
+    pre_compiles = eng.stats["prefill_compiles"]
+    for prompt, mn in _requests(model.cfg.vocab, n=4):
+        eng.submit(prompt[:14], max_new_tokens=mn)
+    eng.run_all()
+    assert eng._decode_compiles == compiles_after_warmup  # steady state: 0 new
+    assert eng.stats["prefill_compiles"] == pre_compiles
+    assert eng.stats["decode_compiles"] == compiles_after_warmup
