@@ -11,6 +11,17 @@ Enters the tracked perf trajectory (BENCH_<tag>.json) with rows per arch:
                               pool geometry/quant, and analytic HBM read
                               bytes per decode step for both layouts — the
                               IO the gather-decode kernel saves.
+    serve/<arch>/prefix_tok_s the content-hash prefix cache (DESIGN.md §4
+                              "Prefix cache") on a synthetic multi-tenant
+                              trace — many users, few prompt templates —
+                              cached vs cold on the SAME pool budget:
+                              derived carries tok/s both ways, admitted-
+                              slot peaks (the suffix-only-staking win),
+                              prefix_hit_rate, COW copies and peak shared
+                              pages.
+
+Every row's derived string records ``prefix_hit_rate`` (0.0 for rows that
+don't enable the cache) so BENCH jsons diff cleanly across PRs.
 
 Workload: a seeded mixed-length batch of requests with staggered
 max_new_tokens (exactly the shape that made the old wave engine waste
@@ -42,6 +53,13 @@ PAGED_BLOCK = 8
 PAGED_QUANT = "int8"
 DENSE_SLOTS = 2      # the byte-budget yardstick: a dense pool of 2 slots
 PAGED_SLOTS = 8      # lane count the paged pool may fill within that budget
+# multi-tenant prefix-cache trace: USERS requests over TEMPLATES shared
+# prompt templates of TEMPLATE_LEN tokens (whole blocks) + 1-4 token tails
+PREFIX_SLOTS = 12
+PREFIX_USERS = 16
+PREFIX_TEMPLATES = 2
+TEMPLATE_LEN = 40
+PREFIX_MAX_NEW = 4
 
 
 def _bench_arch(arch: str, requests: int) -> None:
@@ -69,7 +87,8 @@ def _bench_arch(arch: str, requests: int) -> None:
          f"p99_ms={s['latency_p99_s'] * 1e3:.1f};"
          f"util={s['slot_utilization']:.2f};steps={s['decode_steps']};"
          f"slots={SLOTS};requests={requests};"
-         f"compiles={s['decode_compiles']}",
+         f"compiles={s['decode_compiles']};"
+         f"prefix_hit_rate={s['prefix_hit_rate']:.3f}",
          backend=s["mixer_backend"] or s["decode_backend"])
 
 
@@ -136,7 +155,73 @@ def _bench_paged_arch(arch: str, requests: int) -> None:
          f"pages_appended={s['pool']['pages_appended']};"
          f"coalesced={s['coalesced_prefills']};"
          f"hbm_rd_B_per_step={paged_rd:.0f};dense_rd_B_per_step={dense_rd:.0f};"
-         f"util={s['slot_utilization']:.2f};compiles={s['decode_compiles']}",
+         f"util={s['slot_utilization']:.2f};compiles={s['decode_compiles']};"
+         f"prefix_hit_rate={s['prefix_hit_rate']:.3f}",
+         backend=s["mixer_backend"] or s["decode_backend"])
+
+
+def _tenant_workload(engine: ServeEngine, vocab: int, users: int) -> None:
+    """Many users, few templates: request i = template[i % T] + a 1-4 token
+    tail. The first and last requests are EXACT templates: the first is
+    admitted cold (it seeds the index), the last arrives after registration
+    and so exercises the full-coverage copy-on-write path in a cached run.
+    Drawn identically whether the cache is on or off."""
+    rng = np.random.default_rng(7)
+    templates = [rng.integers(0, vocab, TEMPLATE_LEN)
+                 for _ in range(PREFIX_TEMPLATES)]
+    tails = rng.integers(1, 5, users)
+    for i in range(users):
+        prompt = (templates[i % PREFIX_TEMPLATES].copy()
+                  if i in (0, users - 1) else
+                  np.concatenate([templates[i % PREFIX_TEMPLATES],
+                                  rng.integers(0, vocab, int(tails[i]))]))
+        engine.submit(prompt, max_new_tokens=PREFIX_MAX_NEW)
+
+
+def _bench_prefix_arch(arch: str, users: int) -> None:
+    """Prefix cache on vs off on the SAME paged pool budget (the
+    _bench_paged_arch byte yardstick): the cached run stakes only distinct
+    suffixes, so the same pool admits more concurrent slots."""
+    cfg = get_smoke_config(arch)
+    model = get_model(cfg, seq_len_hint=CAPACITY)
+    params = model.init(jax.random.PRNGKey(0))
+    acct = PagedModelCache(model.init_caches, CAPACITY,
+                           pool_tokens=PAGED_BLOCK, block=PAGED_BLOCK,
+                           quant=PAGED_QUANT)
+    budget_bytes = DENSE_SLOTS * CAPACITY * acct.token_bytes_dense()
+    pool_tokens = (int(budget_bytes // acct.token_bytes_paged())
+                   // PAGED_BLOCK * PAGED_BLOCK)
+
+    def run(prefix_cache: bool):
+        eng = ServeEngine(model, params, capacity=CAPACITY,
+                          slots=PREFIX_SLOTS, seed=0,
+                          pool_tokens=pool_tokens, kv_quant=PAGED_QUANT,
+                          block_size=PAGED_BLOCK, prefix_cache=prefix_cache)
+        eng.warmup(max_prompt_len=TEMPLATE_LEN + 4)
+        _tenant_workload(eng, cfg.vocab, users)
+        shared_peak = 0
+        t0 = time.time()
+        while eng.step():
+            shared_peak = max(shared_peak, eng.alloc.shared_blocks())
+        dt = time.time() - t0
+        return eng, dt, shared_peak
+
+    cold, cold_dt, _ = run(False)
+    warm, dt, shared_peak = run(True)
+    s = warm.stats
+    toks = s["tokens_generated"]
+    cold_toks = cold.stats["tokens_generated"]
+    emit(f"serve/{arch}/prefix_tok_s", dt * 1e6 / max(toks, 1),
+         f"tok_s={toks / dt:.1f};cold_tok_s={cold_toks / cold_dt:.1f};"
+         f"admitted={s['admitted_peak']};"
+         f"cold_admitted={cold.stats['admitted_peak']};"
+         f"slot_gain={s['admitted_peak'] / max(cold.stats['admitted_peak'], 1):.2f};"
+         f"prefix_hit_rate={s['prefix_hit_rate']:.3f};"
+         f"cow_copies={s['cow_copies']};shared_pages_peak={shared_peak};"
+         f"users={users};templates={PREFIX_TEMPLATES};"
+         f"template_len={TEMPLATE_LEN};slots={PREFIX_SLOTS};"
+         f"pool_tokens={pool_tokens};quant={PAGED_QUANT};block={PAGED_BLOCK};"
+         f"compiles={s['decode_compiles']}",
          backend=s["mixer_backend"] or s["decode_backend"])
 
 
@@ -147,6 +232,8 @@ def run() -> None:
         _bench_arch(arch, 4 if smoke else REQUESTS)
     for arch in ARCHS_PAGED[:1] if smoke else ARCHS_PAGED:
         _bench_paged_arch(arch, 6 if smoke else REQUESTS)
+    for arch in ARCHS_PAGED[:1] if smoke else ARCHS_PAGED:
+        _bench_prefix_arch(arch, 8 if smoke else PREFIX_USERS)
 
 
 if __name__ == "__main__":

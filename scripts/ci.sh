@@ -74,4 +74,25 @@ echo "$out" | grep -q "decode backend: paged(" \
 echo "$out" | grep -q "host syncs/step: 0.0" \
     || { echo "ERROR: fused decode step is syncing logits to the host"; exit 1; }
 
+echo "== prefix-cache smoke (DESIGN.md §4 'Prefix cache') =="
+# two waves sharing a 40-token template on a tiny pool: the cached+pinned
+# run must (a) report a nonzero hit rate, (b) exercise at least one
+# copy-on-write (request 0 is the exact template and the pin probe has
+# already registered it), and (c) emit BIT-identical greedy outputs to a
+# cold-cache run of the same seeded workload
+warm="$(python -m repro.launch.serve --arch qwen2_1_5b --smoke --requests 6 \
+    --prompt-len 40 --max-new 6 --capacity 64 --slots 4 --pool-tokens 192 \
+    --block-size 8 --share-prefix 1 --prefix-cache --pin-prompt)"
+echo "$warm" | grep "prefix cache:"
+echo "$warm" | grep -q "prefix cache: enabled=True hit_rate=0\.[1-9]" \
+    || { echo "ERROR: prefix cache reported a zero hit rate"; exit 1; }
+echo "$warm" | grep "prefix cache:" | grep -q "cow_copies=0" \
+    && { echo "ERROR: expected at least one copy-on-write"; exit 1; }
+cold="$(python -m repro.launch.serve --arch qwen2_1_5b --smoke --requests 6 \
+    --prompt-len 40 --max-new 6 --capacity 64 --slots 4 --pool-tokens 192 \
+    --block-size 8 --share-prefix 1)"
+diff <(echo "$warm" | grep '^req ') <(echo "$cold" | grep '^req ') \
+    || { echo "ERROR: prefix-cache outputs diverge from the cold run"; exit 1; }
+echo "prefix-cache smoke OK (bit-identical to cold run)"
+
 echo "CI OK"

@@ -70,6 +70,21 @@ def main():
     ap.add_argument("--mixer", default=None,
                     help="FLARE mixer backend preference, comma-separated "
                          "(e.g. 'causal_pallas,causal_stream'); default: auto")
+    ap.add_argument("--prefix-cache", action="store_true",
+                    help="content-hash block reuse across requests "
+                         "(DESIGN.md §4 'Prefix cache'); needs --pool-tokens "
+                         "and a gqa/mla arch")
+    ap.add_argument("--pin-prompt", action="store_true",
+                    help="pin the shared template's blocks in the pool before "
+                         "serving (prefilled via a probe request), so eviction "
+                         "pressure never reclaims them; needs --share-prefix")
+    ap.add_argument("--share-prefix", type=int, default=0,
+                    help="multi-tenant workload: N means every prompt = one "
+                         "shared --prompt-len template + a short random tail "
+                         "drawn per request from N template variants (request "
+                         "0 is the exact template). 0 = independent prompts. "
+                         "Workload construction ignores --prefix-cache, so "
+                         "cached and cold runs see identical prompts")
     args = ap.parse_args()
 
     cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
@@ -95,7 +110,8 @@ def main():
                          block_size=args.block_size,
                          coalesce_prefill=args.coalesce,
                          sample=args.sample, top_k=args.top_k,
-                         decode_backend=args.decode_backend)
+                         decode_backend=args.decode_backend,
+                         prefix_cache=args.prefix_cache)
     print(f"engine: {args.slots} slots, capacity {args.capacity}, "
           f"{engine.stats['cache']}")
     print(f"decode backend: {engine.stats['decode_backend']}  "
@@ -108,30 +124,53 @@ def main():
     warm_decode_compiles = engine.stats["decode_compiles"]
 
     rng = np.random.default_rng(args.seed)
-    # pre-draw the workload so --rate only changes arrival timing
-    prompts = [rng.integers(0, cfg.vocab, max(1, int(p)))
-               for p in rng.integers(args.prompt_len // 2 + 1,
-                                     args.prompt_len + 1, args.requests)]
+    # pre-draw the workload so --rate only changes arrival timing; the
+    # multi-tenant shape (--share-prefix) is drawn the same way whether the
+    # prefix cache is on or off, so cold/cached runs compare bit-for-bit
+    if args.share_prefix > 0:
+        templates = [rng.integers(0, cfg.vocab, args.prompt_len)
+                     for _ in range(args.share_prefix)]
+        tails = rng.integers(1, 5, args.requests)
+        prompts = [templates[0].copy() if i == 0 else
+                   np.concatenate([templates[i % args.share_prefix],
+                                   rng.integers(0, cfg.vocab, int(tails[i]))])
+                   for i in range(args.requests)]
+    else:
+        templates = []
+        prompts = [rng.integers(0, cfg.vocab, max(1, int(p)))
+                   for p in rng.integers(args.prompt_len // 2 + 1,
+                                         args.prompt_len + 1, args.requests)]
     arrivals = (np.zeros(args.requests) if args.rate <= 0
                 else np.cumsum(rng.exponential(1.0 / args.rate, args.requests)))
 
+    if args.pin_prompt:
+        if not templates:
+            raise SystemExit("--pin-prompt needs --share-prefix")
+        pinned = sum(engine.pin_prefix(t) for t in templates)
+        print(f"pinned {pinned} template blocks")
+
     t0 = time.time()
     submitted = 0
+    traffic: set[int] = set()
     outs: dict[int, np.ndarray] = {}
     while submitted < args.requests or engine.sched.has_work():
         now = time.time() - t0
         while submitted < args.requests and arrivals[submitted] <= now:
-            engine.submit(prompts[submitted], max_new_tokens=args.max_new,
-                          deadline_s=args.deadline)
+            traffic.add(engine.submit(prompts[submitted],
+                                      max_new_tokens=args.max_new,
+                                      deadline_s=args.deadline))
             submitted += 1
         if not engine.step() and submitted < args.requests:
             # open-loop idle gap: wait for the next arrival
             time.sleep(max(0.0, arrivals[submitted] - (time.time() - t0)))
     dt = time.time() - t0
     for r in sorted(engine.sched.finished, key=lambda r: r.rid):
-        outs[r.rid] = np.asarray(r.tokens, np.int32)
-    for rid, o in sorted(outs.items()):
-        print(f"req {rid}: {o.tolist()}")
+        if r.rid in traffic:  # exclude the pin-probe request
+            outs[r.rid] = np.asarray(r.tokens, np.int32)
+    for i, (rid, o) in enumerate(sorted(outs.items())):
+        # stable numbering: a pin probe consumes a rid, so print the traffic
+        # index (diffable against a run without --pin-prompt)
+        print(f"req {i}: {o.tolist()}")
 
     s = engine.stats
     tok_s = s["tokens_generated"] / dt if dt > 0 else float("inf")
@@ -161,6 +200,11 @@ def main():
               f"mapped (peak {p['blocks_peak_mapped']}), "
               f"{p['pages_appended']} pages appended at block boundaries, "
               f"admitted peak {s['admitted_peak']}/{args.slots} slots")
+        print(f"prefix cache: enabled={s['prefix_cache']} "
+              f"hit_rate={s['prefix_hit_rate']:.3f} "
+              f"shared_pages={s['shared_pages']} "
+              f"cow_copies={s['cow_copies']} "
+              f"pinned={s.get('pinned_pages', 0)}")
 
 
 if __name__ == "__main__":

@@ -51,6 +51,12 @@ class Model:
     # into the live slot pool — the continuous-batching serving contract
     # (DESIGN.md §4). None for families without a slot-pool serving path.
     prefill_into: Optional[Callable[..., Any]] = None
+    # suffix prefill (params, batch, caches) -> (logits, caches): continue
+    # an existing cache by batch["tokens"] suffix rows at batch["offsets"]
+    # — the prefix-cache hit path (DESIGN.md §4 "Prefix cache"). Only set
+    # for families whose cache is position-addressable history (gqa/mla,
+    # unwindowed); None disables prefix caching for the family.
+    prefill_suffix: Optional[Callable[..., Any]] = None
     # resolved mixer plans ({"train": ..., "infer": ...}) for FLARE-mixing
     # families; empty for pure-attention/SSM families
     plans: Mapping[str, Any] = field(default_factory=dict)
@@ -179,6 +185,12 @@ def get_model(cfg: ModelConfig, *, policy=None, mesh=None,
         lm_prefill = lambda p, b, cap: t.lm_prefill(p, b, cfg, cap,
                                                     mixer_plan=infer_plan)
         lm_caches = lambda bs, cap: t.init_lm_caches(bs, cfg, cap)
+        # prefix-cache suffix path: only where the cache is stable,
+        # position-addressable history (unwindowed gqa/mla over token ids)
+        lm_suffix = None
+        if (cfg.attn.kind in ("gqa", "mla") and cfg.attn.sliding_window is None
+                and not cfg.inputs_are_embeddings):
+            lm_suffix = lambda p, b, c: t.lm_prefill_suffix(p, b, c, cfg)
         return Model(
             cfg=cfg,
             init=lambda key: t.init_lm(key, cfg),
@@ -190,6 +202,7 @@ def get_model(cfg: ModelConfig, *, policy=None, mesh=None,
             decode_step=lambda p, tok, c: t.lm_decode_step(p, tok, c, cfg),
             init_caches=lm_caches,
             prefill_into=make_prefill_into(lm_prefill, lm_caches),
+            prefill_suffix=lm_suffix,
             plans=plans,
         )
     if fam in ("encdec", "audio"):

@@ -342,6 +342,61 @@ def prefill_kv_cache(k: jax.Array, v: jax.Array, cfg: AttnConfig, capacity: int,
                    jnp.pad(v, pad).astype(jnp.bfloat16), length)
 
 
+def gqa_extend(
+    params: dict,
+    x: jax.Array,  # [B, S, C] suffix tokens (right-padded bucket)
+    cfg: AttnConfig,
+    cache: KVCache,
+    *,
+    positions: jax.Array,  # [B, S] or [3, B, S] — absolute suffix positions
+    offsets: jax.Array,    # [B] int32 — tokens already in the cache (prefix)
+    lengths: jax.Array,    # [B] int32 — true suffix lengths (<= S)
+):
+    """Width-S prefill continuation against an existing cache (the prefix-
+    cache suffix path, DESIGN.md §4 "Prefix cache"): append the suffix's
+    rope'd K/V rows at positions ``offsets + i`` and attend each suffix
+    query causally over prefix + suffix. The score math deliberately
+    mirrors :func:`attn_sdpa`'s xla path OP FOR OP (bf16 score einsum ->
+    f32 cast -> scale -> -inf mask -> softmax -> bf16 value einsum): the
+    prefix-cache acceptance bar is BIT-identical greedy tokens vs a cold
+    full prefill, and that only holds when every reduction matches the
+    prefill's dtype staging exactly (masked lanes contribute exact zeros,
+    so the capacity-vs-bucket axis length difference is rounding-neutral).
+    Rows past ``lengths`` are bucket padding — their cache writes are
+    discarded by the engine's masked scatter and no real query attends to
+    them (the causal mask ends at ``offsets + i``). Unwindowed caches only:
+    a ring buffer's prefix rows are not positionally stable."""
+    q = _heads(dense(params["wq"], x), cfg.num_heads)  # [B, H, S, D]
+    k = _heads(dense(params["wk"], x), cfg.num_kv_heads)
+    v = _heads(dense(params["wv"], x), cfg.num_kv_heads)
+    if cfg.mrope_sections is not None:
+        ang = mrope_angles(positions, cfg.head_dim, cfg.rope_theta, cfg.mrope_sections)
+    else:
+        ang = rope_angles(positions, cfg.head_dim, cfg.rope_theta)
+    q = apply_rope(q, ang)
+    k = apply_rope(k, ang)
+
+    s = x.shape[1]
+    cap = cache.k.shape[2]
+    upd = jax.vmap(lambda c, x_, s_: jax.lax.dynamic_update_slice(c, x_, (0, s_, 0)))
+    new_k = upd(cache.k, k.astype(cache.k.dtype), offsets)
+    new_v = upd(cache.v, v.astype(cache.v.dtype), offsets)
+
+    groups = cfg.num_heads // cfg.num_kv_heads
+    kk = _expand_kv(new_k, groups)
+    vv = _expand_kv(new_v, groups)
+    scores = jnp.einsum("bhsd,bhtd->bhst", q, kk).astype(jnp.float32)
+    scores = scores * (1.0 / math.sqrt(cfg.head_dim))
+    ti = jax.lax.broadcasted_iota(jnp.int32, (1, 1, 1, cap), 3)
+    qi = offsets[:, None, None, None] + jax.lax.broadcasted_iota(
+        jnp.int32, (1, 1, s, 1), 2)
+    scores = jnp.where(ti <= qi, scores, -jnp.inf)
+    w = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhst,bhtd->bhsd", w.astype(vv.dtype), vv)
+    y = dense(params["wo"], _unheads(out))
+    return y, KVCache(new_k, new_v, offsets + lengths)
+
+
 # ---------------------------------------------------------------------------
 # MLA — DeepSeek-V2 multi-head latent attention
 # ---------------------------------------------------------------------------
@@ -505,6 +560,59 @@ def mla_decode(
     out = jnp.einsum("bhsr,rhd->bhsd", ctx, w_uv)
     y = dense(params["w_o"], _unheads(out))
     return y, new_cache
+
+
+def mla_extend(
+    params: dict,
+    x: jax.Array,  # [B, S, C] suffix tokens (right-padded bucket)
+    cfg: AttnConfig,
+    cache: MLACache,
+    *,
+    positions: jax.Array,  # [B, S]
+    offsets: jax.Array,    # [B] int32 — tokens already in the cache
+    lengths: jax.Array,    # [B] int32 — true suffix lengths (<= S)
+):
+    """Width-S prefill continuation over the compressed-latent cache (the
+    prefix-cache suffix path). Deliberately NOT the absorbed decode form:
+    it mirrors :func:`mla_forward` op for op — decompress the (stored +
+    appended) latents to per-head K/V with W_uk/W_uv, then run the exact
+    :func:`attn_sdpa` xla dtype staging (bf16 score einsum -> f32 cast ->
+    scale -> -inf mask -> softmax -> bf16 value einsum). The absorbed form
+    is mathematically equal but contracts in a different order, and the
+    acceptance bar here is BIT-identical greedy tokens vs a cold full
+    prefill. See :func:`gqa_extend` for the padding/masking contract."""
+    m = cfg.mla
+    h = cfg.num_heads
+    q_nope, q_rope = _mla_queries(params, x, cfg, positions)  # [B,H,S,*]
+
+    c_new = rmsnorm(params["kv_norm"], dense(params["w_dkv"], x))  # [B, S, r]
+    kr_new = dense(params["w_kr"], x)
+    ang = rope_angles(positions, m.qk_rope_head_dim, cfg.rope_theta)
+    kr_new = apply_rope(kr_new, ang)
+
+    s = x.shape[1]
+    cap = cache.c_kv.shape[1]
+    upd = jax.vmap(lambda c, x_, s_: jax.lax.dynamic_update_slice(c, x_, (s_, 0)))
+    c_all = upd(cache.c_kv, c_new.astype(cache.c_kv.dtype), offsets)
+    kr_all = upd(cache.k_rope, kr_new.astype(cache.k_rope.dtype), offsets)
+
+    k_nope = _heads(dense(params["w_uk"], c_all), h)  # [B, H, T, nope]
+    v = _heads(dense(params["w_uv"], c_all), h)       # [B, H, T, v_dim]
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)
+    k = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(kr_all[:, None],
+                                  k_nope.shape[:3] + (m.qk_rope_head_dim,))],
+        axis=-1)
+    scale = 1.0 / math.sqrt(m.qk_nope_head_dim + m.qk_rope_head_dim)
+    scores = jnp.einsum("bhsd,bhtd->bhst", q, k).astype(jnp.float32) * scale
+    ti = jax.lax.broadcasted_iota(jnp.int32, (1, 1, 1, cap), 3)
+    qi = offsets[:, None, None, None] + jax.lax.broadcasted_iota(
+        jnp.int32, (1, 1, s, 1), 2)
+    scores = jnp.where(ti <= qi, scores, -jnp.inf)
+    w = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhst,bhtd->bhsd", w.astype(v.dtype), v)
+    y = dense(params["w_o"], _unheads(out))
+    return y, MLACache(c_all, kr_all, offsets + lengths)
 
 
 def prefill_mla_cache(c_kv: jax.Array, k_rope: jax.Array, capacity: int,

@@ -27,12 +27,14 @@ from repro.models.attention import (
     KVCache,
     MLACache,
     gqa_decode,
+    gqa_extend,
     gqa_forward,
     init_gqa,
     init_kv_cache,
     init_mla,
     init_mla_cache,
     mla_decode,
+    mla_extend,
     mla_forward,
     prefill_kv_cache,
     prefill_mla_cache,
@@ -516,6 +518,66 @@ def lm_prefill(params, batch, cfg: ModelConfig, capacity: int, *, impl: str = "a
     logits = logits[:, 0, : cfg.vocab].astype(jnp.float32)
     pos = jnp.full((b,), s, jnp.int32) if lengths is None else lengths
     return logits, LMCaches(dense_caches, layer_caches, pos)
+
+
+def lm_prefill_suffix(params, batch, caches: LMCaches, cfg: ModelConfig):
+    """Prefix-cache suffix prefill (DESIGN.md §4 "Prefix cache"): ``caches``
+    already holds each row's shared prompt prefix (``batch["offsets"]`` [B]
+    tokens, gathered from block storage by the serve pool); run ONLY the
+    suffix tokens — width-S cache-extend attention at absolute positions
+    ``offset + i`` — and return (last-real-token logits, caches advanced to
+    the full prompt length). ``batch["tokens"]`` is a right-padded suffix
+    bucket with true lengths ``batch["lengths"]``.
+
+    gqa/mla only: FLARE streams and rwkv/ssm recurrences are dense
+    token-order states that cannot be reconstructed from a shared block
+    range, so those families keep the full-prompt path (``models/api.py``
+    leaves their ``prefill_suffix`` unset)."""
+    if cfg.attn.kind not in ("gqa", "mla"):
+        raise ValueError(f"prefill_suffix supports gqa/mla, not {cfg.attn.kind!r}")
+    lengths = batch["lengths"]
+    offsets = batch["offsets"]
+    tokens = batch["tokens"]
+    b, s = tokens.shape
+    cd = jnp.dtype(cfg.compute_dtype)
+    x = params["embed"]["table"].astype(cd)[tokens]
+    pos2d = offsets[:, None] + jnp.arange(s, dtype=jnp.int32)[None, :]
+    if cfg.attn.mrope_sections is not None:
+        positions = jnp.broadcast_to(pos2d[None], (3, b, s))
+    else:
+        positions = pos2d
+    ext = gqa_extend if cfg.attn.kind == "gqa" else mla_extend
+
+    def body_for(dense_ffn):
+        def body(x, inp):
+            layer, cache = inp
+            xin = _norm_apply(cfg, layer["norm1"], x)
+            a, cache = ext(layer["attn"], xin, cfg.attn, cache,
+                           positions=positions, offsets=offsets, lengths=lengths)
+            x = x + a
+            xin = _norm_apply(cfg, layer["norm2"], x)
+            if cfg.moe is not None and not dense_ffn:
+                m, _ = moe_ffn(layer["mlp"], xin, cfg.moe)
+            else:
+                m = swiglu(layer["mlp"], xin)
+            return x + m, cache
+
+        return body
+
+    if caches.dense is not None:
+        x, dense_caches = jax.lax.scan(body_for(True), x,
+                                       (params["dense_layers"], caches.dense))
+    else:
+        dense_caches = None
+    x, layer_caches = jax.lax.scan(body_for(False), x,
+                                   (params["layers"], caches.layers))
+    x = _norm_apply(cfg, params["final_norm"], _last_valid(x, lengths))
+    if cfg.tie_embeddings:
+        logits = x @ params["embed"]["table"].astype(x.dtype).T
+    else:
+        logits = dense(params["lm_head"], x)
+    logits = logits[:, 0, : cfg.vocab].astype(jnp.float32)
+    return logits, LMCaches(dense_caches, layer_caches, offsets + lengths)
 
 
 # ---------------------------------------------------------------------------

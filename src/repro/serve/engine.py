@@ -67,6 +67,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.serve.cache import ModelSlotCache
+from repro.serve.pool.blocks import chain_hashes
 from repro.serve.scheduler import ServeRequest, SlotScheduler
 
 
@@ -84,7 +85,7 @@ class ServeEngine:
                  pool_tokens: Optional[int] = None, kv_quant: str = "none",
                  block_size: int = 16, coalesce_prefill: bool = False,
                  sample: str = "greedy", top_k: int = 0,
-                 decode_backend: str = "auto"):
+                 decode_backend: str = "auto", prefix_cache: bool = False):
         if decode_backend not in ("auto", "paged", "gather"):
             raise ValueError(f"unknown decode_backend {decode_backend!r} "
                              "(auto | paged | gather)")
@@ -148,9 +149,21 @@ class ServeEngine:
             self._const_view_args = (self._pt_dev, jnp.zeros(slots, jnp.int32))
             self._prefill_into = jax.jit(
                 self.slot_cache.make_prefill_into(model.prefill))
+            # prefix caching (DESIGN.md §4 "Prefix cache"): needs paged
+            # token leaves AND a family suffix-prefill path (unwindowed
+            # gqa/mla); silently off otherwise so the flag is safe to pass
+            # for any arch (flare/rwkv stay cold-path, hit rate 0)
+            self._prefix_enabled = bool(
+                prefix_cache and self._has_paged
+                and getattr(model, "prefill_suffix", None) is not None)
+            if self._prefix_enabled:
+                self._prefill_suffix = jax.jit(
+                    self.slot_cache.make_prefill_suffix(model.prefill_suffix))
+                self._copy_block = jax.jit(self.slot_cache.copy_block)
         else:
             self.slot_cache = ModelSlotCache(model.init_caches, capacity)
             self.pool = self.slot_cache.init(slots)
+            self._prefix_enabled = False
             self._prefill_into = jax.jit(
                 lambda p, b, c, s: prefill_into(p, b, c, s, capacity=capacity))
         self._reset_slot = jax.jit(self.slot_cache.reset)
@@ -171,6 +184,15 @@ class ServeEngine:
         self._decode_step = jax.jit(self._make_decode_step())
 
         self.sched = SlotScheduler(slots)
+        self._match_on_admit = True
+        if self._prefix_enabled:
+            # queued requests can hold prefix refcounts from enqueue-time
+            # matching; a deadline drop must hand them back (satellite fix)
+            self.sched.on_drop = self._drop_prefix_holds
+        self._pins: list = []            # blocks held alive by pin_prefix
+        self._prefix_hit_tokens = 0      # prompt tokens NOT re-prefilled
+        self._prefix_prompt_tokens = 0   # prompt tokens admitted (hit + cold)
+        self._cow_copies = 0
         self._next_rid = 0
         self._cur_tok = np.zeros(slots, np.int32)  # next token fed per slot
         self._buckets_used: set = set()            # (bucket, lanes) traced
@@ -184,6 +206,8 @@ class ServeEngine:
             "decode_backend": self._describe_decode_backend(),
             "decode_compiles": 0, "warmup_compiles": 0, "warmup_s": 0.0,
             "sample_host_syncs": 0, "host_syncs_per_step": 0.0,
+            "prefix_cache": self._prefix_enabled,
+            "prefix_hit_rate": 0.0, "shared_pages": 0, "cow_copies": 0,
         }
 
     # ------------------------------------------------------------------
@@ -298,11 +322,23 @@ class ServeEngine:
             # pool mid-prefill; capacity is the engine's context budget
             raise ValueError(f"prompt length {prompt.size} exceeds engine "
                              f"capacity {self.capacity}")
+        holds: list = []
         if self.paged and self._has_paged:
+            if self._prefix_enabled and prompt.size + max_new_tokens <= self.capacity:
+                # enqueue-time matching: walk the content index now so the
+                # blocks stay alive (refcounted) while the request queues;
+                # _can_admit re-walks for blocks registered since
+                holds = self._acquire_prefix(prompt)
+            # Feasibility is ALWAYS the full-prompt worst case: prefix hits
+            # only help admission (suffix-sized stake), never become
+            # load-bearing — a dropped hold (deadline, deadlock fallback)
+            # must not leave a request that can never stake at the FIFO head
             need = self._need_pages(prompt.size, max_new_tokens)
             if need > self.alloc.num_blocks:
                 # would deadlock the FIFO queue: the head could never stake
                 # its reservation no matter how much retires
+                for b in holds:
+                    self.alloc.release_ref(b)
                 raise ValueError(
                     f"request needs {need} pages but the pool only has "
                     f"{self.alloc.num_blocks} blocks; raise pool_tokens or "
@@ -312,7 +348,7 @@ class ServeEngine:
         self.sched.submit(ServeRequest(
             rid=rid, prompt=prompt, max_new_tokens=max_new_tokens,
             eos_id=eos_id, deadline_s=deadline_s, on_token=on_token,
-            submit_t=time.time()))
+            submit_t=time.time(), prefix_blocks=holds))
         return rid
 
     # ------------------------------------------------------------------
@@ -339,10 +375,26 @@ class ServeEngine:
 
         ``_pending_pages`` accounts for earlier admissions of the SAME
         scheduling cycle, whose reservations are taken only after
-        ``sched.admit`` returns — a True here is a commitment."""
+        ``sched.admit`` returns — a True here is a commitment.
+
+        With prefix caching the gate first extends the request's hit walk
+        (blocks registered since enqueue — e.g. by the donor that just
+        prefilled) and then stakes only the distinct suffix's pages: shared
+        prefixes directly raise admitted slots."""
         if not self._has_paged:
             return True
-        need = self._need_pages(len(req.prompt), req.max_new_tokens)
+        if (self._prefix_enabled and self._match_on_admit
+                and len(req.prompt) + req.max_new_tokens <= self.capacity):
+            req.prefix_blocks = self._acquire_prefix(
+                req.prompt, held=req.prefix_blocks,
+                margin=self._pending_pages)
+        if req.prefix_blocks:
+            offset, slen = self._split_point(req)
+            if offset + self._bucket(slen) > self.capacity:
+                # the suffix bucket would overrun capacity (clamped write);
+                # rare — take the cold path instead of corrupting rows
+                self._drop_prefix_holds(req)
+        need = self._suffix_need(req)
         if self.alloc.available() - self._pending_pages < need:
             return False
         self._pending_pages += need
@@ -364,6 +416,172 @@ class ServeEngine:
         self._pt[slot, :bucket_pages] = ids
         self._pt_dirty = True
         return np.asarray(ids, np.int32)
+
+    # ------------------------------------------------------------------
+    # prefix cache (DESIGN.md §4 "Prefix cache")
+    # ------------------------------------------------------------------
+    def _acquire_prefix(self, tokens, held=(), margin: int = 0) -> list:
+        """Walk the prompt's chain hashes against the content index, taking
+        one reference per hit block (monotone: stops at the first miss).
+        ``held`` = blocks this request already references (extension re-walk
+        at admission); ``margin`` = pages committed to earlier admissions in
+        the same cycle, which a cached-free resurrection must not eat."""
+        hashes = chain_hashes(tokens, self.block)
+        out = list(held)
+        for h in hashes[len(out):]:
+            b = self.alloc.lookup(h)
+            if b is None or not self.alloc.acquire(b, margin=margin):
+                break
+            out.append(b)
+        return out
+
+    def _drop_prefix_holds(self, req: ServeRequest) -> None:
+        """Release the refcounts a queued request holds from matching —
+        the scheduler's on_drop hook (deadline expiry), submit's rejection
+        path, and the deadlock fallback all route here."""
+        for b in req.prefix_blocks:
+            self.alloc.release_ref(b)
+        req.prefix_blocks = []
+
+    def _kept_shared(self, req: ServeRequest) -> int:
+        """How many of the request's hit blocks stay SHARED in its page
+        table. Full coverage (the whole prompt is hit full blocks) keeps
+        k-1: the last block is copy-on-written so the recomputed final
+        token has a private write target (and supplies first-token logits)."""
+        k = len(req.prefix_blocks)
+        if k == 0:
+            return 0
+        return k - 1 if k * self.block >= len(req.prompt) else k
+
+    def _split_point(self, req: ServeRequest):
+        """(offset, suffix_len): where recompute starts. Partial coverage
+        resumes at the first un-hit block boundary; full coverage recomputes
+        only the final token (into its COW'd block)."""
+        length = len(req.prompt)
+        k = len(req.prefix_blocks)
+        if k * self.block >= length:
+            return length - 1, 1
+        return k * self.block, length - k * self.block
+
+    def _suffix_need(self, req: ServeRequest) -> int:
+        """Pages the admission gate must stake: the full horizon minus the
+        shared blocks the request keeps — the O(distinct-suffix) admission
+        claim. Cold requests fall back to the worst-case `_need_pages`."""
+        if not req.prefix_blocks:
+            return self._need_pages(len(req.prompt), req.max_new_tokens)
+        horizon = self._pages(len(req.prompt) + req.max_new_tokens)
+        return horizon - self._kept_shared(req)
+
+    def _register_blocks(self, req: ServeRequest, slot: int) -> None:
+        """Content-index the prompt's full blocks once their rows are in
+        block storage (host bookkeeping; device ordering is program order).
+        Only wrap-free requests register: a sequence that can exceed
+        capacity overwrites its low pages in place, which would poison the
+        index. Keep-first registration makes concurrent identical prompts
+        converge on the first prefiller's blocks."""
+        if not self._prefix_enabled:
+            return
+        if len(req.prompt) + req.max_new_tokens > self.capacity:
+            return
+        for i, h in enumerate(chain_hashes(req.prompt, self.block)):
+            self.alloc.register(int(self._pt[slot, i]), h)
+
+    def _stake_suffix(self, req: ServeRequest, slot: int) -> None:
+        """Map an admitted prefix-hit's pages: shared blocks become logical
+        pages [0, kept) (reference ownership moves from the request's holds
+        into the slot's lease), private pages cover the rest of the prompt;
+        on full coverage the final hit block is device-copied into the
+        first private page (copy-on-write) so the last token's row — and
+        every decode append after it — lands privately. Decode appends can
+        never touch a shared block: shared pages cover only positions
+        < offset, and all writes happen at >= offset."""
+        length = len(req.prompt)
+        kept = self._kept_shared(req)
+        lease = self.alloc.reserve(self._suffix_need(req))
+        shared = req.prefix_blocks[:kept]
+        cow_src = req.prefix_blocks[kept:]   # [] or [the full-coverage block]
+        self.alloc.adopt(lease, shared)
+        priv = self.alloc.map(lease, self._pages(length) - kept)
+        self._leases[slot] = lease
+        self._lengths[slot] = length
+        self._pt[slot, :kept] = shared
+        self._pt[slot, kept:self._pages(length)] = priv
+        self._pt_dirty = True
+        if cow_src:
+            self.pool = self._copy_block(
+                self.pool, jnp.asarray(cow_src[0], jnp.int32),
+                jnp.asarray(priv[0], jnp.int32))
+            self.alloc.release_ref(cow_src[0])  # the hold on the source
+            self._cow_copies += 1
+        req.prefix_blocks = []  # references now live in the lease
+
+    def _prefill_suffix_one(self, req: ServeRequest, slot: int) -> None:
+        """Admission path for a prefix-cache hit: stake shared + private
+        pages, then run the suffix-only insertion prefill — the model
+        extends the gathered prefix context by the suffix rows; only rows
+        [offset, prompt_len) are scattered back (masked, so bucket padding
+        lands in the trash sink). Never coalesced: hit admissions are
+        per-request launches at the (suffix bucket, 1) key."""
+        offset, slen = self._split_point(req)
+        t0 = time.time()
+        self._stake_suffix(req, slot)
+        self._prefix_hit_tokens += offset
+        self._prefix_prompt_tokens += len(req.prompt)
+        bucket = self._bucket(slen)
+        tokens = np.zeros((1, bucket), np.int32)
+        tokens[0, :slen] = req.prompt[offset:]
+        batch = {"tokens": jnp.asarray(tokens),
+                 "lengths": jnp.asarray([slen], jnp.int32),
+                 "offsets": jnp.asarray([offset], jnp.int32)}
+        logits, self.pool = self._prefill_suffix(
+            self.params, batch, self.pool, jnp.asarray([slot]),
+            jnp.asarray(self._pt[slot:slot + 1]))
+        self._buckets_used.add(("sfx", bucket, 1))
+        toks = np.asarray(self._sample_dev(logits, self._next_key()))
+        now = time.time()
+        self.stats["prefill_s"] += now - t0
+        self.stats["requests"] += 1
+        self._register_blocks(req, slot)
+        if self._emit(req, int(toks[0]), now):
+            self._retire(slot, now)
+        else:
+            self._cur_tok[slot] = int(toks[0])
+
+    def pin_prefix(self, tokens) -> int:
+        """Pin a hot template's full blocks in the content index so they
+        survive pool churn: the engine holds one reference per block until
+        :meth:`release_pins`, so retirement can never recycle them. When
+        the template is not yet cached it is prefilled through the normal
+        request path (a max_new=1 probe — numerically identical to any
+        cold admission), then each full block's reference is taken.
+        Returns the number of blocks pinned (0 when prefix caching is off
+        or the template fits no full block)."""
+        if not self._prefix_enabled:
+            return 0
+        tokens = np.asarray(tokens, np.int32)
+        hashes = chain_hashes(tokens, self.block)
+        if not hashes:
+            return 0
+        if any(self.alloc.lookup(h) is None for h in hashes):
+            rid = self.submit(tokens, max_new_tokens=1)
+            while any(r.rid == rid for r in self.sched.waiting) or any(
+                    r.rid == rid for r in self.sched.running.values()):
+                self.step()
+        pinned = 0
+        for h in hashes:
+            b = self.alloc.lookup(h)
+            if b is None or not self.alloc.acquire(b):
+                break
+            self._pins.append(b)
+            pinned += 1
+        return pinned
+
+    def release_pins(self) -> None:
+        """Drop every pin reference (pinned blocks become cached-free —
+        still indexed, reclaimable under pressure)."""
+        for b in self._pins:
+            self.alloc.release_ref(b)
+        self._pins.clear()
 
     # ------------------------------------------------------------------
     # the continuous loop
@@ -446,6 +664,12 @@ class ServeEngine:
         now = time.time()
         self.stats["prefill_s"] += now - t0
         self.stats["requests"] += g
+        for req, slot in group:
+            if self.paged and self._prefix_enabled:
+                # cold prompts become donors: index their full blocks (and
+                # count their tokens in the hit-rate denominator)
+                self._register_blocks(req, slot)
+                self._prefix_prompt_tokens += len(req.prompt)
         for i, (req, slot) in enumerate(group):
             if self._emit(req, int(toks[i]), now):
                 self._retire(slot, now)
@@ -454,20 +678,48 @@ class ServeEngine:
 
     def _admit(self) -> None:
         self._pending_pages = 0
+        self._match_on_admit = True
+        now = time.time()
         admitted = self.sched.admit(
-            time.time(), can_admit=self._can_admit if self.paged else None)
+            now, can_admit=self._can_admit if self.paged else None)
+        if (not admitted and self._prefix_enabled and not self.sched.running
+                and self.sched.waiting):
+            # Deadlock fallback: queued holds (and resurrections the gate
+            # itself takes) can pin enough blocks that the idle pool can't
+            # stake the FIFO head — and nothing will ever retire to free
+            # them. Drop every queued hold (submit guaranteed worst-case
+            # feasibility without them) and retry once COLD, matching
+            # disabled so the gate can't re-acquire what it just dropped.
+            for r in self.sched.waiting:
+                self._drop_prefix_holds(r)
+            self._pending_pages = 0
+            self._match_on_admit = False
+            try:
+                admitted = self.sched.admit(now, can_admit=self._can_admit)
+            finally:
+                self._match_on_admit = True
+            if not admitted and not self.sched.running and self.sched.waiting:
+                raise RuntimeError(
+                    "pool wedged: the queue head cannot stake its pages even "
+                    "with every prefix hold dropped and nothing running — "
+                    "pinned blocks exceed the pool's headroom (release_pins "
+                    "or raise pool_tokens)")
         if not admitted:
             return
+        cold = [(r, s) for r, s in admitted if not r.prefix_blocks]
+        hits = [(r, s) for r, s in admitted if r.prefix_blocks]
         if self.coalesce:
             groups: dict = {}
-            for req, slot in admitted:
+            for req, slot in cold:
                 groups.setdefault(self._bucket(len(req.prompt)), []).append(
                     (req, slot))
             for bucket, group in groups.items():
                 self._prefill_group(bucket, group)
         else:
-            for req, slot in admitted:
+            for req, slot in cold:
                 self._prefill_group(self._bucket(len(req.prompt)), [(req, slot)])
+        for req, slot in hits:
+            self._prefill_suffix_one(req, slot)
 
     def _decode_pool(self, toks: jax.Array) -> jax.Array:
         """One fused decode step over the whole pool — model decode AND
@@ -573,6 +825,28 @@ class ServeEngine:
                 jax.block_until_ready(out[0])
                 self._buckets_used.add((bucket, g))
                 compiled += 1
+        if self.paged and self._prefix_enabled:
+            # prefix-hit admissions launch (suffix bucket, 1 lane) programs
+            # — usually SMALLER buckets than any full prompt uses — plus the
+            # COW block copy; trace them all so a hit never compiles in
+            # steady state (--max-decode-compiles 0 must keep holding)
+            for bucket in buckets:
+                key2 = ("sfx", bucket, 1)
+                if key2 in self._buckets_used:
+                    continue
+                batch = {"tokens": jnp.zeros((1, bucket), jnp.int32),
+                         "lengths": jnp.ones((1,), jnp.int32),
+                         "offsets": jnp.zeros((1,), jnp.int32)}
+                pt_row = jnp.full((1, self.slot_cache.max_pages),
+                                  self.slot_cache.trash, jnp.int32)
+                out = self._prefill_suffix(self.params, batch, self.pool,
+                                           jnp.zeros((1,), jnp.int32), pt_row)
+                jax.block_until_ready(out[0])
+                self._buckets_used.add(key2)
+                compiled += 1
+            trash = jnp.asarray(self.slot_cache.trash, jnp.int32)
+            self.pool = self._copy_block(self.pool, trash, trash)
+            compiled += 1
         dc_before = self._decode_compiles
         toks = jnp.zeros((self.slots, 1), jnp.int32)
         key = self.key  # traced only; warmup consumes no entropy
@@ -601,6 +875,12 @@ class ServeEngine:
         self.stats.update(self.sched.stats())
         if self.paged:
             self.stats["pool"] = self.alloc.stats()  # incl. pages_appended
+            self.stats["prefix_hit_rate"] = (
+                self._prefix_hit_tokens / self._prefix_prompt_tokens
+                if self._prefix_prompt_tokens else 0.0)
+            self.stats["shared_pages"] = self.alloc.shared_blocks()
+            self.stats["cow_copies"] = self._cow_copies
+            self.stats["pinned_pages"] = len(self._pins)
 
     # ------------------------------------------------------------------
     # convenience drivers

@@ -15,8 +15,22 @@ the device owns the block *storage* (``paged_cache``), this module owns
     append can never fail mid-decode: backpressure happens only at
     admission, never as a mid-flight OOM. (Reserve-bucket-only + preemption
     is the follow-up that would relax this — ROADMAP.)
-  - **Double-free / foreign-free detection**: releasing a block that is not
-    currently mapped raises, which is what the allocator unit tests pin.
+  - **Refcounts + content index** (DESIGN.md §4 "Prefix cache"): every
+    mapped block carries a refcount; full prompt blocks register under a
+    *chain hash* of their token ids (`chain_hashes`), so a later request
+    whose prompt shares the prefix can `acquire` the same physical block
+    instead of re-prefilling it. Hashing token ids (not stored bytes)
+    makes sharing quantization-independent; chaining makes a block's
+    identity include everything before it, so a lookup hit is a true
+    prefix match, never a content coincidence mid-sequence.
+  - **Cached-free blocks**: a block whose refcount reaches zero returns to
+    the free list but KEEPS its hash registration — its contents are still
+    valid on device (nothing writes freed blocks) and a future `acquire`
+    resurrects it off the free list. `map` handing the block to fresh
+    content is the eviction point: the stale hash is dropped there.
+  - **Double-free / foreign-free / underflow detection**: releasing a
+    block that is not currently mapped raises (the allocator unit tests
+    pin this), and a refcount that would go negative raises too.
 
 The per-slot **page table** lives with the engine as a host ``numpy`` array
 (mirrored to the device per decode step); unmapped entries point at the
@@ -25,14 +39,37 @@ sink no live request reads.
 """
 from __future__ import annotations
 
+import bisect
 import dataclasses
-from typing import List
+import hashlib
+from typing import Dict, List, Optional, Sequence
+
+import numpy as np
+
+
+def chain_hashes(tokens, block: int) -> List[bytes]:
+    """Chain hash per FULL block of a token-id sequence: ``h_i =
+    blake2b(h_{i-1} || tokens[i*block:(i+1)*block])``. Partial trailing
+    blocks get no hash (their contents are still growing). The chain makes
+    block *i*'s identity include the whole prefix before it, which is what
+    lets the engine walk a new prompt against the index monotonically."""
+    tokens = np.ascontiguousarray(np.asarray(tokens, np.int32).reshape(-1))
+    out: List[bytes] = []
+    h = b"\x00" * 16
+    for i in range(tokens.size // block):
+        h = hashlib.blake2b(
+            h + tokens[i * block:(i + 1) * block].tobytes(),
+            digest_size=16).digest()
+        out.append(h)
+    return out
 
 
 @dataclasses.dataclass
 class PageLease:
     """One admitted request's hold on the pool: ``reserved`` pages not yet
-    mapped plus the physical ids already ``mapped`` (in logical-page order)."""
+    mapped plus the physical ids already ``mapped`` (in logical-page order).
+    A mapped id may be a *shared* prefix block (refcount > 1) adopted at
+    admission — release decrements, the block frees only at zero."""
 
     reserved: int
     mapped: List[int] = dataclasses.field(default_factory=list)
@@ -46,10 +83,15 @@ class BlockAllocator:
         self.block = block
         self.trash = num_blocks  # reserved sink id; storage allocates +1
         self._free: List[int] = list(range(num_blocks))
-        self._mapped: set = set()   # blocks currently held by some lease
+        self._mapped: set = set()   # blocks currently held by >= 1 reference
         self._reserved = 0
+        self._ref: Dict[int, int] = {}      # mapped block -> refcount
+        self._hash_of: Dict[int, bytes] = {}  # block -> registered chain hash
+        self._by_hash: Dict[bytes, int] = {}  # chain hash -> physical block
         self.pages_appended = 0     # boundary-crossing maps (stats)
         self.peak_mapped = 0        # high-water mark of mapped blocks
+        self.prefix_hits = 0        # acquire() calls that took a reference
+        self.hash_evictions = 0     # cached-free blocks recycled to fresh use
 
     # -- admission -------------------------------------------------------
     def available(self) -> int:
@@ -70,12 +112,17 @@ class BlockAllocator:
     # -- mapping ---------------------------------------------------------
     def map(self, lease: PageLease, pages: int = 1) -> List[int]:
         """Convert ``pages`` of the lease's reservation into physical block
-        ids (lowest free ids first — deterministic)."""
+        ids (lowest free ids first — deterministic). A recycled cached-free
+        block loses its stale hash registration here: fresh content is
+        about to overwrite it."""
         if pages > lease.reserved:
             raise RuntimeError(
                 f"lease holds {lease.reserved} reserved pages, asked for {pages}")
         ids = self._free[:pages]
         del self._free[:pages]
+        for b in ids:
+            self._evict_hash(b)
+            self._ref[b] = 1
         self._mapped.update(ids)
         self._reserved -= pages
         lease.reserved -= pages
@@ -89,19 +136,84 @@ class BlockAllocator:
         self.pages_appended += 1
         return page
 
+    # -- content-hash index (DESIGN.md §4 "Prefix cache") ----------------
+    def register(self, block: int, h: bytes) -> None:
+        """Index ``block`` under chain hash ``h``. Keep-first: if the hash
+        already names a live or cached block, the existing binding wins —
+        concurrent requests prefilling the same prompt converge on one
+        physical block as soon as the first one registers."""
+        if h in self._by_hash:
+            return
+        old = self._hash_of.get(block)
+        if old is not None:  # rebinding a block to new content's hash
+            self._by_hash.pop(old, None)
+        self._hash_of[block] = h
+        self._by_hash[h] = block
+
+    def lookup(self, h: bytes) -> Optional[int]:
+        """Physical block registered under chain hash ``h``, or None."""
+        return self._by_hash.get(h)
+
+    def acquire(self, block: int, margin: int = 0) -> bool:
+        """Take one reference on an indexed block (a prefix hit). A live
+        block just increments; a cached-free block is resurrected off the
+        free list — but only while that leaves every outstanding
+        reservation plus ``margin`` pages (the admission cycle's pending
+        stakes) coverable, so resurrection can never starve a lease whose
+        admission was already promised. Returns False when it can't."""
+        if block in self._mapped:
+            self._ref[block] += 1
+            self.prefix_hits += 1
+            return True
+        if block not in self._hash_of:
+            raise RuntimeError(f"acquire of unindexed block {block}")
+        if len(self._free) - self._reserved - margin < 1:
+            return False
+        self._free.remove(block)
+        self._mapped.add(block)
+        self._ref[block] = 1
+        self.prefix_hits += 1
+        self.peak_mapped = max(self.peak_mapped, self.mapped_blocks())
+        return True
+
+    def adopt(self, lease: PageLease, blocks: Sequence[int]) -> None:
+        """Attach already-acquired shared blocks to a lease (in logical-page
+        order, ahead of any privately mapped pages). The lease now owns the
+        references: its release decrements them."""
+        lease.mapped.extend(blocks)
+
+    def _evict_hash(self, block: int) -> None:
+        h = self._hash_of.pop(block, None)
+        if h is not None:
+            self._by_hash.pop(h, None)
+            self.hash_evictions += 1
+
     # -- retirement ------------------------------------------------------
+    def release_ref(self, block: int) -> None:
+        """Drop one reference. The block returns to the free list only at
+        refcount zero — and keeps its hash registration there (cached-free:
+        resurrectable until `map` recycles it). Double-free AND foreign-free
+        raise, as does a refcount that would underflow."""
+        if block not in self._mapped:
+            raise RuntimeError(f"double/foreign free of block {block}")
+        r = self._ref.get(block, 0)
+        if r <= 0:
+            raise RuntimeError(f"refcount underflow on block {block}")
+        if r > 1:
+            self._ref[block] = r - 1
+            return
+        del self._ref[block]
+        self._mapped.discard(block)
+        bisect.insort(self._free, block)  # lowest-id-first stays deterministic
+
     def release(self, lease: PageLease) -> None:
-        """Return a lease's mapped blocks and unused reservation to the
-        free list. Double-free AND foreign-free raise: a block is
-        releasable only while in the live mapped set — a stale lease whose
-        blocks went back (double free) or were re-mapped to another lease
-        and released twice (aliasing) both trip the check."""
+        """Return a lease's references and unused reservation. Private
+        blocks (refcount 1) free immediately; shared prefix blocks just
+        decrement. A stale lease whose blocks went back (double free) or
+        were re-mapped to another lease and over-released (aliasing) trips
+        `release_ref`'s checks."""
         for b in lease.mapped:  # one at a time: catches duplicates in-lease
-            if b not in self._mapped:
-                raise RuntimeError(f"double/foreign free of block {b}")
-            self._mapped.discard(b)
-        self._free.extend(lease.mapped)
-        self._free.sort()  # lowest-id-first stays deterministic after churn
+            self.release_ref(b)
         # the unmapped remainder of the reservation becomes available again
         self._reserved -= lease.reserved
         assert self._reserved >= 0, "reservation accounting went negative"
@@ -112,6 +224,13 @@ class BlockAllocator:
     def mapped_blocks(self) -> int:
         return self.num_blocks - len(self._free)
 
+    def ref(self, block: int) -> int:
+        return self._ref.get(block, 0)
+
+    def shared_blocks(self) -> int:
+        """Mapped blocks referenced by more than one lease/pin."""
+        return sum(1 for r in self._ref.values() if r > 1)
+
     def stats(self) -> dict:
         return {
             "blocks_total": self.num_blocks,
@@ -119,5 +238,9 @@ class BlockAllocator:
             "blocks_mapped": self.mapped_blocks(),
             "blocks_reserved": self._reserved,
             "blocks_peak_mapped": self.peak_mapped,
+            "blocks_shared": self.shared_blocks(),
+            "blocks_indexed": len(self._by_hash),
             "pages_appended": self.pages_appended,
+            "prefix_hits": self.prefix_hits,
+            "hash_evictions": self.hash_evictions,
         }

@@ -35,7 +35,8 @@ import jax.numpy as jnp
 from repro.serve.cache import _slot_axis
 from repro.serve.pool.blocks import BlockAllocator
 from repro.serve.pool.quant import get_quant
-from repro.serve.pool.views import PagedLeaf, PoolSpec, scatter_blocks
+from repro.serve.pool.views import (PagedLeaf, PoolSpec, gather_leaf,
+                                    scatter_blocks, scatter_rows)
 
 
 def _axis_or_none(small, big) -> Optional[int]:
@@ -150,6 +151,66 @@ class PagedModelCache:
                             "scale": tuple(scale)}
 
         return prefill_into
+
+    def make_prefill_suffix(self, suffix_fn: Callable[..., Any]):
+        """Suffix insertion prefill for prefix-cache hits (DESIGN.md §4
+        "Prefix cache"): reconstruct each lane's cache *context* from block
+        storage (the shared prefix pages its page-table row ``pt`` [G, P]
+        maps, valid for the first ``offsets`` tokens), run the model's
+        width-S cache-extend prefill on the distinct suffix, then
+        masked-scatter ONLY the suffix rows ``[offset, offset + len)`` back
+        into the lane's pages. Shared prefix blocks are read, never
+        written: the engine's page layout guarantees every write position
+        >= offset lands in a private (or copy-on-write) page.
+
+        Dense context leaves need no history for gqa/mla — their only
+        slot-dependent dense leaves are length/position vectors, which the
+        context rebuilds as ``offsets`` broadcast to the leaf's shape."""
+
+        def prefill_suffix_into(params, batch, pool, slots, pt):
+            offsets = batch["offsets"]
+            g = offsets.shape[0]
+            leaves = []
+            for role, j in self.spec.roles:
+                if role == "paged":
+                    leaves.append(gather_leaf(pool["data"][j], pool["scale"][j],
+                                              pt, self.spec.paged[j], self.spec))
+                    continue
+                ref = self._dense_shapes[j]
+                ax = self.spec.dense_slot_axes[j]
+                if ax is None:  # slot-independent leaf: pass through
+                    leaves.append(pool["dense"][j])
+                    continue
+                shape = tuple(g if i == ax else d
+                              for i, d in enumerate(ref.shape))
+                off = offsets.astype(ref.dtype).reshape(
+                    tuple(g if i == ax else 1 for i in range(len(shape))))
+                leaves.append(jnp.broadcast_to(off, shape))
+            ctx = jax.tree.unflatten(self.spec.treedef, leaves)
+            logits, part = suffix_fn(params, batch, ctx)
+            part_leaves = jax.tree.leaves(part)
+            dense_parts, data, scale = [], list(pool["data"]), list(pool["scale"])
+            for leaf, (role, j) in zip(part_leaves, self.spec.roles):
+                if role == "dense":
+                    dense_parts.append(leaf)
+                else:
+                    data[j], scale[j] = scatter_rows(
+                        data[j], scale[j], leaf, pt, offsets, batch["lengths"],
+                        batch["tokens"].shape[1], self.spec.paged[j], self.spec)
+            dense = self._scatter_dense(pool["dense"], tuple(dense_parts), slots)
+            return logits, {"dense": dense, "data": tuple(data),
+                            "scale": tuple(scale)}
+
+        return prefill_suffix_into
+
+    def copy_block(self, pool: dict, src: jax.Array, dst: jax.Array) -> dict:
+        """Device-side copy of one physical block across every paged leaf
+        (payload + scales) — the copy-on-write fault: a write landing in a
+        refcount>1 block first duplicates it into a private page."""
+        data = tuple(d.at[dst].set(d[src]) for d in pool["data"])
+        scale = tuple(s.at[dst].set(s[src]) if s is not None else None
+                      for s in pool["scale"])
+        return {"dense": pool["dense"], "data": data, "scale": scale}
 
     def reset(self, pool: dict, slots: jax.Array) -> dict:
         """Retirement: dense leaves back to their init values (the same

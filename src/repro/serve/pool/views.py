@@ -152,6 +152,38 @@ def scatter_blocks(data: jax.Array, scale: Optional[jax.Array],
     return data, scale
 
 
+def scatter_rows(data: jax.Array, scale: Optional[jax.Array],
+                 part_leaf: jax.Array, pt: jax.Array, offsets: jax.Array,
+                 lengths: jax.Array, width: int,
+                 meta: PagedLeaf, spec: PoolSpec):
+    """Suffix-prefill insert (DESIGN.md §4 "Prefix cache"): ``part_leaf``
+    is a FULL-CAPACITY cache leaf (the extend paths return the whole
+    updated cache, decode convention); slice each lane's ``width`` suffix
+    rows starting at ``offsets[g]`` and write rows ``[offsets[g],
+    offsets[g] + lengths[g])`` into the (page, in-page offset) targets its
+    page-table row ``pt`` [G, P] names. Unlike :func:`scatter_blocks`,
+    ONLY true rows land — padded bucket rows are routed to the trash sink
+    — so a suffix can begin mid-block (the copy-on-write target) while the
+    lane's earlier pages stay shared, read-only prefix blocks."""
+    y = to_pool_layout(part_leaf, meta.slot_axis, meta.token_axis)  # [G, T, *rest]
+    y = jax.vmap(
+        lambda yy, o: jax.lax.dynamic_slice_in_dim(yy, o, width, 0)
+    )(y, offsets)                                                   # [G, S, *rest]
+    g, s = y.shape[:2]
+    q, sc = quantize(spec.quant, y)
+    pos = offsets[:, None] + jnp.arange(s, dtype=jnp.int32)[None, :]   # [G, S]
+    pidx = jnp.minimum(pos // spec.block, spec.max_pages - 1)
+    page = jnp.take_along_axis(pt, pidx, axis=1)
+    off = pos % spec.block
+    trash = data.shape[0] - 1
+    valid = jnp.arange(s, dtype=jnp.int32)[None, :] < lengths[:, None]
+    page = jnp.where(valid, page, trash)
+    data = data.at[page, off].set(q.astype(data.dtype))
+    if scale is not None:
+        scale = scale.at[page, off].set(sc)
+    return data, scale
+
+
 def token_page_off(pt: jax.Array, write_pos: jax.Array, block: int):
     """(physical page, in-page offset) of each slot's write position. ONE
     page table is shared across every leaf and layer, so the decode

@@ -36,6 +36,11 @@ class ServeRequest:
     # runtime bookkeeping (engine/scheduler owned)
     slot: Optional[int] = None
     tokens: List[int] = dataclasses.field(default_factory=list)
+    # physical blocks this QUEUED request holds references on from prefix
+    # matching (DESIGN.md §4 "Prefix cache"); ownership transfers to the
+    # slot's lease at admission, and `SlotScheduler.on_drop` must release
+    # them when the request is dropped while still waiting
+    prefix_blocks: List[int] = dataclasses.field(default_factory=list)
     admit_t: Optional[float] = None
     first_token_t: Optional[float] = None
     finish_t: Optional[float] = None
@@ -57,6 +62,10 @@ class SlotScheduler:
         self.dropped: List[ServeRequest] = []
         self.admission_log: List[Tuple[int, int]] = []  # (rid, slot)
         self._util: List[int] = []  # active slots per decode step
+        # engine hook: called with a request dropped while still QUEUED
+        # (deadline expiry) so resources taken at enqueue time — prefix
+        # refcounts — are released; admitted requests release via retire
+        self.on_drop: Optional[Callable[[ServeRequest], None]] = None
 
     # -- queue ------------------------------------------------------------
     def submit(self, req: ServeRequest) -> None:
@@ -82,6 +91,8 @@ class SlotScheduler:
                 req.dropped = True
                 req.finish_t = now
                 self.dropped.append(req)
+                if self.on_drop is not None:
+                    self.on_drop(req)
                 continue
             if can_admit is not None and not can_admit(req):
                 break

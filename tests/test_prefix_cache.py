@@ -1,0 +1,285 @@
+"""Prefix cache (DESIGN.md §4 "Prefix cache"): content-hash chain identity,
+refcounted block sharing + copy-on-write, pinning under eviction pressure,
+quantization-independent matching, and the acceptance bar — BIT-identical
+greedy decode with the cache on vs off (quant=none) across architectures."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.models.api import get_model
+from repro.serve.engine import ServeEngine
+from repro.serve.pool import BlockAllocator
+from repro.serve.pool.blocks import chain_hashes
+
+KEY = jax.random.PRNGKey(0)
+
+_MODELS = {}
+
+
+def _model(arch):
+    if arch not in _MODELS:
+        model = get_model(get_smoke_config(arch))
+        _MODELS[arch] = (model, model.init(KEY))
+    return _MODELS[arch]
+
+
+def _template(n=40, lo=1, hi=50):
+    return (np.arange(1, n + 1, dtype=np.int32) * 7) % (hi - lo) + lo
+
+
+def _engine(arch, *, prefix=True, slots=1, pool_blocks=24, block=8,
+            quant="none", capacity=64):
+    model, params = _model(arch)
+    return ServeEngine(model, params, capacity=capacity, slots=slots,
+                       pool_tokens=pool_blocks * block, block_size=block,
+                       kv_quant=quant, prefix_cache=prefix)
+
+
+# ---------------------------------------------------------------------------
+# chain hashes
+# ---------------------------------------------------------------------------
+
+
+def test_chain_hash_full_blocks_only():
+    t = _template(43)
+    hs = chain_hashes(t, 8)
+    assert len(hs) == 5  # 43 // 8 — the 3-token tail is never indexed
+    assert chain_hashes(t[:40], 8) == hs  # tail doesn't perturb full blocks
+
+
+def test_chain_hash_identity_includes_prefix():
+    a = _template(24)
+    b = a.copy()
+    b[2] += 1  # flip one token in block 0
+    ha, hb = chain_hashes(a, 8), chain_hashes(b, 8)
+    # every downstream hash changes: block identity is the whole prefix
+    assert all(x != y for x, y in zip(ha, hb))
+    c = a.copy()
+    c[20] += 1  # flip in block 2: blocks 0-1 unchanged, block 2 differs
+    hc = chain_hashes(c, 8)
+    assert hc[:2] == ha[:2] and hc[2] != ha[2]
+
+
+def test_chain_hash_deterministic():
+    t = _template(32)
+    assert chain_hashes(t, 8) == chain_hashes(t.copy(), 8)
+
+
+# ---------------------------------------------------------------------------
+# allocator: refcounts, hash index, COW-adjacent lifecycle
+# ---------------------------------------------------------------------------
+
+
+def test_refcounted_share_and_release():
+    a = BlockAllocator(6, 8)
+    lease = a.reserve(2)
+    (b0, b1) = a.map(lease, 2)
+    h = chain_hashes(_template(8), 8)[0]
+    a.register(b0, h)
+    assert a.lookup(h) == b0
+    assert a.acquire(b0)  # second reference
+    assert a.ref(b0) == 2 and a.shared_blocks() == 1
+    a.release(lease)      # lease's reference goes; b0 stays mapped (ref 1)
+    assert a.mapped_blocks() == 1 and a.ref(b0) == 1
+    a.release_ref(b0)     # last reference frees it
+    assert a.mapped_blocks() == 0
+    # cached-free: the hash stays registered for resurrection
+    assert a.lookup(h) == b0
+
+
+def test_double_free_and_underflow_detectors():
+    a = BlockAllocator(4, 8)
+    lease = a.reserve(1)
+    (b,) = a.map(lease, 1)
+    a.release_ref(b)
+    with pytest.raises(RuntimeError, match="free"):
+        a.release_ref(b)
+    lease2 = a.reserve(1)
+    (b2,) = a.map(lease2, 1)
+    a._ref[b2] = 0  # corrupt the count to hit the underflow branch
+    with pytest.raises(RuntimeError, match="underflow"):
+        a.release_ref(b2)
+
+
+def test_cached_free_resurrection_and_margin():
+    a = BlockAllocator(2, 8)
+    lease = a.reserve(1)
+    (b,) = a.map(lease, 1)
+    h = chain_hashes(_template(8), 8)[0]
+    a.register(b, h)
+    a.release(lease)
+    assert a.mapped_blocks() == 0
+    # resurrect: the freed block comes back mapped with its rows intact
+    assert a.acquire(b)
+    assert a.mapped_blocks() == 1 and a.ref(b) == 1
+    a.release_ref(b)
+    # margin guard: pages already promised to this admission cycle make
+    # resurrection (which eats a free block) refuse rather than oversubscribe
+    assert not a.acquire(b, margin=2)
+    assert a.mapped_blocks() == 0
+
+
+def test_remap_evicts_stale_hash():
+    a = BlockAllocator(2, 8)
+    lease = a.reserve(1)
+    (b,) = a.map(lease, 1)
+    h = chain_hashes(_template(8), 8)[0]
+    a.register(b, h)
+    a.release(lease)
+    lease2 = a.reserve(1)
+    ids = a.map(lease2, 1)
+    assert ids == [b]  # lowest-id free block recycled
+    assert a.lookup(h) is None  # its old content identity is gone
+    assert a.hash_evictions == 1
+
+
+def test_register_keep_first():
+    a = BlockAllocator(4, 8)
+    lease = a.reserve(2)
+    b0, b1 = a.map(lease, 2)
+    h = chain_hashes(_template(8), 8)[0]
+    a.register(b0, h)
+    a.register(b1, h)  # concurrent identical prefill: first binding wins
+    assert a.lookup(h) == b0
+
+
+# ---------------------------------------------------------------------------
+# engine: bit-identical decode, COW, pinning, quant sharing
+# ---------------------------------------------------------------------------
+
+
+def _run(eng, prompts, max_new=6):
+    rids = [eng.submit(p, max_new_tokens=max_new) for p in prompts]
+    eng.run_all()
+    outs = {r.rid: list(r.tokens) for r in eng.sched.finished}
+    eng._refresh_stats()
+    return [outs[r] for r in rids]
+
+
+@pytest.mark.parametrize("arch", ["qwen2_1_5b", "minicpm3_4b"])
+def test_bit_identical_on_off(arch):
+    """The acceptance bar: greedy tokens identical with the cache on vs off
+    (quant=none), with the on-run actually hitting."""
+    t = _template(40)
+    prompts = [np.concatenate([t, np.array(tail, np.int32)])
+               for tail in ([7], [9], [9, 3, 22])]
+    on = _engine(arch, prefix=True)
+    outs_on = _run(on, prompts)
+    off = _engine(arch, prefix=False)
+    outs_off = _run(off, prompts)
+    assert outs_on == outs_off
+    assert on.stats["prefix_hit_rate"] > 0
+    assert off.stats["prefix_hit_rate"] == 0.0
+
+
+def test_flare_auto_disables():
+    """FLARE's latent stream is not positionally addressable KV — the engine
+    must run correctly with the flag on but the cache inert."""
+    t = _template(24)
+    prompts = [np.concatenate([t, np.array([x], np.int32)]) for x in (7, 9)]
+    eng = _engine("flare_lm", prefix=True, slots=2)
+    assert not eng._prefix_enabled
+    outs = _run(eng, prompts, max_new=4)
+    off = _engine("flare_lm", prefix=False, slots=2)
+    assert outs == _run(off, prompts, max_new=4)
+    assert eng.stats["prefix_hit_rate"] == 0.0
+
+
+def test_cow_divergence_at_block_boundary():
+    """A suffix that starts EXACTLY at a block boundary keeps every hit
+    block shared — no copy-on-write is needed (all writes land at >= the
+    boundary, in private pages)."""
+    t = _template(40)  # 5 whole blocks of 8
+    donor = np.concatenate([t, np.array([7], np.int32)])
+    hit = np.concatenate([t, np.array([9], np.int32)])  # diverges at pos 40
+    eng = _engine("qwen2_1_5b", prefix=True)
+    outs = _run(eng, [donor, hit])
+    assert eng.stats["prefix_hit_rate"] > 0
+    assert eng.stats["cow_copies"] == 0
+    off = _engine("qwen2_1_5b", prefix=False)
+    assert outs == _run(off, [donor, hit])
+
+
+def test_cow_exact_template_reuse():
+    """Full coverage (the whole prompt is hit blocks): the final block is
+    copy-on-written so the recomputed last token has a private write target
+    — and the shared source block stays bit-intact for other tenants."""
+    t = _template(40)
+    donor = t.copy()
+    again = t.copy()
+    third = np.concatenate([t, np.array([9], np.int32)])
+    eng = _engine("qwen2_1_5b", prefix=True)
+    outs = _run(eng, [donor, again, third])
+    assert eng.stats["cow_copies"] == 1  # the one full-coverage admission
+    assert outs[0] == outs[1]  # same prompt, same greedy tokens
+    off = _engine("qwen2_1_5b", prefix=False)
+    assert outs == _run(off, [donor, again, third])
+
+
+def test_pinned_prefix_survives_eviction_pressure():
+    """pin_prefix holds references, so a pool churning through every free
+    block can neither recycle nor corrupt the template blocks; an unpinned
+    control loses its index entries to the same churn."""
+    t = _template(40)
+    rng = np.random.default_rng(11)
+    churn = [rng.integers(0, 50, 41).astype(np.int32) for _ in range(8)]
+    probe = np.concatenate([t, np.array([9], np.int32)])
+
+    pinned = _engine("qwen2_1_5b", prefix=True, slots=2)
+    assert pinned.pin_prefix(t) == 5
+    _run(pinned, churn, max_new=4)
+    hits_before = pinned.alloc.prefix_hits
+    outs = _run(pinned, [probe], max_new=6)
+    assert pinned.alloc.prefix_hits > hits_before  # survived the churn
+    # ...and the surviving rows are still VALID: same tokens as a cold run
+    off = _engine("qwen2_1_5b", prefix=False, slots=2)
+    assert outs == _run(off, [probe], max_new=6)
+
+    ctrl = _engine("qwen2_1_5b", prefix=True, slots=2)
+    ctrl.submit(t, max_new_tokens=1)  # register without pinning
+    ctrl.run_all()
+    _run(ctrl, churn, max_new=4)
+    hits_before = ctrl.alloc.prefix_hits
+    _run(ctrl, [probe], max_new=6)
+    assert ctrl.alloc.prefix_hits == hits_before  # churn evicted the index
+
+
+@pytest.mark.parametrize("quant", ["int8", "fp8"])
+def test_quantized_pools_share_on_token_ids(quant):
+    """Hashing keys on token ids, not stored bytes — int8/fp8 pools share
+    blocks exactly like lossless ones."""
+    t = _template(40)
+    donor = np.concatenate([t, np.array([7], np.int32)])
+    hit = np.concatenate([t, np.array([9], np.int32)])
+    eng = _engine("qwen2_1_5b", prefix=True, quant=quant)
+    _run(eng, [donor, hit], max_new=4)
+    assert eng.alloc.prefix_hits == 5
+    assert eng.stats["prefix_hit_rate"] > 0
+
+
+@pytest.mark.parametrize("arch", ["qwen2_1_5b", "minicpm3_4b"])
+def test_suffix_prefill_bitwise_matches_full(arch):
+    """Model-level: lm_prefill_suffix over a stored prefix must reproduce
+    the full prefill's last-token logits BIT for bit (same attn_sdpa dtype
+    staging) — the invariant the engine-level identity tests rest on."""
+    import repro.models.transformer as tr
+
+    model, params = _model(arch)
+    cfg = get_smoke_config(arch)
+    full = _template(43)
+    toks = np.zeros((1, 64), np.int32)
+    toks[0, :43] = full
+    logits_full, _ = model.prefill(
+        params, {"tokens": jnp.asarray(toks), "lengths": jnp.asarray([43])}, 64)
+    toks_p = np.zeros((1, 64), np.int32)
+    toks_p[0, :40] = full[:40]
+    _, caches = model.prefill(
+        params, {"tokens": jnp.asarray(toks_p), "lengths": jnp.asarray([40])}, 64)
+    sfx = np.zeros((1, 8), np.int32)
+    sfx[0, :3] = full[40:]
+    logits_sfx, _ = tr.lm_prefill_suffix(
+        params, {"tokens": jnp.asarray(sfx), "lengths": jnp.asarray([3]),
+                 "offsets": jnp.asarray([40])}, caches, cfg)
+    assert np.array_equal(np.asarray(logits_full), np.asarray(logits_sfx))

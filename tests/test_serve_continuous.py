@@ -244,6 +244,55 @@ def test_deadline_expiry_queued_returns_slots_and_pages():
     assert st["blocks_reserved"] == 0
 
 
+def test_deadline_expiry_queued_releases_prefix_refs():
+    """Enqueue-time prefix matching takes refcounts that must be returned
+    when the queued request's deadline expires — the on_drop hook, not slot
+    retirement, is the only release point for a request that never ran."""
+    model, params = _model("gqa")
+    eng = ServeEngine(model, params, capacity=64, slots=1,
+                      pool_tokens=192, block_size=8, prefix_cache=True)
+    t = (np.arange(1, 41, dtype=np.int32) * 7) % model.cfg.vocab
+    eng.submit(t, max_new_tokens=2)  # donor: registers 5 template blocks
+    eng.run_all()
+    assert eng.alloc.mapped_blocks() == 0  # donor retired, blocks cached-free
+    hit = np.concatenate([t, np.array([3], np.int32)])
+    eng.submit(hit, max_new_tokens=4, deadline_s=-1.0)
+    # submit-time matching resurrected and holds the 5 shared blocks
+    assert eng.alloc.mapped_blocks() == 5
+    eng.run_all()
+    assert eng.stats["dropped"] == 1
+    assert eng.alloc.mapped_blocks() == 0              # holds released
+    st = eng.stats["pool"]
+    assert st["blocks_free"] == st["blocks_total"]
+    assert st["blocks_reserved"] == 0
+
+
+def test_submit_rejection_releases_prefix_refs():
+    """A request that matches the index but then fails the full-prompt
+    feasibility check must drop its holds on the raise — otherwise the
+    rejected request leaks refcounts the pool can never reclaim."""
+    model, params = _model("gqa")
+    eng = ServeEngine(model, params, capacity=64, slots=1,
+                      pool_tokens=48, block_size=8, prefix_cache=True)
+    t = (np.arange(1, 17, dtype=np.int32) * 7) % model.cfg.vocab
+    eng.submit(t, max_new_tokens=8)  # donor: 2 template blocks, 3 pages <= 6
+    eng.run_all()
+    # L=40 + max_new=16 fits capacity (matching runs, takes 2 holds) but
+    # needs 7 pages on a 6-block pool -> rejected
+    bad = np.concatenate([t, (np.arange(24, dtype=np.int32) * 5) % 60])
+    with pytest.raises(ValueError, match="pages"):
+        eng.submit(bad, max_new_tokens=16)
+    assert eng.alloc.mapped_blocks() == 0              # holds released
+    eng._refresh_stats()
+    st = eng.stats["pool"]
+    assert st["blocks_free"] == st["blocks_total"]
+    # the index survives the rejection: a feasible hit still shares
+    hits_before = eng.alloc.prefix_hits
+    eng.submit(np.concatenate([t, np.array([5], np.int32)]), max_new_tokens=2)
+    eng.run_all()
+    assert eng.alloc.prefix_hits > hits_before
+
+
 def test_fifo_admission_under_block_backpressure():
     """Pool pressure is backpressure, never reordering: when the queue head
     cannot stake its pages, later (smaller) requests must NOT jump ahead —
