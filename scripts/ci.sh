@@ -37,8 +37,17 @@ assert plan.backend != "paged", f"dense M>1 site leaked to paged: {plan.backend}
 print(f"paged routing OK (decode->paged, dense->{plan.backend})")
 PY
 
-echo "== fast tier (pytest -m 'not slow') =="
-python -m pytest -x -q -m "not slow"
+echo "== flarecheck (static analysis, DESIGN.md §14) =="
+# rule catalog must be non-empty (a registration regression would silently
+# turn the gate into a no-op), then the gate itself: any finding not in the
+# committed baseline fails the build before a single test runs
+rules="$(python -m repro.analysis.lint --list-rules)"
+[ -n "$rules" ] || { echo "ERROR: flarecheck rule catalog is empty"; exit 1; }
+echo "$rules"
+python -m repro.analysis.lint src tests --baseline .flarecheck.json
+
+echo "== fast tier (pytest -m 'not slow', allocator sanitizer on) =="
+REPRO_SANITIZE=1 python -m pytest -x -q -m "not slow"
 
 echo "== interpret-mode kernel-parity smoke =="
 # quick standalone guard: the fused kernels (packed + classic) against the

@@ -1,4 +1,20 @@
-from repro.analysis.hlo import analyze_hlo
-from repro.analysis.roofline import roofline_terms, V5E
+"""Analysis tools: HLO cost extraction, roofline terms, and the flarecheck
+static-analysis pass (``repro.analysis.lint``).
+
+Lazy attribute access (PEP 562) keeps this package import-light: the lint
+CLI (``python -m repro.analysis.lint``) must start in milliseconds without
+pulling in jax, while ``from repro.analysis import analyze_hlo`` still
+works for the HLO/roofline tooling.
+"""
 
 __all__ = ["analyze_hlo", "roofline_terms", "V5E"]
+
+
+def __getattr__(name):
+    if name == "analyze_hlo":
+        from repro.analysis.hlo import analyze_hlo
+        return analyze_hlo
+    if name in ("roofline_terms", "V5E"):
+        from repro.analysis import roofline
+        return getattr(roofline, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

@@ -1,0 +1,20 @@
+"""flarecheck: JAX/Pallas-aware static analysis for this repo's contracts.
+
+Four checkers (DESIGN.md §14): host-sync (HS*), dtype-staging (DS*),
+retrace-hazard (RT*), pallas-contract (PC*), plus the suppression audit
+(SUP001). Run as ``python -m repro.analysis.lint src tests --baseline
+.flarecheck.json``.
+
+Kept import-light on purpose: no jax, no numpy — the lint stage must run
+in seconds before the heavyweight test tiers.
+"""
+from repro.analysis.lint.core import (
+    Checker, Finding, Rule, all_checkers, all_rules, apply_baseline,
+    lint_paths, lint_source, load_baseline, main, write_baseline,
+)
+
+__all__ = [
+    "Checker", "Finding", "Rule", "all_checkers", "all_rules",
+    "apply_baseline", "lint_paths", "lint_source", "load_baseline",
+    "main", "write_baseline",
+]

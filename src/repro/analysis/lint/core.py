@@ -1,0 +1,336 @@
+"""flarecheck — the checker framework (DESIGN.md §14 "Static analysis").
+
+Stdlib-only (ast + json): the linter must run before any heavyweight import
+and in environments without an accelerator, so nothing here touches jax.
+
+Pieces:
+
+  - :class:`Rule` / :class:`Finding`: a finding carries ``file:line:col``,
+    the rule id, and the *stripped source line* — the line text (not the
+    line number) is the baseline fingerprint, so findings survive unrelated
+    edits above them.
+  - :class:`Checker`: one analysis pass. ``applies(path)`` scopes it (each
+    checker owns its file patterns — the CLI is pointed at whole trees),
+    ``check(path, tree, source)`` returns findings.
+  - **Suppressions**: ``# flarecheck: disable=RULE1[,RULE2] -- why`` on the
+    finding's line or the line directly above. A suppression with no
+    justification text is itself a finding (``SUP001``) — the whole point
+    is an auditable paper trail for every waived invariant.
+  - **Baseline**: a committed JSON file of known findings (rule + path +
+    line text, with multiplicity). The gate fails only on findings NOT in
+    the baseline, so it is zero-noise from day one; refresh with
+    ``--write-baseline`` after an intentional change.
+
+CLI: ``python -m repro.analysis.lint src/ tests/ --baseline
+.flarecheck.json`` (scripts/ci.sh runs exactly this before the test tiers).
+"""
+from __future__ import annotations
+
+import argparse
+import ast
+import dataclasses
+import json
+import os
+import re
+from typing import Dict, Iterable, List, Optional, Sequence, Tuple
+
+BASELINE_VERSION = 1
+
+__all__ = [
+    "Rule", "Finding", "Checker", "register_checker", "all_checkers",
+    "all_rules", "lint_source", "lint_paths", "load_baseline",
+    "apply_baseline", "write_baseline", "main",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class Rule:
+    id: str
+    summary: str
+
+
+@dataclasses.dataclass
+class Finding:
+    rule: str
+    path: str       # repo-relative posix path
+    line: int       # 1-based
+    col: int        # 0-based
+    message: str
+    snippet: str = ""  # stripped source line — the baseline fingerprint
+
+    def key(self) -> Tuple[str, str, str]:
+        return (self.rule, self.path, self.snippet)
+
+    def render(self) -> str:
+        return f"{self.path}:{self.line}:{self.col}: {self.rule} {self.message}"
+
+
+class Checker:
+    """One analysis pass. Subclasses set ``rules`` and implement
+    ``applies``/``check``; instantiation is cheap and per-run."""
+
+    rules: Tuple[Rule, ...] = ()
+
+    def applies(self, path: str) -> bool:  # pragma: no cover - interface
+        raise NotImplementedError
+
+    def check(self, path: str, tree: ast.Module,
+              source: str) -> List[Finding]:  # pragma: no cover - interface
+        raise NotImplementedError
+
+    # -- shared helpers ---------------------------------------------------
+    @staticmethod
+    def line_of(source_lines: Sequence[str], lineno: int) -> str:
+        if 1 <= lineno <= len(source_lines):
+            return source_lines[lineno - 1].strip()
+        return ""
+
+    def finding(self, rule: str, path: str, node: ast.AST, message: str,
+                source_lines: Sequence[str]) -> Finding:
+        line = getattr(node, "lineno", 1)
+        col = getattr(node, "col_offset", 0)
+        return Finding(rule=rule, path=path, line=line, col=col,
+                       message=message,
+                       snippet=self.line_of(source_lines, line))
+
+
+_CHECKERS: List[type] = []
+
+
+def register_checker(cls: type) -> type:
+    _CHECKERS.append(cls)
+    return cls
+
+
+def _ensure_registered() -> None:
+    # import-for-effect: each checker module registers its class
+    from repro.analysis.lint import (  # noqa: F401
+        dtype_staging, host_sync, pallas_contract, retrace)
+
+
+def all_checkers() -> List[Checker]:
+    _ensure_registered()
+    return [cls() for cls in _CHECKERS]
+
+
+SUP001 = Rule("SUP001", "flarecheck suppression without a justification")
+
+
+def all_rules() -> List[Rule]:
+    rules: List[Rule] = [SUP001]
+    for checker in all_checkers():
+        rules.extend(checker.rules)
+    return rules
+
+
+# ---------------------------------------------------------------------------
+# Suppressions
+# ---------------------------------------------------------------------------
+
+# `# flarecheck: disable=HS003 -- the one sanctioned per-step transfer`
+_SUPPRESS_RE = re.compile(
+    r"#\s*flarecheck:\s*disable=(?P<ids>[A-Za-z0-9_,\s]+?)"
+    r"(?:\s*(?:--|—)\s*(?P<why>.*))?$")
+
+
+def _suppressions(source_lines: Sequence[str]):
+    """Map line number -> (set of rule ids, justification text). A
+    suppression covers its own line AND the line below (comment-above
+    style)."""
+    out: Dict[int, Tuple[set, str]] = {}
+    bare: List[Finding] = []
+    for i, text in enumerate(source_lines, start=1):
+        m = _SUPPRESS_RE.search(text)
+        if not m:
+            continue
+        ids = {s.strip() for s in m.group("ids").split(",") if s.strip()}
+        why = (m.group("why") or "").strip()
+        if not why:
+            bare.append(Finding(
+                rule=SUP001.id, path="", line=i, col=0,
+                message="suppression needs a justification: "
+                        "`# flarecheck: disable=<RULE> -- <why>`",
+                snippet=text.strip()))
+        out[i] = (ids, why)
+        # comment-above style: the suppression also covers the next line
+        # (merge — an inline suppression there keeps its own ids too)
+        nxt = out.get(i + 1)
+        if nxt is None:
+            out[i + 1] = (set(ids), why)
+        else:
+            out[i + 1] = (nxt[0] | ids, nxt[1])
+    return out, bare
+
+
+def lint_source(source: str, path: str,
+                checkers: Optional[Sequence[Checker]] = None,
+                vmem_budget: Optional[int] = None) -> List[Finding]:
+    """Lint one module's source (the unit-test entry point: tests feed
+    synthetic sources under synthetic paths, since checkers scope on the
+    path). Suppression comments are honored; no baseline is applied."""
+    try:
+        tree = ast.parse(source, filename=path)
+    except SyntaxError as e:
+        return [Finding(rule="PARSE", path=path, line=e.lineno or 1,
+                        col=e.offset or 0, message=f"syntax error: {e.msg}",
+                        snippet="")]
+    lines = source.splitlines()
+    if checkers is None:
+        checkers = all_checkers()
+    findings: List[Finding] = []
+    for checker in checkers:
+        if not checker.applies(path):
+            continue
+        if vmem_budget is not None and hasattr(checker, "vmem_budget"):
+            checker.vmem_budget = vmem_budget
+        findings.extend(checker.check(path, tree, source))
+    sup, bare = _suppressions(lines)
+    kept: List[Finding] = []
+    for f in findings:
+        ids_why = sup.get(f.line)
+        if ids_why is not None and (f.rule in ids_why[0] or "all" in ids_why[0]):
+            continue
+        kept.append(f)
+    for b in bare:
+        b.path = path
+        kept.append(b)
+    kept.sort(key=lambda f: (f.path, f.line, f.col, f.rule))
+    return kept
+
+
+# ---------------------------------------------------------------------------
+# File walking
+# ---------------------------------------------------------------------------
+
+
+def _iter_py_files(paths: Iterable[str]) -> List[str]:
+    out: List[str] = []
+    for p in paths:
+        if os.path.isfile(p):
+            if p.endswith(".py"):
+                out.append(p)
+            continue
+        for root, dirs, files in os.walk(p):
+            dirs[:] = sorted(d for d in dirs
+                             if not d.startswith(".") and d != "__pycache__")
+            for name in sorted(files):
+                if name.endswith(".py"):
+                    out.append(os.path.join(root, name))
+    return out
+
+
+def _rel(path: str) -> str:
+    rel = os.path.relpath(path)
+    return rel.replace(os.sep, "/")
+
+
+def lint_paths(paths: Sequence[str],
+               checkers: Optional[Sequence[Checker]] = None,
+               vmem_budget: Optional[int] = None) -> List[Finding]:
+    findings: List[Finding] = []
+    for fp in _iter_py_files(paths):
+        with open(fp, "r", encoding="utf-8") as fh:
+            source = fh.read()
+        findings.extend(lint_source(source, _rel(fp), checkers=checkers,
+                                    vmem_budget=vmem_budget))
+    return findings
+
+
+# ---------------------------------------------------------------------------
+# Baseline
+# ---------------------------------------------------------------------------
+
+
+def load_baseline(path: str) -> Dict[Tuple[str, str, str], int]:
+    """Known-finding multiset: (rule, path, snippet) -> count."""
+    if not os.path.exists(path):
+        return {}
+    with open(path, "r", encoding="utf-8") as fh:
+        data = json.load(fh)
+    if data.get("version") != BASELINE_VERSION:
+        raise ValueError(
+            f"baseline {path} has version {data.get('version')!r}, "
+            f"expected {BASELINE_VERSION} — refresh with --write-baseline")
+    out: Dict[Tuple[str, str, str], int] = {}
+    for e in data.get("findings", []):
+        key = (e["rule"], e["path"], e.get("snippet", ""))
+        out[key] = out.get(key, 0) + int(e.get("count", 1))
+    return out
+
+
+def apply_baseline(findings: Sequence[Finding],
+                   baseline: Dict[Tuple[str, str, str], int]) -> List[Finding]:
+    """Findings not covered by the baseline multiset (new regressions)."""
+    budget = dict(baseline)
+    new: List[Finding] = []
+    for f in findings:
+        k = f.key()
+        if budget.get(k, 0) > 0:
+            budget[k] -= 1
+        else:
+            new.append(f)
+    return new
+
+
+def write_baseline(path: str, findings: Sequence[Finding]) -> None:
+    counts: Dict[Tuple[str, str, str], int] = {}
+    for f in findings:
+        counts[f.key()] = counts.get(f.key(), 0) + 1
+    entries = [{"rule": r, "path": p, "snippet": s, "count": c}
+               for (r, p, s), c in sorted(counts.items())]
+    with open(path, "w", encoding="utf-8") as fh:
+        json.dump({"version": BASELINE_VERSION, "findings": entries}, fh,
+                  indent=2, sort_keys=True)
+        fh.write("\n")
+
+
+# ---------------------------------------------------------------------------
+# CLI
+# ---------------------------------------------------------------------------
+
+
+def main(argv: Optional[Sequence[str]] = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="flarecheck",
+        description="JAX/Pallas-aware static analysis for this repo's "
+                    "serving/kernel contracts (DESIGN.md §14)")
+    ap.add_argument("paths", nargs="*", help="files or directories to lint")
+    ap.add_argument("--baseline", default=None,
+                    help="committed baseline JSON; only NEW findings fail")
+    ap.add_argument("--write-baseline", action="store_true",
+                    help="rewrite the baseline from the current findings "
+                         "and exit 0")
+    ap.add_argument("--list-rules", action="store_true",
+                    help="print the rule catalog and exit")
+    ap.add_argument("--vmem-budget", type=int, default=None, metavar="BYTES",
+                    help="per-kernel VMEM footprint budget for PC003 "
+                         "(default 16 MiB)")
+    args = ap.parse_args(argv)
+
+    if args.list_rules:
+        for rule in all_rules():
+            print(f"{rule.id:8s} {rule.summary}")
+        return 0
+    if not args.paths:
+        ap.error("no paths given (e.g. `flarecheck src tests`)")
+
+    findings = lint_paths(args.paths, vmem_budget=args.vmem_budget)
+    if args.write_baseline:
+        if not args.baseline:
+            ap.error("--write-baseline needs --baseline PATH")
+        write_baseline(args.baseline, findings)
+        print(f"flarecheck: wrote {len(findings)} finding(s) to "
+              f"{args.baseline}")
+        return 0
+
+    baseline = load_baseline(args.baseline) if args.baseline else {}
+    new = apply_baseline(findings, baseline)
+    for f in new:
+        print(f.render())
+    known = len(findings) - len(new)
+    tail = f" ({known} baselined)" if known else ""
+    if new:
+        print(f"flarecheck: {len(new)} new finding(s){tail}")
+        return 1
+    print(f"flarecheck: clean{tail}")
+    return 0

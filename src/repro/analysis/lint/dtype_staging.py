@@ -1,0 +1,234 @@
+"""dtype-staging checker (DS*): the canonical f32 score formulation.
+
+Bit-identicality across the dense / gather / kernel attention routes
+(PR6/PR7 acceptance) rests on one exact op order in every attention body:
+
+    score dot (f32-staged) → ``* scale`` → mask → softmax → cast-at-end
+
+"f32-staged" means the dot itself produces f32: operands cast with
+``.astype(jnp.float32)`` first, or ``preferred_element_type=jnp.float32``
+on the dot, or an f32 cast applied directly to the dot output *before*
+the scale. Reordering any stage changes rounding and silently breaks the
+route-equivalence tests, so:
+
+  DS001  scale multiplied onto an already-softmaxed/exp'd value
+  DS002  mask applied after softmax
+  DS003  scale applied to score-dot output that was never staged to f32
+
+The analysis is a per-function forward event-flow: each assignment's RHS
+is summarized as a set of events ({dot, f32, softmax, mask}) merged from
+its operands, and the order violations above are flagged where the
+offending op is applied. Flash-style kernels (max/exp accumulation, no
+softmax call, no scale) are in-scope files but produce no events that can
+misfire: ``exp`` only counts as a softmax surrogate when its operand chain
+contains a score dot, and correction factors like ``exp(m_prev - m_new)``
+multiply by *names*, not scale-patterned expressions.
+"""
+from __future__ import annotations
+
+import ast
+import re
+from typing import Dict, FrozenSet, List, Optional, Set, Tuple
+
+from repro.analysis.lint.core import Checker, Finding, Rule, register_checker
+
+DS001 = Rule("DS001", "scale applied after softmax/exp — canonical order is "
+                      "dot → scale → mask → softmax")
+DS002 = Rule("DS002", "mask applied after softmax — canonical order is "
+                      "dot → scale → mask → softmax")
+DS003 = Rule("DS003", "scale applied to a score dot that was never staged "
+                      "to f32 (cast operands, preferred_element_type, or "
+                      "cast the dot output first)")
+
+_DOT_CALLS = {"einsum", "dot_general", "dot", "matmul"}
+_SCALE_PAT = re.compile(r"\b(scale|sqrt|rsqrt)\b")
+_MASK_ADD_PAT = re.compile(r"\b(bias|mask)\b")
+_NEG_INF_PAT = re.compile(r"(-\s*(jnp\.)?inf\b|NEG_INF|neg_inf|-\s*1e\+?30|"
+                          r"finfo|-\s*(jnp\.)?float32\(.*inf)", re.I)
+
+Events = FrozenSet[str]
+_EMPTY: Events = frozenset()
+
+
+def _dotted(node: ast.AST) -> Optional[str]:
+    parts: List[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return None
+
+
+def _is_f32(node: ast.AST) -> bool:
+    s = ast.unparse(node)
+    return "float32" in s or re.search(r"\bf32\b", s) is not None
+
+
+def _scale_like(node: ast.AST) -> bool:
+    return bool(_SCALE_PAT.search(ast.unparse(node)))
+
+
+@register_checker
+class DtypeStagingChecker(Checker):
+    rules = (DS001, DS002, DS003)
+
+    def applies(self, path: str) -> bool:
+        return bool(re.search(r"(^|/)models/attention\.py$", path) or
+                    re.search(r"(^|/)kernels/[^/]+\.py$", path))
+
+    def check(self, path: str, tree: ast.Module,
+              source: str) -> List[Finding]:
+        self._lines = source.splitlines()
+        self._path = path
+        findings: List[Finding] = []
+        for fn in ast.walk(tree):
+            if isinstance(fn, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                findings.extend(self._check_fn(fn))
+        # one finding per (rule, line): chained expressions re-trigger
+        seen: Set[Tuple[str, int]] = set()
+        out = []
+        for f in findings:
+            if (f.rule, f.line) not in seen:
+                seen.add((f.rule, f.line))
+                out.append(f)
+        return out
+
+    def _check_fn(self, fn: ast.AST) -> List[Finding]:
+        env: Dict[str, Events] = {}
+        self._found: List[Finding] = []
+        self._walk_body(fn.body, env)
+        return self._found
+
+    def _walk_body(self, body: List[ast.stmt], env: Dict[str, Events]):
+        for stmt in body:
+            if isinstance(stmt, ast.Assign):
+                ev = self._eval(stmt.value, env)
+                for tgt in stmt.targets:
+                    self._bind(tgt, ev, env)
+            elif isinstance(stmt, ast.AugAssign):
+                base = env.get(getattr(stmt.target, "id", ""), _EMPTY)
+                ev = base | self._eval(stmt.value, env)
+                self._bind(stmt.target, ev, env)
+            elif isinstance(stmt, (ast.Return, ast.Expr)):
+                if stmt.value is not None:
+                    self._eval(stmt.value, env)
+            elif isinstance(stmt, (ast.For, ast.While)):
+                self._walk_body(stmt.body, env)
+                self._walk_body(stmt.orelse, env)
+            elif isinstance(stmt, ast.If):
+                self._walk_body(stmt.body, env)
+                self._walk_body(stmt.orelse, env)
+            elif isinstance(stmt, ast.With):
+                self._walk_body(stmt.body, env)
+            elif isinstance(stmt, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                # nested kernels analysed by the outer ast.walk pass
+                continue
+
+    def _bind(self, tgt: ast.AST, ev: Events, env: Dict[str, Events]):
+        if isinstance(tgt, ast.Name):
+            env[tgt.id] = ev
+        elif isinstance(tgt, (ast.Tuple, ast.List)):
+            for elt in tgt.elts:
+                self._bind(elt, ev, env)
+
+    # ------------------------------------------------------------------
+    def _eval(self, node: ast.AST, env: Dict[str, Events]) -> Events:
+        if isinstance(node, ast.Name):
+            return env.get(node.id, _EMPTY)
+        if isinstance(node, ast.BinOp):
+            left = self._eval(node.left, env)
+            right = self._eval(node.right, env)
+            merged = left | right
+            if isinstance(node.op, ast.Mult):
+                for scale_side, val_side, val_ev in (
+                        (node.right, node.left, left),
+                        (node.left, node.right, right)):
+                    if not _scale_like(scale_side):
+                        continue
+                    if "softmax" in val_ev:
+                        self._emit(DS001, node, "scale multiplies an "
+                                   "already-softmaxed value")
+                    elif "dot" in val_ev and "f32" not in val_ev:
+                        self._emit(DS003, node, "scale multiplies raw score-"
+                                   "dot output with no f32 staging")
+            if isinstance(node.op, ast.Add):
+                for mask_side, val_ev in ((node.right, left),
+                                          (node.left, right)):
+                    if _MASK_ADD_PAT.search(ast.unparse(mask_side)) and \
+                            "softmax" in val_ev:
+                        self._emit(DS002, node,
+                                   "additive mask lands after softmax")
+                if any(_MASK_ADD_PAT.search(ast.unparse(s))
+                       for s in (node.left, node.right)):
+                    merged |= {"mask"}
+            return merged
+        if isinstance(node, ast.Call):
+            return self._eval_call(node, env)
+        if isinstance(node, ast.Attribute):
+            return self._eval(node.value, env)
+        if isinstance(node, ast.Subscript):
+            return self._eval(node.value, env)
+        if isinstance(node, (ast.Tuple, ast.List)):
+            ev: Events = _EMPTY
+            for elt in node.elts:
+                ev |= self._eval(elt, env)
+            return ev
+        if isinstance(node, ast.UnaryOp):
+            return self._eval(node.operand, env)
+        if isinstance(node, ast.IfExp):
+            return self._eval(node.body, env) | self._eval(node.orelse, env)
+        return _EMPTY
+
+    def _eval_call(self, node: ast.Call, env: Dict[str, Events]) -> Events:
+        d = _dotted(node.func) or ""
+        tail = d.rsplit(".", 1)[-1]
+        arg_ev: Events = _EMPTY
+        for a in node.args:
+            arg_ev |= self._eval(a, env)
+        for kw in node.keywords:
+            arg_ev |= self._eval(kw.value, env)
+
+        if tail in _DOT_CALLS:
+            ev = set(arg_ev) | {"dot"}
+            for kw in node.keywords:
+                if kw.arg == "preferred_element_type" and _is_f32(kw.value):
+                    ev.add("f32")
+            # operands inline-cast to f32 (`x.astype(jnp.float32)`) already
+            # contribute the f32 event through arg_ev
+            return frozenset(ev)
+        if tail == "astype":
+            base = self._eval(node.func.value, env) \
+                if isinstance(node.func, ast.Attribute) else arg_ev
+            if node.args and _is_f32(node.args[0]):
+                return base | {"f32"}
+            return base
+        if tail == "softmax":
+            return arg_ev | {"softmax"}
+        if tail == "exp":
+            # softmax surrogate only when exponentiating actual scores;
+            # flash correction factors exp(m_prev - m_new) ride on maxes
+            # of scores too, but they never meet a scale-patterned Mult
+            if "dot" in arg_ev:
+                return arg_ev | {"softmax"}
+            return arg_ev
+        if tail in ("where", "select", "select_n"):
+            if len(node.args) >= 3:
+                kept = self._eval(node.args[1], env)
+                fill = ast.unparse(node.args[2])
+                if _NEG_INF_PAT.search(fill):
+                    if "softmax" in kept:
+                        self._emit(DS002, node,
+                                   "-inf mask applied after softmax")
+                    return kept | {"mask"}
+            return arg_ev
+        if tail in ("max", "maximum", "sum", "stop_gradient", "transpose",
+                    "reshape", "squeeze", "expand_dims", "swapaxes"):
+            return arg_ev
+        return arg_ev
+
+    def _emit(self, rule: Rule, node: ast.AST, msg: str):
+        self._found.append(self.finding(rule.id, self._path, node,
+                                        msg + f" — {rule.summary}",
+                                        self._lines))

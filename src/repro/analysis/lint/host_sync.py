@@ -1,0 +1,177 @@
+"""host-sync checker (HS*): the fused decode path must not block on device.
+
+PR6's contract: inside the serving hot loop, the sampled int32 token ids
+are the ONLY per-step device→host transfer (`stats["host_syncs_per_step"]`
+== 0 is asserted by the CI fused-decode smoke). This checker is the static
+twin — it flags the constructs that force a sync:
+
+  HS001  ``.item()`` / ``.tolist()`` anywhere in a hot scope
+  HS002  ``int()/float()/bool()`` applied to a device-suspect value
+  HS003  ``np.asarray/np.array/jax.device_get`` on a device-suspect value
+  HS004  ``block_until_ready`` outside an allowlisted timing context
+         (functions named ``warmup*``, ``*bench*``, ``*time*``/``*timing*``,
+         ``measure*``)
+
+Hot scopes: all of ``serve/sampling.py``; ``serve/engine.py`` functions on
+the decode path (``step``, ``_decode_pool``, ``_sample``, anything
+``*fused*``/``*decode*``); and ``models/*.py`` decode entries (functions
+matching ``*decode*`` / ``*cache_attend*``). HS004 applies file-wide to
+``serve/ models/ core/ kernels/``.
+
+Device-suspicion is a one-pass local taint: function params (minus
+``self``/``cls``) and anything assigned from a ``jnp.*``/``jax.*`` rooted
+expression are suspect; ``np.asarray(...)`` results are host values (the
+*call itself* is the flagged sync, its result is clean).
+"""
+from __future__ import annotations
+
+import ast
+import re
+from typing import List, Optional, Set
+
+from repro.analysis.lint.core import Checker, Finding, Rule, register_checker
+
+HS001 = Rule("HS001", ".item()/.tolist() in a decode hot scope forces a "
+                      "device sync")
+HS002 = Rule("HS002", "int()/float()/bool() on a device value in a hot "
+                      "scope forces a device sync")
+HS003 = Rule("HS003", "np.asarray/np.array/jax.device_get on a device "
+                      "value in a hot scope forces a device sync")
+HS004 = Rule("HS004", "block_until_ready outside an allowlisted timing "
+                      "context (warmup*/bench*/time*/measure*)")
+
+# functions where an explicit barrier is the point
+_TIMING_FN = re.compile(r"(^warmup|bench|tim(e|ing)|^measure)", re.I)
+
+# decode-path function names per file family
+_ENGINE_HOT = re.compile(r"(^step$|decode|fused|^_sample$)")
+_MODEL_HOT = re.compile(r"(decode|cache_attend)")
+
+_NUMPY_PULL = {"np.asarray", "np.array", "numpy.asarray", "numpy.array",
+               "jax.device_get"}
+_DEVICE_ROOTS = ("jnp.", "jax.", "lax.")
+
+
+def _dotted(node: ast.AST) -> Optional[str]:
+    """`a.b.c` / `a` → its dotted string, else None."""
+    parts: List[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return None
+
+
+def _mentions_device(node: ast.AST, tainted: Set[str]) -> bool:
+    for sub in ast.walk(node):
+        if isinstance(sub, ast.Name) and sub.id in tainted:
+            return True
+        if isinstance(sub, ast.Call):
+            d = _dotted(sub.func)
+            if d and (d.startswith(_DEVICE_ROOTS) or
+                      (d.startswith("self.") and
+                       re.search(r"(decode|sample|prefill|attend)", d))):
+                return True
+    return False
+
+
+@register_checker
+class HostSyncChecker(Checker):
+    rules = (HS001, HS002, HS003, HS004)
+
+    def applies(self, path: str) -> bool:
+        return bool(re.search(
+            r"(^|/)(serve|models|core|kernels)/[^/]+\.py$", path)) or \
+            bool(re.search(r"(^|/)serve/pool/[^/]+\.py$", path))
+
+    @staticmethod
+    def _hot_fn(path: str, name: str) -> bool:
+        if re.search(r"(^|/)sampling\.py$", path):
+            return True
+        if re.search(r"(^|/)engine\.py$", path):
+            return bool(_ENGINE_HOT.search(name))
+        if re.search(r"(^|/)models/[^/]+\.py$", path):
+            return bool(_MODEL_HOT.search(name))
+        return False
+
+    def check(self, path: str, tree: ast.Module,
+              source: str) -> List[Finding]:
+        lines = source.splitlines()
+        findings: List[Finding] = []
+        for fn in ast.walk(tree):
+            if not isinstance(fn, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                continue
+            in_timing = bool(_TIMING_FN.search(fn.name))
+            hot = self._hot_fn(path, fn.name)
+            tainted = self._taint(fn) if hot else set()
+            for node in ast.walk(fn):
+                if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)) \
+                        and node is not fn:
+                    # nested defs get their own outer-loop visit; their
+                    # timing/hot status is their own
+                    continue
+                if not isinstance(node, ast.Call):
+                    continue
+                d = _dotted(node.func) or ""
+                # `.item()` on a subscript/call base has no dotted name —
+                # the method name alone is the signal
+                tail = (node.func.attr if isinstance(node.func, ast.Attribute)
+                        else d.rsplit(".", 1)[-1])
+                if tail == "block_until_ready" and not in_timing:
+                    findings.append(self.finding(
+                        HS004.id, path, node,
+                        "block_until_ready blocks the host; move it into a "
+                        "warmup/bench/timing function or suppress with a "
+                        "justification", lines))
+                if not hot:
+                    continue
+                if tail in ("item", "tolist"):
+                    findings.append(self.finding(
+                        HS001.id, path, node,
+                        f".{tail}() syncs device→host inside the decode hot "
+                        "path — keep per-step transfers to the sampled "
+                        "token ids only", lines))
+                elif d in ("int", "float", "bool") and node.args and \
+                        _mentions_device(node.args[0], tainted):
+                    findings.append(self.finding(
+                        HS002.id, path, node,
+                        f"{d}() on a device value blocks until the value is "
+                        "ready — keep it on device or hoist out of the hot "
+                        "path", lines))
+                elif d in _NUMPY_PULL and node.args and \
+                        _mentions_device(node.args[0], tainted):
+                    findings.append(self.finding(
+                        HS003.id, path, node,
+                        f"{d}() pulls a device array to host inside the "
+                        "decode hot path", lines))
+        return findings
+
+    @staticmethod
+    def _taint(fn: ast.AST) -> Set[str]:
+        tainted: Set[str] = set()
+        args = fn.args
+        for a in (args.posonlyargs + args.args + args.kwonlyargs +
+                  [x for x in (args.vararg, args.kwarg) if x]):
+            if a.arg not in ("self", "cls"):
+                tainted.add(a.arg)
+        # two passes so later-defined producers taint earlier uses too
+        for _ in range(2):
+            for node in ast.walk(fn):
+                if not isinstance(node, ast.Assign):
+                    continue
+                rhs_device = _mentions_device(node.value, tainted)
+                # np.asarray results live on host — the call is the sync,
+                # not its uses
+                if isinstance(node.value, ast.Call) and \
+                        (_dotted(node.value.func) or "") in _NUMPY_PULL:
+                    rhs_device = False
+                for tgt in node.targets:
+                    names = [n.id for n in ast.walk(tgt)
+                             if isinstance(n, ast.Name)]
+                    if rhs_device:
+                        tainted.update(names)
+                    else:
+                        tainted.difference_update(names)
+        return tainted

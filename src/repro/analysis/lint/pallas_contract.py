@@ -1,0 +1,316 @@
+"""pallas-contract checker (PC*): BlockSpec discipline for every
+``pallas_call`` in ``kernels/``.
+
+The Pallas tiling contract this repo relies on (DESIGN.md §11): grids are
+derived from shapes that the kernel either divides exactly (guarded by an
+explicit ``%`` check that raises) or masks against true lengths; index
+maps are pure functions of grid indices and scalar-prefetch refs (a
+tensor-operand read inside an index_map silently gathers on every grid
+step); and per-launch VMEM residency — block tiles plus explicit VMEM
+scratch — must fit the budget or the kernel OOMs only on large shapes.
+
+  PC001  grid entry computed with ``//`` in a function with no ``%``
+         divisibility guard and no masking — partial tiles are dropped
+  PC002  ``index_map`` reads a tensor operand of the kernel (only grid
+         indices and scalar-prefetch params are legal)
+  PC003  estimated VMEM footprint (block tiles at 4 B/elt + VMEM scratch
+         at dtype width) exceeds the budget (default 16 MiB,
+         ``--vmem-budget``)
+  PC004  ``index_map`` arity ≠ len(grid) + num_scalar_prefetch
+
+Static shape folding is best-effort: only integer-literal chains through
+local assignments resolve; unresolvable entries are skipped rather than
+guessed (the checker under-reports, never fabricates).
+"""
+from __future__ import annotations
+
+import ast
+import re
+from typing import Dict, List, Optional, Tuple
+
+from repro.analysis.lint.core import Checker, Finding, Rule, register_checker
+
+PC001 = Rule("PC001", "pallas grid uses `//` with no % divisibility guard "
+                      "or masking — partial tiles are silently dropped")
+PC002 = Rule("PC002", "index_map reads a tensor operand — only grid "
+                      "indices and scalar-prefetch refs are legal")
+PC003 = Rule("PC003", "estimated VMEM footprint exceeds budget")
+PC004 = Rule("PC004", "index_map arity != len(grid) + num_scalar_prefetch")
+
+_DTYPE_BYTES = {"float32": 4, "f32": 4, "int32": 4, "uint32": 4,
+                "bfloat16": 2, "float16": 2, "int8": 1, "uint8": 1,
+                "float8_e4m3fn": 1, "float8_e5m2": 1, "bool_": 1}
+_DEFAULT_BUDGET = 16 * 2 ** 20
+
+
+def _dotted(node: ast.AST) -> Optional[str]:
+    parts: List[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return None
+
+
+def _tail(node: ast.AST) -> str:
+    d = _dotted(node) or ""
+    return d.rsplit(".", 1)[-1]
+
+
+@register_checker
+class PallasContractChecker(Checker):
+    rules = (PC001, PC002, PC003, PC004)
+    vmem_budget: int = _DEFAULT_BUDGET
+
+    def applies(self, path: str) -> bool:
+        return bool(re.search(r"(^|/)kernels/[^/]+\.py$", path))
+
+    def check(self, path: str, tree: ast.Module,
+              source: str) -> List[Finding]:
+        self._lines = source.splitlines()
+        self._path = path
+        findings: List[Finding] = []
+        for fn in ast.walk(tree):
+            if not isinstance(fn, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                continue
+            calls = [n for n in ast.walk(fn) if isinstance(n, ast.Call)
+                     and _tail(n.func) == "pallas_call"]
+            if calls:
+                findings.extend(self._check_fn(fn, calls))
+        return findings
+
+    # ------------------------------------------------------------------
+    def _check_fn(self, fn: ast.AST, calls: List[ast.Call]) -> List[Finding]:
+        out: List[Finding] = []
+        env = self._const_env(fn)
+        has_guard = self._has_divisibility_guard(fn)
+        operands = self._operand_names(fn, calls)
+        grid_node, n_prefetch = self._grid_of(fn, calls, env)
+        grid_len = (len(grid_node.elts)
+                    if isinstance(grid_node, ast.Tuple) else None)
+
+        # PC001 — unguarded floor-division grids
+        if grid_node is not None and not has_guard:
+            for elt in (grid_node.elts
+                        if isinstance(grid_node, ast.Tuple) else [grid_node]):
+                if self._has_floordiv(elt, env):
+                    out.append(self.finding(
+                        PC001.id, self._path, elt,
+                        f"grid entry `{ast.unparse(elt)}` floor-divides "
+                        "with no `%` guard or masking in scope — the "
+                        "remainder tile is never launched", self._lines))
+
+        # PC002 / PC004 — index maps
+        specs = [n for n in ast.walk(fn) if isinstance(n, ast.Call)
+                 and _tail(n.func) == "BlockSpec"]
+        vmem_bytes = 0
+        vmem_known = False
+        for spec in specs:
+            shape, index_map = self._spec_parts(spec)
+            if index_map is not None and isinstance(index_map, ast.Lambda):
+                lam_params = {a.arg for a in index_map.args.args}
+                for sub in ast.walk(index_map.body):
+                    if isinstance(sub, ast.Name) and \
+                            sub.id not in lam_params and sub.id in operands:
+                        out.append(self.finding(
+                            PC002.id, self._path, index_map,
+                            f"index_map closes over kernel operand "
+                            f"`{sub.id}` — pass it as a scalar-prefetch "
+                            "ref or fold it into the grid", self._lines))
+                        break
+                else:
+                    for sub in ast.walk(index_map.body):
+                        if isinstance(sub, ast.Call) and re.match(
+                                r"^(jnp|jax|lax)\.",
+                                _dotted(sub.func) or ""):
+                            out.append(self.finding(
+                                PC002.id, self._path, index_map,
+                                "index_map calls into jnp/jax — index maps "
+                                "must be pure index arithmetic",
+                                self._lines))
+                            break
+                if grid_len is not None:
+                    want = grid_len + n_prefetch
+                    got = len(index_map.args.args)
+                    if got != want:
+                        out.append(self.finding(
+                            PC004.id, self._path, index_map,
+                            f"index_map takes {got} arg(s) but grid has "
+                            f"{grid_len} axis(es) + {n_prefetch} scalar-"
+                            "prefetch ref(s)", self._lines))
+            if shape is not None:
+                n = self._fold_product(shape, env)
+                if n is not None:
+                    vmem_bytes += n * 4
+                    vmem_known = True
+
+        # PC003 — VMEM budget (block tiles + explicit scratch)
+        for sub in ast.walk(fn):
+            if isinstance(sub, ast.Call) and _tail(sub.func) == "VMEM" \
+                    and sub.args:
+                n = self._fold_product(sub.args[0], env)
+                width = 4
+                if len(sub.args) > 1:
+                    s = ast.unparse(sub.args[1])
+                    for name, b in _DTYPE_BYTES.items():
+                        if name in s:
+                            width = b
+                            break
+                if n is not None:
+                    vmem_bytes += n * width
+                    vmem_known = True
+        if vmem_known and vmem_bytes > self.vmem_budget:
+            out.append(self.finding(
+                PC003.id, self._path, calls[0],
+                f"estimated VMEM footprint {vmem_bytes} B exceeds budget "
+                f"{self.vmem_budget} B — shrink block shapes or raise "
+                "--vmem-budget", self._lines))
+        return out
+
+    # ------------------------------------------------------------------
+    @staticmethod
+    def _spec_parts(spec: ast.Call) -> Tuple[Optional[ast.AST],
+                                             Optional[ast.AST]]:
+        """BlockSpec(block_shape, index_map) → (shape node, index_map node);
+        both positional and keyword forms are accepted."""
+        shape: Optional[ast.AST] = None
+        index_map: Optional[ast.AST] = None
+        if spec.args:
+            shape = spec.args[0]
+        if len(spec.args) > 1:
+            index_map = spec.args[1]
+        for kw in spec.keywords:
+            if kw.arg == "block_shape":
+                shape = kw.value
+            if kw.arg == "index_map":
+                index_map = kw.value
+        return shape, index_map
+
+    @staticmethod
+    def _const_env(fn: ast.AST) -> Dict[str, int]:
+        env: Dict[str, int] = {}
+        for _ in range(2):
+            for node in ast.walk(fn):
+                if isinstance(node, ast.Assign) and \
+                        len(node.targets) == 1 and \
+                        isinstance(node.targets[0], ast.Name):
+                    v = PallasContractChecker._fold(node.value, env)
+                    if v is not None:
+                        env[node.targets[0].id] = v
+        return env
+
+    @staticmethod
+    def _fold(node: ast.AST, env: Dict[str, int]) -> Optional[int]:
+        if isinstance(node, ast.Constant) and isinstance(node.value, int) \
+                and not isinstance(node.value, bool):
+            return node.value
+        if isinstance(node, ast.Name):
+            return env.get(node.id)
+        if isinstance(node, ast.BinOp):
+            a = PallasContractChecker._fold(node.left, env)
+            b = PallasContractChecker._fold(node.right, env)
+            if a is None or b is None:
+                return None
+            try:
+                if isinstance(node.op, ast.Add):
+                    return a + b
+                if isinstance(node.op, ast.Sub):
+                    return a - b
+                if isinstance(node.op, ast.Mult):
+                    return a * b
+                if isinstance(node.op, ast.FloorDiv):
+                    return a // b
+                if isinstance(node.op, ast.Mod):
+                    return a % b
+                if isinstance(node.op, ast.Pow):
+                    return a ** b
+            except (ZeroDivisionError, OverflowError):
+                return None
+        return None
+
+    def _fold_product(self, shape: ast.AST,
+                      env: Dict[str, int]) -> Optional[int]:
+        if not isinstance(shape, (ast.Tuple, ast.List)):
+            return None
+        prod = 1
+        for elt in shape.elts:
+            if isinstance(elt, ast.Constant) and elt.value is None:
+                continue  # None block dims are squeezed, not tiled
+            v = self._fold(elt, env)
+            if v is None:
+                return None
+            prod *= max(v, 1)
+        return prod
+
+    @staticmethod
+    def _has_divisibility_guard(fn: ast.AST) -> bool:
+        for node in ast.walk(fn):
+            if isinstance(node, ast.BinOp) and isinstance(node.op, ast.Mod):
+                return True
+            if isinstance(node, ast.Call):
+                t = _tail(node.func)
+                if t in ("where", "when", "masked", "iota", "cdiv"):
+                    return True  # explicit masking counts as a guard
+        return False
+
+    def _has_floordiv(self, node: ast.AST, env: Dict[str, int]) -> bool:
+        for sub in ast.walk(node):
+            if isinstance(sub, ast.BinOp) and \
+                    isinstance(sub.op, ast.FloorDiv):
+                return True
+            if isinstance(sub, ast.Call) and _tail(sub.func) == "cdiv":
+                return False  # ceil-division launches the partial tile
+        return False
+
+    @staticmethod
+    def _operand_names(fn: ast.AST, calls: List[ast.Call]) -> set:
+        """Names passed as runtime operands: args of the pallas_call
+        application — either `pl.pallas_call(...)(a, b)` directly or via a
+        local binding `f = pl.pallas_call(...); f(a, b)`."""
+        bound: set = set()
+        for node in ast.walk(fn):
+            if isinstance(node, ast.Assign) and \
+                    isinstance(node.value, ast.Call) and \
+                    node.value in calls:
+                for tgt in node.targets:
+                    if isinstance(tgt, ast.Name):
+                        bound.add(tgt.id)
+        operands: set = set()
+        for node in ast.walk(fn):
+            if not isinstance(node, ast.Call):
+                continue
+            direct = isinstance(node.func, ast.Call) and node.func in calls
+            via_name = isinstance(node.func, ast.Name) and \
+                node.func.id in bound
+            if direct or via_name:
+                for a in node.args:
+                    for sub in ast.walk(a):
+                        if isinstance(sub, ast.Name):
+                            operands.add(sub.id)
+        return operands
+
+    def _grid_of(self, fn: ast.AST, calls: List[ast.Call],
+                 env: Dict[str, int]) -> Tuple[Optional[ast.AST], int]:
+        """(grid tuple node, num_scalar_prefetch) — from pallas_call's own
+        `grid=`, or from a PrefetchScalarGridSpec (inline or bound to a
+        local that feeds `grid_spec=`)."""
+        for call in calls:
+            for kw in call.keywords:
+                if kw.arg == "grid":
+                    return kw.value, 0
+        for node in ast.walk(fn):
+            if isinstance(node, ast.Call) and \
+                    _tail(node.func) == "PrefetchScalarGridSpec":
+                grid = None
+                n_pre = 0
+                for kw in node.keywords:
+                    if kw.arg == "grid":
+                        grid = kw.value
+                    if kw.arg == "num_scalar_prefetch":
+                        v = self._fold(kw.value, env)
+                        n_pre = v if v is not None else 0
+                if grid is not None:
+                    return grid, n_pre
+        return None, 0

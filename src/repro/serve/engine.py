@@ -58,6 +58,7 @@ tests/test_serve_continuous.py and tests/test_paged_pool.py.
 from __future__ import annotations
 
 import dataclasses
+import os
 import time
 import warnings
 from typing import Optional
@@ -190,6 +191,10 @@ class ServeEngine:
             # matching; a deadline drop must hand them back (satellite fix)
             self.sched.on_drop = self._drop_prefix_holds
         self._pins: list = []            # blocks held alive by pin_prefix
+        # REPRO_SANITIZE=1: cross-check allocator/page-table/lease state at
+        # every admission and retirement (DESIGN.md §14) — debug tax, off by
+        # default; test fixtures call check_invariants() directly instead
+        self._sanitize = os.environ.get("REPRO_SANITIZE", "0") not in ("", "0")
         self._prefix_hit_tokens = 0      # prompt tokens NOT re-prefilled
         self._prefix_prompt_tokens = 0   # prompt tokens admitted (hit + cold)
         self._cow_copies = 0
@@ -603,10 +608,13 @@ class ServeEngine:
             t = self.temperature if self.temperature > 0 else 1.0
             kth = jax.lax.top_k(logits, self.top_k)[0][..., -1:]
             masked = jnp.where(logits < kth, -jnp.inf, logits)
+            # flarecheck: disable=HS003 -- legacy host sampler, counted above
             return np.asarray(jax.random.categorical(sub, masked / t), np.int32)
         if self.temperature <= 0.0:
+            # flarecheck: disable=HS003 -- legacy host sampler, counted above
             return np.asarray(jnp.argmax(logits, axis=-1), np.int32)
         self.key, sub = jax.random.split(self.key)
+        # flarecheck: disable=HS003 -- legacy host sampler, counted above
         return np.asarray(
             jax.random.categorical(sub, logits / self.temperature), np.int32)
 
@@ -633,6 +641,8 @@ class ServeEngine:
             self._pt[slot] = self.slot_cache.trash
             self._pt_dirty = True
             self._lengths[slot] = 0
+            if self._sanitize:
+                self.check_invariants()
 
     def _prefill_group(self, bucket: int, group) -> None:
         """One prefill launch for ``group`` = [(req, slot), ...] admissions
@@ -720,6 +730,44 @@ class ServeEngine:
                 self._prefill_group(self._bucket(len(req.prompt)), [(req, slot)])
         for req, slot in hits:
             self._prefill_suffix_one(req, slot)
+        if self.paged and self._sanitize:
+            self.check_invariants()
+
+    def check_invariants(self) -> None:
+        """Runtime sanitizer (DESIGN.md §14): every allocator refcount must
+        be accounted for by a known holder — slot leases, prefix pins, or
+        queued requests' enqueue-time prefix holds — and every slot's page
+        table row must mirror its lease's mapped pages exactly (unmapped
+        tail pointing at the trash sink). No-op for unpaged engines. Called
+        from the pool-test fixtures, and at every admission/retire under
+        ``REPRO_SANITIZE=1``."""
+        if not self.paged:
+            return
+        refs: dict = {}
+        for lease in self._leases.values():
+            for b in lease.mapped:
+                refs[b] = refs.get(b, 0) + 1
+        for b in self._pins:
+            refs[b] = refs.get(b, 0) + 1
+        for req in self.sched.waiting:
+            for b in (req.prefix_blocks or []):
+                refs[b] = refs.get(b, 0) + 1
+        self.alloc.check_invariants(external_refs=refs)
+        trash = self.slot_cache.trash
+        for slot in range(self._pt.shape[0]):
+            lease = self._leases.get(slot)
+            mapped = list(lease.mapped) if lease is not None else []
+            row = self._pt[slot]
+            got = [int(x) for x in row[:len(mapped)]]
+            if got != mapped:
+                raise RuntimeError(
+                    f"sanitizer: slot {slot} page table row {got} disagrees "
+                    f"with its lease's mapped pages {mapped}")
+            if not (row[len(mapped):] == trash).all():
+                stray = [int(x) for x in row[len(mapped):] if x != trash]
+                raise RuntimeError(
+                    f"sanitizer: slot {slot} has page-table entries past its "
+                    f"lease ({stray}) — writes would land in foreign blocks")
 
     def _decode_pool(self, toks: jax.Array) -> jax.Array:
         """One fused decode step over the whole pool — model decode AND
@@ -774,6 +822,7 @@ class ServeEngine:
             t0 = time.time()
             toks_dev = self._decode_pool(jnp.asarray(self._cur_tok[:, None]))
             # the ONLY device->host transfer of the step: S int32 token ids
+            # flarecheck: disable=HS003 -- the one sanctioned per-step sync
             toks = np.asarray(toks_dev)
             now = time.time()
             self.stats["decode_s"] += now - t0

@@ -220,6 +220,70 @@ class BlockAllocator:
         lease.mapped.clear()
         lease.reserved = 0
 
+    # -- sanitizer -------------------------------------------------------
+    def check_invariants(self, external_refs: Optional[Dict[int, int]] = None
+                         ) -> None:
+        """Cross-check every piece of allocator state against every other
+        (the runtime sanitizer behind ``REPRO_SANITIZE=1`` and the pool-test
+        fixtures). Raises RuntimeError on the first inconsistency — raise,
+        not assert, so it fires under ``python -O`` too.
+
+        ``external_refs`` (block id -> expected refcount) lets the caller
+        assert that the allocator's refcounts are exactly accounted for by
+        known holders (engine leases + pins + queued prefix refs) — a leak
+        or a stolen reference shows up as a count mismatch.
+        """
+        free = self._free
+        if free != sorted(set(free)):
+            raise RuntimeError("sanitizer: free list not sorted/unique")
+        for b in free:
+            if not (0 <= b < self.num_blocks):
+                raise RuntimeError(f"sanitizer: free id {b} out of range")
+        overlap = self._mapped.intersection(free)
+        if overlap:
+            raise RuntimeError(
+                f"sanitizer: blocks both free and mapped: {sorted(overlap)}")
+        if len(free) + len(self._mapped) != self.num_blocks:
+            raise RuntimeError(
+                f"sanitizer: {len(free)} free + {len(self._mapped)} mapped "
+                f"!= {self.num_blocks} total (a block leaked)")
+        if set(self._ref) != self._mapped:
+            raise RuntimeError(
+                "sanitizer: refcount keys disagree with the mapped set: "
+                f"refs={sorted(self._ref)} mapped={sorted(self._mapped)}")
+        for b, r in self._ref.items():
+            if r < 1:
+                raise RuntimeError(
+                    f"sanitizer: mapped block {b} has refcount {r}")
+        if not (0 <= self._reserved <= len(free)):
+            raise RuntimeError(
+                f"sanitizer: {self._reserved} reserved pages vs "
+                f"{len(free)} free blocks (over-promised)")
+        for b, h in self._hash_of.items():
+            if self._by_hash.get(h) != b:
+                raise RuntimeError(
+                    f"sanitizer: hash index asymmetry on block {b}")
+        for h, b in self._by_hash.items():
+            if self._hash_of.get(b) != h:
+                raise RuntimeError(
+                    f"sanitizer: hash index asymmetry on hash {h.hex()}")
+            if b not in self._mapped and b not in free:
+                raise RuntimeError(
+                    f"sanitizer: indexed block {b} neither mapped nor "
+                    "cached-free")
+        for coll, what in ((free, "free"), (self._mapped, "mapped"),
+                           (self._hash_of, "indexed")):
+            if self.trash in coll:
+                raise RuntimeError(f"sanitizer: trash block is {what}")
+        if external_refs is not None and dict(external_refs) != self._ref:
+            missing = {b: r for b, r in self._ref.items()
+                       if external_refs.get(b, 0) != r}
+            extra = {b: r for b, r in external_refs.items()
+                     if self._ref.get(b, 0) != r}
+            raise RuntimeError(
+                "sanitizer: refcounts not accounted for by known holders — "
+                f"allocator-side {missing}, holder-side {extra}")
+
     # -- stats -----------------------------------------------------------
     def mapped_blocks(self) -> int:
         return self.num_blocks - len(self._free)

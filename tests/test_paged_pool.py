@@ -18,6 +18,26 @@ KEY = jax.random.PRNGKey(0)
 _MODELS = {}
 
 
+@pytest.fixture(autouse=True)
+def _sanitize_engines(monkeypatch):
+    """Every engine built in this module gets the allocator/page-table
+    sanitizer run at teardown — each pool test doubles as a sanitizer run
+    (DESIGN.md §14). Bare BlockAllocator units are NOT auto-checked: some
+    deliberately corrupt state to exercise the underflow detectors; valid
+    ones call check_invariants() explicitly."""
+    engines = []
+    orig = ServeEngine.__init__
+
+    def recording_init(self, *a, **k):
+        orig(self, *a, **k)
+        engines.append(self)
+
+    monkeypatch.setattr(ServeEngine, "__init__", recording_init)
+    yield
+    for eng in engines:
+        eng.check_invariants()
+
+
 def _model(arch):
     if arch not in _MODELS:
         model = get_model(get_smoke_config(arch))
@@ -46,8 +66,10 @@ def test_allocator_reserve_map_release():
     ids = a.map(lease, 2)
     assert ids == [0, 1]  # lowest ids first — deterministic
     assert a.mapped_blocks() == 2 and lease.reserved == 2
+    a.check_invariants(external_refs={0: 1, 1: 1})
     a.release(lease)
     assert a.available() == 6 and a.mapped_blocks() == 0
+    a.check_invariants(external_refs={})
 
 
 def test_allocator_append_and_stats():
@@ -57,6 +79,7 @@ def test_allocator_append_and_stats():
     a.append(lease)
     assert a.pages_appended == 1 and lease.mapped == [0, 1]
     assert a.stats()["blocks_peak_mapped"] == 2
+    a.check_invariants()
 
 
 def test_allocator_no_double_free():

@@ -18,6 +18,24 @@ KEY = jax.random.PRNGKey(0)
 _MODELS = {}
 
 
+@pytest.fixture(autouse=True)
+def _sanitize_engines(monkeypatch):
+    """Every engine built in this module gets the allocator/page-table
+    sanitizer run at teardown — each cache test doubles as a sanitizer run
+    (DESIGN.md §14), whatever state the scenario left behind."""
+    engines = []
+    orig = ServeEngine.__init__
+
+    def recording_init(self, *a, **k):
+        orig(self, *a, **k)
+        engines.append(self)
+
+    monkeypatch.setattr(ServeEngine, "__init__", recording_init)
+    yield
+    for eng in engines:
+        eng.check_invariants()
+
+
 def _model(arch):
     if arch not in _MODELS:
         model = get_model(get_smoke_config(arch))
@@ -87,6 +105,7 @@ def test_refcounted_share_and_release():
     assert a.mapped_blocks() == 0
     # cached-free: the hash stays registered for resurrection
     assert a.lookup(h) == b0
+    a.check_invariants(external_refs={})
 
 
 def test_double_free_and_underflow_detectors():
@@ -119,6 +138,7 @@ def test_cached_free_resurrection_and_margin():
     # resurrection (which eats a free block) refuse rather than oversubscribe
     assert not a.acquire(b, margin=2)
     assert a.mapped_blocks() == 0
+    a.check_invariants()
 
 
 def test_remap_evicts_stale_hash():
