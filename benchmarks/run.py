@@ -32,6 +32,7 @@ MODULES = {
     "table2": "benchmarks.bench_table2_lra",       # Table 2: LRA proxy
     "roofline": "benchmarks.bench_roofline",       # dry-run roofline table
     "serve": "benchmarks.bench_serve",             # continuous-batching engine
+    "mesh": "benchmarks.bench_mesh",               # mesh-parallel (DESIGN.md §15)
 }
 
 

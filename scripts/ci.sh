@@ -37,6 +37,37 @@ assert plan.backend != "paged", f"dense M>1 site leaked to paged: {plan.backend}
 print(f"paged routing OK (decode->paged, dense->{plan.backend})")
 PY
 
+echo "== mesh-parallel eligibility smoke (DESIGN.md §15) =="
+# both sharded backends must be registered with the mesh-eligibility columns,
+# and the strict symmetry must hold: sharded backends never auto-resolve
+# without a mesh, and naming one without a mesh is a hard error
+echo "$dispatch_list" | grep -q "^packed_shard " \
+    || { echo "ERROR: 'packed_shard' backend missing from the registry"; exit 1; }
+echo "$dispatch_list" | grep -q "^paged_shard " \
+    || { echo "ERROR: 'paged_shard' backend missing from the registry"; exit 1; }
+echo "$dispatch_list" | grep -q "with-mesh" \
+    || { echo "ERROR: dispatch --list lost the mesh-eligibility columns"; exit 1; }
+python - <<'PY'
+import jax.numpy as jnp
+from repro.core.dispatch import MixerShape, get_backend, resolve
+
+shape = MixerShape(batch=4, heads=4, tokens=64, latents=8, head_dim=8)
+for causal in (False, True):
+    for grad in (False, True):
+        _, plan = resolve("auto", shape=shape, dtype=jnp.float32,
+                          causal=causal, grad=grad)
+        assert not get_backend(plan.backend).caps.sharded, \
+            f"auto without a mesh picked sharded backend {plan.backend}"
+for name in ("packed_shard", "paged_shard"):
+    try:
+        resolve(name, shape=shape, dtype=jnp.float32, causal=False)
+    except ValueError:
+        pass
+    else:
+        raise SystemExit(f"{name} resolved without a mesh")
+print("mesh eligibility OK (sharded backends strictly mesh-gated)")
+PY
+
 echo "== flarecheck (static analysis, DESIGN.md §14) =="
 # rule catalog must be non-empty (a registration regression would silently
 # turn the gate into a no-op), then the gate itself: any finding not in the

@@ -17,9 +17,16 @@ that are flagged here:
   RT004  Python ``if``/``while`` testing a ``jnp.``/``jax.`` expression —
          under trace this either raises ConcretizationTypeError or forces
          a sync + retrace per branch
+  RT005  a ``Mesh`` constructed inside a jitted function that also issues
+         collectives (shard_map/psum/...) — the mesh is a trace-time
+         constant, so every distinct device assignment retraces, and
+         closing over it defeats the one-trace decode contract
+         (DESIGN.md §15: meshes are built at engine/plan build time and
+         passed in)
 
 Scope: ``core/`` and all of ``serve/`` (the policy resolver and engine are
-where plans and pytrees are built).
+where plans and pytrees are built); RT005 additionally covers
+``backends/``, ``distributed/`` and ``kernels/`` (where shard_map lives).
 """
 from __future__ import annotations
 
@@ -37,6 +44,9 @@ RT003 = Rule("RT003", "iteration over a set while building pytrees — "
                       "nondeterministic order breaks trace stability")
 RT004 = Rule("RT004", "Python control flow on a traced (jnp/jax) value — "
                       "concretization error or per-branch retrace")
+RT005 = Rule("RT005", "collective (shard_map/psum/...) closing over a Mesh "
+                      "built inside a jitted function — retraces per device "
+                      "assignment; hoist mesh construction to build time")
 
 # params that hold arrays/pytrees in this codebase's signatures
 _ARRAYISH = re.compile(
@@ -156,3 +166,80 @@ class RetraceChecker(Checker):
         nums = [s.value for s in ast.walk(numsval)
                 if isinstance(s, ast.Constant) and isinstance(s.value, int)]
         return [params[i] for i in nums if 0 <= i < len(params)]
+
+
+# collective entry points whose closure would capture the in-trace mesh
+_COLLECTIVES = frozenset({
+    "shard_map", "psum", "pmax", "pmin", "pmean", "all_gather", "ppermute",
+    "all_to_all", "psum_scatter", "axis_index",
+})
+# mesh constructors (suffix-matched: jax.sharding.Mesh, compat.make_mesh,
+# launch.mesh.make_host_mesh all count)
+_MESH_CTORS = frozenset({"Mesh", "make_mesh", "make_host_mesh"})
+
+
+@register_checker
+class MeshRetraceChecker(Checker):
+    """RT005 — the shard_map twin of RT001: mesh construction belongs at
+    build time (engine __init__ / plan resolution), never inside a traced
+    function. A Mesh is hashed into the jit cache key, so building one
+    per call silently defeats the warmup one-trace guarantee, and under
+    `jit(shard_map(...))` the inner mesh must match the outer sharding
+    anyway — there is no legitimate reason to construct it in-trace."""
+
+    rules = (RT005,)
+
+    def applies(self, path: str) -> bool:
+        return bool(re.search(
+            r"(^|/)(core|serve|backends|distributed|kernels)(/|/.*/)[^/]*\.py$",
+            path))
+
+    def check(self, path: str, tree: ast.Module,
+              source: str) -> List[Finding]:
+        lines = source.splitlines()
+        findings: List[Finding] = []
+        for node in ast.walk(tree):
+            if not isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                continue
+            if not self._is_jitted(node):
+                continue
+            mesh_names = self._meshes_built(node)
+            if not mesh_names:
+                continue
+            for sub in ast.walk(node):
+                if not isinstance(sub, ast.Call):
+                    continue
+                d = _dotted(sub.func) or ""
+                if d.rsplit(".", 1)[-1] in _COLLECTIVES:
+                    findings.append(self.finding(
+                        RT005.id, path, sub,
+                        f"`{d}` runs under jit while `{node.name}` builds a "
+                        f"Mesh ({', '.join(sorted(mesh_names))}) in-trace — "
+                        "hoist mesh construction to build time and close "
+                        "over it", lines))
+        return findings
+
+    @staticmethod
+    def _is_jitted(fn: ast.AST) -> bool:
+        for dec in fn.decorator_list:
+            target = dec
+            if isinstance(dec, ast.Call):
+                d = _dotted(dec.func) or ""
+                if d.rsplit(".", 1)[-1] == "partial" and dec.args:
+                    target = dec.args[0]  # functools.partial(jax.jit, ...)
+                else:
+                    target = dec.func
+            d = _dotted(target) or ""
+            if d.rsplit(".", 1)[-1] in ("jit", "pjit"):
+                return True
+        return False
+
+    @staticmethod
+    def _meshes_built(fn: ast.AST) -> List[str]:
+        out: List[str] = []
+        for sub in ast.walk(fn):
+            if isinstance(sub, ast.Call):
+                d = _dotted(sub.func) or ""
+                if d.rsplit(".", 1)[-1] in _MESH_CTORS:
+                    out.append(d)
+        return out

@@ -11,11 +11,12 @@ from repro.backends import (  # noqa: F401  (import for registration side effect
     causal,
     materialized,
     packed,
+    packed_shard,
     paged,
     pallas,
     sdpa,
     seqparallel,
 )
 
-__all__ = ["autotune", "causal", "materialized", "packed", "paged", "pallas",
-           "sdpa", "seqparallel"]
+__all__ = ["autotune", "causal", "materialized", "packed", "packed_shard",
+           "paged", "pallas", "sdpa", "seqparallel"]

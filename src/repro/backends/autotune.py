@@ -86,24 +86,33 @@ def runtime_version() -> str:
     return f"jax{jax.__version__}+jaxlib{jl}"
 
 
-def _base_key(shape: MixerShape, dtype, device: str, kind: str) -> str:
+def _base_key(shape: MixerShape, dtype, device: str, kind: str,
+              mesh: Optional[tuple] = None) -> str:
     import jax.numpy as jnp
 
     base = (f"{device}|{jnp.dtype(dtype).name}|N{shape.tokens}|M{shape.latents}"
             f"|D{shape.head_dim}|H{shape.heads}")
+    if mesh:
+        # shard-shape component: a tile winner for a per-shard slice is not
+        # evidence about the single-device problem (or another mesh shape) —
+        # sharded entries get their own key space, unsharded keys are
+        # byte-identical to the historical format so old caches keep hitting
+        base = f"{base}|mesh{'x'.join(str(int(s)) for s in mesh)}"
     # the historical "tiles" keys carry no kind prefix — existing caches stay valid
     return base if kind == "tiles" else f"{kind}|{base}"
 
 
-def cache_key(shape: MixerShape, dtype, device: str, kind: str = "tiles") -> str:
+def cache_key(shape: MixerShape, dtype, device: str, kind: str = "tiles",
+              mesh: Optional[tuple] = None) -> str:
     """The (runtime-versioned) key new winners are stored under."""
-    return f"{_base_key(shape, dtype, device, kind)}|{runtime_version()}"
+    return f"{_base_key(shape, dtype, device, kind, mesh)}|{runtime_version()}"
 
 
-def legacy_cache_key(shape: MixerShape, dtype, device: str, kind: str = "tiles") -> str:
+def legacy_cache_key(shape: MixerShape, dtype, device: str, kind: str = "tiles",
+                     mesh: Optional[tuple] = None) -> str:
     """Pre-versioning key format — still read as a fallback hit so caches
     written by earlier releases keep paying off until re-tuned."""
-    return _base_key(shape, dtype, device, kind)
+    return _base_key(shape, dtype, device, kind, mesh)
 
 
 def _read_disk(path: str) -> dict:
@@ -204,7 +213,7 @@ _DEFAULTS = {"tiles": default_tiles, "packed": default_packed}
 def measure_tiles(shape: MixerShape, dtype, device: str,
                   runner: Callable[[dict], float],
                   candidates: Optional[Iterable[dict]] = None,
-                  kind: str = "tiles") -> dict:
+                  kind: str = "tiles", mesh: Optional[tuple] = None) -> dict:
     """Time each candidate with ``runner(params) -> seconds`` and cache the
     winner. Returns the winning param dict (also annotated with timings)."""
     cands = list(candidates) if candidates is not None else _CANDIDATES[kind](shape)
@@ -219,7 +228,7 @@ def measure_tiles(shape: MixerShape, dtype, device: str,
         return _DEFAULTS[kind](shape)
     timed.sort(key=lambda p: p[0])
     best_dt, best = timed[0]
-    _store(cache_path(), cache_key(shape, dtype, device, kind), {
+    _store(cache_path(), cache_key(shape, dtype, device, kind, mesh), {
         **best, "us": best_dt * 1e6, "candidates": len(timed),
         "tuned_at": time.strftime("%Y-%m-%dT%H:%M:%S"),
     })
@@ -228,16 +237,18 @@ def measure_tiles(shape: MixerShape, dtype, device: str,
 
 def best_params(shape: MixerShape, dtype, device: str, *, kind: str = "tiles",
                 runner: Optional[Callable[[dict], float]] = None,
-                autotune: Optional[bool] = None) -> dict:
+                autotune: Optional[bool] = None,
+                mesh: Optional[tuple] = None) -> dict:
     """Cache-hit -> cached winner; miss -> time candidates iff autotuning is
     enabled and a runner is available, else the shape heuristic. A malformed
     cache entry counts as a miss, never an error. Lookup tries the
     runtime-versioned key first, then the legacy un-versioned key (a stale-
     runtime winner beats re-deriving the heuristic, but new measurements are
-    only ever stored versioned)."""
+    only ever stored versioned). ``mesh`` (a shard-count tuple) keys sharded
+    backends' per-shard winners separately from single-device entries."""
     cached = _load(cache_path())
-    for key in (cache_key(shape, dtype, device, kind),
-                legacy_cache_key(shape, dtype, device, kind)):
+    for key in (cache_key(shape, dtype, device, kind, mesh),
+                legacy_cache_key(shape, dtype, device, kind, mesh)):
         entry = cached.get(key)
         if entry is not None:
             try:
@@ -245,7 +256,7 @@ def best_params(shape: MixerShape, dtype, device: str, *, kind: str = "tiles",
             except (KeyError, TypeError, ValueError):
                 pass  # corrupt/partial entry — fall through
     if (autotune if autotune is not None else autotune_enabled()) and runner is not None:
-        best = measure_tiles(shape, dtype, device, runner, kind=kind)
+        best = measure_tiles(shape, dtype, device, runner, kind=kind, mesh=mesh)
         return {p: best[p] for p in _KIND_PARAMS[kind]}
     return _DEFAULTS[kind](shape)
 

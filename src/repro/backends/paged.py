@@ -88,3 +88,71 @@ register(MixerBackend(
     score=_score,
     doc="FLARE encode via the block-paged gather-decode kernel (serve pool)",
 ))
+
+
+# ---------------------------------------------------------------------------
+# paged_shard: the same kernel route for SLOT-SHARDED pools (DESIGN.md §15).
+# The batch/slot axis shards over every mesh axis flattened; each shard runs
+# the paged kernel on its local slots with zero cross-shard communication —
+# the serve engine's fused decode step adds the one all-gather (token ids)
+# itself. Registered so the engine's mesh-aware decode-plan resolution has a
+# scored, policy-addressable name, exactly like "paged" on one device.
+# ---------------------------------------------------------------------------
+
+
+def _mesh_size(mesh) -> int:
+    out = 1
+    for a in mesh.axis_names:
+        out *= int(mesh.shape[a])
+    return out
+
+
+def _plan_shard(shape: MixerShape, mesh, dtype) -> MixerPlan:
+    if mesh is None:
+        raise ValueError(
+            "backend 'paged_shard' needs a mesh — slot-sharded pools pass "
+            "theirs via ServeEngine(mesh=...)")
+    ndev = _mesh_size(mesh)
+    if shape.batch % ndev:
+        raise ValueError(
+            f"paged_shard: batch/slot count {shape.batch} not divisible by "
+            f"mesh size {ndev}")
+    from repro.backends.packed_shard import mesh_shape_tag
+
+    return MixerPlan("paged_shard", {
+        "block": min(DEFAULT_BLOCK, shape.tokens),
+        "mesh": mesh, "shard_axes": tuple(mesh.axis_names),
+        "mesh_shape": mesh_shape_tag(mesh),
+    })
+
+
+def _run_shard(plan: MixerPlan, q, k, v):
+    from jax.sharding import PartitionSpec as P
+
+    from repro.distributed.compat import shard_map
+
+    mesh = plan.params["mesh"]
+    ax = plan.params["shard_axes"]
+    axe = ax[0] if len(ax) == 1 else tuple(ax)
+    inner = MixerPlan("paged", {"block": plan.params.get("block", DEFAULT_BLOCK)})
+    fn = shard_map(
+        lambda q_, k_, v_: _run(inner, q_, k_, v_),
+        mesh=mesh,
+        in_specs=(P(), P(axe, None, None, None), P(axe, None, None, None)),
+        out_specs=P(axe, None, None, None),
+        check_rep=False,  # no replication rule exists for pallas_call
+    )
+    return fn(q, k, v)
+
+
+register(MixerBackend(
+    name="paged_shard",
+    caps=Capabilities(bidirectional=True, causal=False, sharded=True,
+                      device_kinds=("cpu", "tpu"),
+                      dtypes=("float32", "bfloat16"), grads=False),
+    plan=_plan_shard,
+    run=_run_shard,
+    score=_score,    # same decode-read signature scoring as "paged"
+    doc="slot-sharded paged kernel route: batch over the mesh, no "
+        "cross-shard traffic in the read itself",
+))

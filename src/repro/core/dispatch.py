@@ -84,7 +84,7 @@ class MixerPlan:
 
     def describe(self) -> str:
         keys = ("block_m", "block_n", "block", "pack", "tile", "chunk_size",
-                "seq_axes", "lat_axes", "mode", "quant")
+                "seq_axes", "lat_axes", "mode", "quant", "mesh_shape")
         shown = {k: self.params[k] for k in keys if k in self.params}
         # ';'/'+'-separated so the string stays comma-free inside the 3-field
         # ``name,us_per_call,derived`` benchmark CSV contract
@@ -254,8 +254,19 @@ def resolve(impl, *, shape: MixerShape, dtype, mesh=None, causal: bool = False,
                 f"no eligible mixer backend (causal={causal}, device={dev}, "
                 f"dtype={jnp.dtype(dtype).name}, mesh={mesh is not None}, "
                 f"grad={grad})")
-        backend = max(cands, key=lambda b: b.score(shape, dev))
-        return backend, backend.plan(shape, mesh, dtype)
+        # highest score first; a backend whose plan rejects this shape
+        # (e.g. a sharded form the shape does not divide over this mesh)
+        # drops out and the next-best eligible backend takes the call
+        cands.sort(key=lambda b: b.score(shape, dev), reverse=True)
+        errors = []
+        for backend in cands:
+            try:
+                return backend, backend.plan(shape, mesh, dtype)
+            except ValueError as e:
+                errors.append(f"{backend.name}: {e}")
+        raise ValueError(
+            "auto: every eligible backend rejected the shape at plan time:\n  "
+            + "\n  ".join(errors))
     backend = get_backend(impl)
     _check_contract(backend, causal, grad)
     return backend, backend.plan(shape, mesh, dtype)
@@ -269,17 +280,40 @@ def describe(impl, *, shape: MixerShape, dtype=jnp.float32, mesh=None,
 
 
 def sharded_plan(mesh, seq_axes: Sequence[str] | str,
-                 lat_axes: Sequence[str] | str = "model") -> MixerPlan:
+                 lat_axes: Sequence[str] | str = "model", *,
+                 shape: Optional[MixerShape] = None, dtype=None,
+                 prefer: Sequence[str] = ()) -> MixerPlan:
     """Pick the sharded FLARE form for a mesh: 1D sequence-parallel when the
     token dim already covers the mesh (including the ``lat_axes``), else the
     2D seq x latent form so the latent axis keeps ``lat_axes`` busy.
 
-    This is the single place the sp-vs-sp2d decision lives (previously
+    With a ``shape``, the fused ``packed_shard`` kernel is tried first —
+    always when ``prefer`` names it, and by default on TPU (where the fused
+    kernel is the fast path; off-TPU it runs in interpret mode, so the
+    jnp-based forms keep the default). An indivisible shape falls back to
+    the jnp forms unless ``packed_shard`` was explicitly preferred.
+
+    This is the single place the sharded-form decision lives (previously
     inlined in launch/specs.py).
     """
     seq = (seq_axes,) if isinstance(seq_axes, str) else tuple(seq_axes)
     lat = (lat_axes,) if isinstance(lat_axes, str) else tuple(lat_axes)
-    if all(a in seq for a in lat):
+    named = tuple(prefer or ())
+    want_packed = "packed_shard" in named
+    covered = all(a in seq for a in lat)
+    if shape is not None and (
+            want_packed or (not named and not covered and device_kind() == "tpu")):
+        from repro.backends.packed_shard import build_shard_plan
+
+        lat_eff = () if covered else lat
+        seq_eff = tuple(a for a in seq if a not in lat_eff)
+        try:
+            return build_shard_plan(shape, mesh, seq_eff, lat_eff,
+                                    dtype if dtype is not None else jnp.float32)
+        except ValueError:
+            if want_packed:
+                raise
+    if covered:
         return MixerPlan("seqparallel", {"mesh": mesh, "seq_axes": seq_axes})
     return MixerPlan("seqlat", {"mesh": mesh, "seq_axes": seq_axes,
                                 "lat_axes": lat_axes})
@@ -313,9 +347,22 @@ def run_causal_mixer(impl, q: jax.Array, k: jax.Array, v: jax.Array, *,
 # ---------------------------------------------------------------------------
 
 
+def _probe_mesh():
+    """A minimal (1, 1) host mesh for the eligibility columns — one device
+    suffices: eligibility is a capability question, not a placement one."""
+    try:
+        from repro.distributed.compat import make_mesh
+
+        return make_mesh((1, 1), ("data", "model"))
+    except Exception:  # noqa: BLE001 — no devices at all; column shows "?"
+        return None
+
+
 def _policy_matrix():
     """Every registered backend x the four canonical policies (bidirectional/
-    causal x infer/train): eligible on this device, or why not."""
+    causal x infer/train): eligible on this device, or why not. Plus the two
+    mesh columns: eligible-now (no mesh) vs eligible-with-mesh — the strict
+    symmetry in :func:`eligible` means exactly one of them can be "yes"."""
     from repro.core.policy import MixerPolicy, resolve_policy
 
     shape = MixerShape(batch=1, heads=4, tokens=1024, latents=16, head_dim=8)
@@ -325,6 +372,7 @@ def _policy_matrix():
         "causal/infer": (MixerPolicy(), True),
         "causal/train": (MixerPolicy(requires_grad=True), True),
     }
+    probe = _probe_mesh()
     rows = []
     for b in backends():
         cells = {}
@@ -341,6 +389,11 @@ def _policy_matrix():
                 cells[label] = ("no-grad" if "forward-only" in msg else
                                 "no-causal" if "not causal" in msg else
                                 "no-bidi" if "causal contract" in msg else "no")
+        cells["now"] = "yes" if eligible(b, causal=False, dtype=jnp.float32,
+                                         mesh=None) else "no"
+        cells["with-mesh"] = "?" if probe is None else (
+            "yes" if eligible(b, causal=False, dtype=jnp.float32, mesh=probe)
+            else "no")
         rows.append((b, cells))
     return shape, policies, rows
 
@@ -359,17 +412,27 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
     print(f"device={device_kind()}  probe shape: N={shape.tokens} M={shape.latents} "
           f"D={shape.head_dim} H={shape.heads}")
     cols = list(policies)
-    header = f"{'backend':<14} {'grads':<5} " + " ".join(f"{c:<13}" for c in cols)
+    header = (f"{'backend':<14} {'grads':<5} {'now':<4} {'with-mesh':<9} "
+              + " ".join(f"{c:<13}" for c in cols))
     print(header)
     print("-" * len(header))
     for b, cells in rows:
         flag = "yes" if b.caps.grads else "no"
-        print(f"{b.name:<14} {flag:<5} " + " ".join(f"{cells[c]:<13}" for c in cols)
+        print(f"{b.name:<14} {flag:<5} {cells['now']:<4} {cells['with-mesh']:<9} "
+              + " ".join(f"{cells[c]:<13}" for c in cols)
               + (f"  # {b.doc}" if args.list else ""))
     # the smoke contract: at least one backend must serve each canonical policy
     for c in cols:
         if not any(cells[c] == "yes" for _, cells in rows):
             print(f"ERROR: no eligible backend for policy {c}")
+            return 1
+    # ...and a sharded backend must never be eligible WITHOUT a mesh (nor a
+    # dense one WITH a mesh): the strict symmetry behind "scored by mesh
+    # availability"
+    for b, cells in rows:
+        if cells["now"] == "yes" and cells["with-mesh"] == "yes":
+            print(f"ERROR: backend {b.name} eligible both with and without "
+                  "a mesh — mesh symmetry broken")
             return 1
     return 0
 

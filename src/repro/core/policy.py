@@ -241,7 +241,9 @@ def resolve_policy(policy: PolicyLike, shape: MixerShape, dtype=None, *,
 
     with _autotune_override(pol.autotune):
         if mesh is not None and pol.seq_axes is not None:
-            plan = dispatch.sharded_plan(mesh, pol.seq_axes, pol.lat_axes or "model")
+            named = pol.backends if pol.backends != ("auto",) else ()
+            plan = dispatch.sharded_plan(mesh, pol.seq_axes, pol.lat_axes or "model",
+                                         shape=shape, dtype=dt, prefer=named)
             if pol.backends != ("auto",) and plan.backend not in pol.backends:
                 # an explicitly named backend is a contract everywhere else
                 # in this API — never silently override it with the axis pick

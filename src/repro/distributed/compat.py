@@ -14,6 +14,21 @@ def shard_map(*args, **kwargs):
     sm = getattr(jax, "shard_map", None)
     if sm is None:  # jax < 0.5
         from jax.experimental.shard_map import shard_map as sm
+    if "check_rep" in kwargs:
+        # the replication-check kwarg was renamed check_vma (and briefly
+        # dropped); translate so callers can always spell it check_rep.
+        # Bodies containing pallas_call need it off — there is no
+        # replication rule for pallas_call.
+        import inspect
+
+        try:
+            params = inspect.signature(sm).parameters
+        except (TypeError, ValueError):  # pragma: no cover
+            params = {}
+        if "check_rep" not in params:
+            val = kwargs.pop("check_rep")
+            if "check_vma" in params:
+                kwargs["check_vma"] = val
     return sm(*args, **kwargs)
 
 

@@ -217,6 +217,24 @@ def cache_shardings(caches_shape, mesh: Mesh, *, batch_axes=None, report=None):
     return jax.tree.map(one, caches_shape)
 
 
+def shard_slot_pool(pool: dict, mesh: Mesh, specs: dict) -> dict:
+    """Pin a serve pool onto its slot sharding (DESIGN.md §15; the MaxText
+    multi-host-inference idiom: serving state sharded over the flattened
+    mesh, host orchestration global). ``specs`` is
+    ``PagedModelCache.pool_pspecs(mesh.axis_names)``. Re-pinning an
+    already-correctly-placed pool is free, so the engine calls this after
+    every plain-jit pool mutation (prefill, COW copy, slot reset) to keep
+    the shard_map'd decode step's input shardings stable — one trace, no
+    resharding churn."""
+    put = lambda x, s: jax.device_put(x, NamedSharding(mesh, s))
+    return {
+        "dense": tuple(put(x, s) for x, s in zip(pool["dense"], specs["dense"])),
+        "data": tuple(put(x, specs["data"]) for x in pool["data"]),
+        "scale": tuple(None if x is None else put(x, specs["scale"])
+                       for x in pool["scale"]),
+    }
+
+
 def constrain_dim_to_batch_axes(x, dim: int = 0):
     """with_sharding_constraint pinning `dim` to the (pod, data) axes, using
     the ambient abstract mesh (set via jax.sharding.set_mesh). No-op when no

@@ -70,6 +70,11 @@ def main():
     ap.add_argument("--mixer", default=None,
                     help="FLARE mixer backend preference, comma-separated "
                          "(e.g. 'causal_pallas,causal_stream'); default: auto")
+    ap.add_argument("--mesh", default=None,
+                    help="slot-shard the paged pool over a device mesh "
+                         "(DESIGN.md §15): 'auto' spans every local device, "
+                         "or give an explicit shape like '4' or '2x2'; "
+                         "needs --pool-tokens")
     ap.add_argument("--prefix-cache", action="store_true",
                     help="content-hash block reuse across requests "
                          "(DESIGN.md §4 'Prefix cache'); needs --pool-tokens "
@@ -104,6 +109,19 @@ def main():
         raise SystemExit(f"{cfg.name} takes embeddings (frontend stub) — see examples/")
     params = model.init(jax.random.PRNGKey(0))
 
+    mesh = None
+    if args.mesh:
+        from repro.launch.mesh import make_host_mesh
+
+        if args.mesh == "auto":
+            mesh = make_host_mesh()
+        else:
+            shape = tuple(int(x) for x in args.mesh.split("x"))
+            axes = ("data", "model")[:len(shape)]
+            if len(shape) != len(axes):
+                raise SystemExit(f"--mesh {args.mesh}: at most 2 axes")
+            mesh = make_host_mesh(shape, axes)
+
     engine = ServeEngine(model, params, capacity=args.capacity, slots=args.slots,
                          temperature=args.temperature, seed=args.seed,
                          pool_tokens=args.pool_tokens, kv_quant=args.kv_quant,
@@ -111,9 +129,13 @@ def main():
                          coalesce_prefill=args.coalesce,
                          sample=args.sample, top_k=args.top_k,
                          decode_backend=args.decode_backend,
-                         prefix_cache=args.prefix_cache)
+                         prefix_cache=args.prefix_cache, mesh=mesh)
     print(f"engine: {args.slots} slots, capacity {args.capacity}, "
           f"{engine.stats['cache']}")
+    if mesh is not None:
+        print(f"slot-sharded pool: mesh {engine.stats['mesh_shape']} "
+              f"({engine.stats['shards']} shards x "
+              f"{args.slots // engine.stats['shards']} slots)")
     print(f"decode backend: {engine.stats['decode_backend']}  "
           f"sampler: {args.sample}"
           + (f"(k={args.top_k})" if args.sample == "topk" else ""))

@@ -145,8 +145,10 @@ def build_cell(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh,
         # batch spec below (O(M*C) psum per layer, §Perf iteration 1). The
         # policy carries the axis *hints*; resolution (sp-vs-sp2d: latents
         # over "model" when the point count only divides the data axes,
-        # §Perf iteration 2) happens once inside get_model via
-        # dispatch.sharded_plan — build_cell no longer resolves anything.
+        # §Perf iteration 2; on TPU the fused packed_shard kernel is tried
+        # first when the shape divides the mesh, DESIGN.md §15) happens once
+        # inside get_model via dispatch.sharded_plan — build_cell no longer
+        # resolves anything.
         from repro.core.policy import MixerPolicy
 
         policy = MixerPolicy(seq_axes=_pde_point_axes(cfg, shape, mesh),

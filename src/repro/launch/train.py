@@ -32,7 +32,8 @@ def main():
     ap.add_argument("--microbatches", type=int, default=1)
     ap.add_argument("--mixer", default=None,
                     help="FLARE mixer backend preference, comma-separated "
-                         "(e.g. 'packed,sdpa'); default: auto")
+                         "(e.g. 'packed,sdpa', or 'packed_shard' with "
+                         "--mesh for the shard_map'd kernel); default: auto")
     args = ap.parse_args()
     logging.basicConfig(level=logging.INFO, format="%(asctime)s %(message)s")
 
@@ -47,7 +48,10 @@ def main():
         from repro.core.policy import MixerPolicy
 
         policy = MixerPolicy(backends=tuple(args.mixer.split(",")))
-    model = get_model(cfg, policy=policy, seq_len_hint=args.seq_len)
+    # a named sharded backend (packed_shard) resolves against the training
+    # mesh (DESIGN.md §15); without --mixer the mesh stays a Trainer concern
+    model = get_model(cfg, policy=policy, seq_len_hint=args.seq_len,
+                      mesh=mesh if policy is not None else None)
     if model.plans:
         print(f"mixer plans (resolved once at build): "
               f"train={model.plans['train'].describe()} "

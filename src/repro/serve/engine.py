@@ -32,6 +32,18 @@ the only per-step host<->device traffic is the fed tokens and the sampled
 ids. ``decode_backend=`` pins the route ("paged" forces the Pallas kernel,
 "gather" the jnp dense-gather view, "auto" resolves).
 
+**Slot-sharded pool** (``mesh=...``, DESIGN.md §15): with a device mesh
+the paged pool's block storage, page tables and per-slot dense leaves
+shard over the flattened mesh — slot ``s`` lives entirely on shard
+``s // (slots/shards)``, with a per-shard allocator and a per-shard trash
+sink. The fused decode step runs under ``shard_map`` (each device decodes
+its own slots against its local storage partition; the resolved decode
+plan is the ``paged_shard`` backend) and all-gathers the sampled token
+ids — the ONLY cross-shard communication per step. Everything host-side
+stays global and unchanged: admission, the FIFO scheduler, prefix
+matching (against the target slot's shard at the gate), COW, and the
+plain-jit prefill, which addresses the one global storage array.
+
 Scheduling (FIFO admission with an optional block-availability gate, free
 list, deadlines, latency percentiles) is `serve.scheduler.SlotScheduler`.
 Compilation is bounded: prompt buckets are powers of two and decode is a
@@ -86,10 +98,24 @@ class ServeEngine:
                  pool_tokens: Optional[int] = None, kv_quant: str = "none",
                  block_size: int = 16, coalesce_prefill: bool = False,
                  sample: str = "greedy", top_k: int = 0,
-                 decode_backend: str = "auto", prefix_cache: bool = False):
+                 decode_backend: str = "auto", prefix_cache: bool = False,
+                 mesh=None):
         if decode_backend not in ("auto", "paged", "gather"):
             raise ValueError(f"unknown decode_backend {decode_backend!r} "
                              "(auto | paged | gather)")
+        self.mesh = mesh
+        self._shards = 1
+        if mesh is not None:
+            if pool_tokens is None:
+                raise ValueError(
+                    "mesh=... needs the paged pool (pool_tokens=...) — slot "
+                    "sharding partitions block storage (DESIGN.md §15)")
+            for a in mesh.axis_names:
+                self._shards *= int(mesh.shape[a])
+            if slots % self._shards:
+                raise ValueError(f"slots={slots} not divisible by mesh size "
+                                 f"{self._shards}")
+        self._slots_per_shard = slots // self._shards
         prefill_into = model.prefill_into
         if prefill_into is None and model.prefill is not None \
                 and model.init_caches is not None:
@@ -137,12 +163,29 @@ class ServeEngine:
             self.block = block_size
             self.slot_cache = PagedModelCache(
                 model.init_caches, capacity, pool_tokens=pool_tokens,
-                block=block_size, quant=kv_quant)
-            self.alloc = self.slot_cache.allocator()
+                block=block_size, quant=kv_quant, shards=self._shards)
             self._has_paged = bool(self.slot_cache.spec.paged)
+            if self._shards > 1 and not self._has_paged:
+                raise ValueError(
+                    f"{model.cfg.name}: slot sharding (mesh=...) needs "
+                    "token-paged leaves; this family's state is all-dense "
+                    "(already O(1) in capacity) — serve it unsharded")
+            # one allocator PER SHARD (shard-local ids; shards=1 == the
+            # historical single global allocator, bit-for-bit)
+            self._allocs = [self.slot_cache.allocator()
+                            for _ in range(self._shards)]
+            self.alloc = self._allocs[0]
             self.pool = self.slot_cache.init(slots)
-            self._pt = np.full((slots, self.slot_cache.max_pages),
-                               self.slot_cache.trash, np.int32)
+            self._pool_specs = None
+            if self._shards > 1:
+                from repro.distributed.sharding import shard_slot_pool
+
+                self._pool_specs = self.slot_cache.pool_pspecs(
+                    tuple(mesh.axis_names))
+                self.pool = shard_slot_pool(self.pool, mesh, self._pool_specs)
+            self._pt = np.empty((slots, self.slot_cache.max_pages), np.int32)
+            for s in range(slots):
+                self._pt[s] = self._trash_of(s)
             self._pt_dev = jnp.asarray(self._pt)  # device mirror, re-uploaded
             self._pt_dirty = False                # only when the table changed
             self._lengths = np.zeros(slots, np.int64)
@@ -213,7 +256,42 @@ class ServeEngine:
             "sample_host_syncs": 0, "host_syncs_per_step": 0.0,
             "prefix_cache": self._prefix_enabled,
             "prefix_hit_rate": 0.0, "shared_pages": 0, "cow_copies": 0,
+            "shards": self._shards, "mesh_shape": self._mesh_shape(),
         }
+
+    def _mesh_shape(self) -> Optional[str]:
+        if self.mesh is None:
+            return None
+        from repro.backends.packed_shard import mesh_shape_tag
+
+        return mesh_shape_tag(self.mesh)
+
+    # ------------------------------------------------------------------
+    # slot -> shard bookkeeping (DESIGN.md §15; all identity when shards=1)
+    # ------------------------------------------------------------------
+    def _shard_of(self, slot: int) -> int:
+        return slot // self._slots_per_shard
+
+    def _alloc_for(self, slot: int):
+        return self._allocs[self._shard_of(slot)]
+
+    def _goff(self, shard: int) -> int:
+        """Global storage row of the shard's local block 0 (page tables
+        store global ids; allocators speak shard-local ones)."""
+        return self.slot_cache.global_offset(shard)
+
+    def _trash_of(self, slot: int) -> int:
+        return self.slot_cache.trash_row(self._shard_of(slot))
+
+    def _repin(self) -> None:
+        """Re-pin the pool onto its slot sharding after a plain-jit mutation
+        (prefill, COW, reset) so the shard_map'd decode step always sees its
+        canonical input shardings — no-op placement when already correct,
+        and a no-op entirely when unsharded."""
+        if self._shards > 1:
+            from repro.distributed.sharding import shard_slot_pool
+
+            self.pool = shard_slot_pool(self.pool, self.mesh, self._pool_specs)
 
     # ------------------------------------------------------------------
     # the fused decode step (DESIGN.md §4 "Fused decode step")
@@ -243,17 +321,19 @@ class ServeEngine:
             heads=max(t[0] if len(t) == 2 else 1 for t in tails),
             tokens=self.capacity, latents=1,
             head_dim=max(t[-1] for t in tails))
-        policy = (MixerPolicy(backends=("paged",))
+        want = "paged_shard" if self._shards > 1 else "paged"
+        policy = (MixerPolicy(backends=(want,))
                   if self._decode_backend_opt == "paged" else MixerPolicy())
         try:
             plan = resolve_policy(policy, shape,
-                                  jnp.dtype(spec.paged[0].dtype), causal=False)
+                                  jnp.dtype(spec.paged[0].dtype), causal=False,
+                                  mesh=self.mesh if self._shards > 1 else None)
         except Exception:
             return None
-        if plan.backend != "paged":
+        if plan.backend not in ("paged", "paged_shard"):
             return None
-        return MixerPlan("paged", {**plan.params, "block": spec.block,
-                                   "quant": spec.quant.name})
+        return MixerPlan(plan.backend, {**plan.params, "block": spec.block,
+                                        "quant": spec.quant.name})
 
     def _describe_decode_backend(self) -> str:
         """The decode-step route, recorded per bench row (the satellite fix
@@ -270,6 +350,8 @@ class ServeEngine:
         host sees only the sampled ids — no per-token logits round-trip.
         The python body runs once per signature, so counting its calls
         counts compiles (``stats["decode_compiles"]``)."""
+        if self.paged and self._shards > 1:
+            return self._make_decode_step_sharded()
         if self.paged:
             spec = self._view_spec
 
@@ -288,6 +370,49 @@ class ServeEngine:
                 return self._sampler(logits, key), logits, new_pool
 
         return _fused
+
+    def _make_decode_step_sharded(self):
+        """The fused step under ``shard_map`` (DESIGN.md §15): every device
+        decodes its own slots against its LOCAL storage partition — page
+        tables arrive global and are localized by subtracting the shard's
+        row offset — then samples on device and all-gathers the token ids
+        (and logits, for ``last_logits``) back to global slot order. That
+        gather is the step's only cross-shard communication; pool state
+        goes in sharded and comes out sharded, untouched by any collective."""
+        from jax import lax
+        from jax.sharding import PartitionSpec as P
+
+        from repro.distributed.compat import shard_map
+        from repro.serve.pool import PagedCacheView
+
+        spec = self._view_spec
+        mesh = self.mesh
+        names = tuple(mesh.axis_names)
+        el = names[0] if len(names) == 1 else names
+        rows = self.slot_cache.shard_blocks + 1  # per-shard rows incl. trash
+
+        def _body(params, toks, pool, pt, write_pos, key):
+            self._decode_compiles += 1  # trace-time only
+            idx = None  # flattened shard index, row-major over mesh axes
+            for name in names:
+                ax = lax.axis_index(name)
+                idx = ax if idx is None else idx * mesh.shape[name] + ax
+            view = PagedCacheView(pool, pt - idx * rows, write_pos, spec)
+            logits, out = self.model.decode_step(params, toks, view)
+            tok = self._sampler(logits, key)
+            # the ONE cross-shard sync of the step: host-visible outputs
+            # gather to global slot order (innermost mesh axis first keeps
+            # the flattened-shard-index contiguity of the slot layout)
+            for name in reversed(names):
+                tok = lax.all_gather(tok, name, axis=0, tiled=True)
+                logits = lax.all_gather(logits, name, axis=0, tiled=True)
+            return tok, logits, out.pool
+
+        return shard_map(
+            _body, mesh=mesh,
+            in_specs=(P(), P(el), self._pool_specs, P(el), P(el), P()),
+            out_specs=(P(), P(), self._pool_specs),
+            check_rep=False)  # no replication rule exists for pallas_call
 
     def _next_key(self) -> jax.Array:
         """Per-sampling-call PRNG key: split exactly like the legacy host
@@ -328,12 +453,17 @@ class ServeEngine:
             raise ValueError(f"prompt length {prompt.size} exceeds engine "
                              f"capacity {self.capacity}")
         holds: list = []
+        holds_shard = None
         if self.paged and self._has_paged:
-            if self._prefix_enabled and prompt.size + max_new_tokens <= self.capacity:
+            if (self._prefix_enabled and self._shards == 1
+                    and prompt.size + max_new_tokens <= self.capacity):
                 # enqueue-time matching: walk the content index now so the
                 # blocks stay alive (refcounted) while the request queues;
-                # _can_admit re-walks for blocks registered since
-                holds = self._acquire_prefix(prompt)
+                # _can_admit re-walks for blocks registered since. Sharded
+                # pools skip this — the target shard is unknown until a slot
+                # is in hand, so matching happens at the admission gate
+                holds = self._acquire_prefix(self.alloc, prompt)
+                holds_shard = 0
             # Feasibility is ALWAYS the full-prompt worst case: prefix hits
             # only help admission (suffix-sized stake), never become
             # load-bearing — a dropped hold (deadline, deadlock fallback)
@@ -353,7 +483,8 @@ class ServeEngine:
         self.sched.submit(ServeRequest(
             rid=rid, prompt=prompt, max_new_tokens=max_new_tokens,
             eos_id=eos_id, deadline_s=deadline_s, on_token=on_token,
-            submit_t=time.time(), prefix_blocks=holds))
+            submit_t=time.time(), prefix_blocks=holds,
+            prefix_shard=holds_shard))
         return rid
 
     # ------------------------------------------------------------------
@@ -388,11 +519,21 @@ class ServeEngine:
         prefixes directly raise admitted slots."""
         if not self._has_paged:
             return True
+        # the scheduler admits into the lowest free slot, so the head of the
+        # preview list IS the slot this request gets on a True — which pins
+        # the shard whose allocator must stake (and match) it
+        shard = self._shard_of(self._free_preview[0])
         if (self._prefix_enabled and self._match_on_admit
                 and len(req.prompt) + req.max_new_tokens <= self.capacity):
+            if (req.prefix_blocks and req.prefix_shard is not None
+                    and req.prefix_shard != shard):
+                # holds from an earlier gate attempt reference another
+                # shard's blocks — useless for this slot, hand them back
+                self._drop_prefix_holds(req)
+            req.prefix_shard = shard
             req.prefix_blocks = self._acquire_prefix(
-                req.prompt, held=req.prefix_blocks,
-                margin=self._pending_pages)
+                self._allocs[shard], req.prompt, held=req.prefix_blocks,
+                margin=self._pending_pages[shard])
         if req.prefix_blocks:
             offset, slen = self._split_point(req)
             if offset + self._bucket(slen) > self.capacity:
@@ -400,9 +541,10 @@ class ServeEngine:
                 # rare — take the cold path instead of corrupting rows
                 self._drop_prefix_holds(req)
         need = self._suffix_need(req)
-        if self.alloc.available() - self._pending_pages < need:
+        if self._allocs[shard].available() - self._pending_pages[shard] < need:
             return False
-        self._pending_pages += need
+        self._pending_pages[shard] += need
+        self._free_preview.pop(0)
         return True
 
     def _stake_pages(self, req: ServeRequest, slot: int, bucket: int) -> np.ndarray:
@@ -410,32 +552,36 @@ class ServeEngine:
         slot's page table at them. Returns the mapped ids (for the prefill
         scatter)."""
         self._lengths[slot] = len(req.prompt)
+        alloc = self._alloc_for(slot)
         if not self._has_paged:
-            self._leases[slot] = self.alloc.reserve(0)
+            self._leases[slot] = alloc.reserve(0)
             return np.zeros(0, np.int32)
         bucket_pages = self._pages(bucket)
-        lease = self.alloc.reserve(
+        lease = alloc.reserve(
             self._need_pages(len(req.prompt), req.max_new_tokens))
-        ids = self.alloc.map(lease, bucket_pages)
+        # allocator ids are shard-local; page tables carry GLOBAL rows
+        ids = (np.asarray(alloc.map(lease, bucket_pages), np.int32)
+               + self._goff(self._shard_of(slot)))
         self._leases[slot] = lease
         self._pt[slot, :bucket_pages] = ids
         self._pt_dirty = True
-        return np.asarray(ids, np.int32)
+        return ids
 
     # ------------------------------------------------------------------
     # prefix cache (DESIGN.md §4 "Prefix cache")
     # ------------------------------------------------------------------
-    def _acquire_prefix(self, tokens, held=(), margin: int = 0) -> list:
-        """Walk the prompt's chain hashes against the content index, taking
-        one reference per hit block (monotone: stops at the first miss).
-        ``held`` = blocks this request already references (extension re-walk
-        at admission); ``margin`` = pages committed to earlier admissions in
-        the same cycle, which a cached-free resurrection must not eat."""
+    def _acquire_prefix(self, alloc, tokens, held=(), margin: int = 0) -> list:
+        """Walk the prompt's chain hashes against ``alloc``'s content index
+        (the target shard's), taking one reference per hit block (monotone:
+        stops at the first miss). ``held`` = blocks this request already
+        references (extension re-walk at admission); ``margin`` = pages
+        committed to earlier admissions in the same cycle, which a
+        cached-free resurrection must not eat."""
         hashes = chain_hashes(tokens, self.block)
         out = list(held)
         for h in hashes[len(out):]:
-            b = self.alloc.lookup(h)
-            if b is None or not self.alloc.acquire(b, margin=margin):
+            b = alloc.lookup(h)
+            if b is None or not alloc.acquire(b, margin=margin):
                 break
             out.append(b)
         return out
@@ -444,8 +590,10 @@ class ServeEngine:
         """Release the refcounts a queued request holds from matching —
         the scheduler's on_drop hook (deadline expiry), submit's rejection
         path, and the deadlock fallback all route here."""
+        alloc = self._allocs[req.prefix_shard
+                             if req.prefix_shard is not None else 0]
         for b in req.prefix_blocks:
-            self.alloc.release_ref(b)
+            alloc.release_ref(b)
         req.prefix_blocks = []
 
     def _kept_shared(self, req: ServeRequest) -> int:
@@ -488,8 +636,10 @@ class ServeEngine:
             return
         if len(req.prompt) + req.max_new_tokens > self.capacity:
             return
+        alloc = self._alloc_for(slot)
+        goff = self._goff(self._shard_of(slot))
         for i, h in enumerate(chain_hashes(req.prompt, self.block)):
-            self.alloc.register(int(self._pt[slot, i]), h)
+            alloc.register(int(self._pt[slot, i]) - goff, h)
 
     def _stake_suffix(self, req: ServeRequest, slot: int) -> None:
         """Map an admitted prefix-hit's pages: shared blocks become logical
@@ -502,21 +652,25 @@ class ServeEngine:
         < offset, and all writes happen at >= offset."""
         length = len(req.prompt)
         kept = self._kept_shared(req)
-        lease = self.alloc.reserve(self._suffix_need(req))
-        shared = req.prefix_blocks[:kept]
+        alloc = self._alloc_for(slot)
+        goff = self._goff(self._shard_of(slot))
+        lease = alloc.reserve(self._suffix_need(req))
+        shared = req.prefix_blocks[:kept]    # shard-local ids
         cow_src = req.prefix_blocks[kept:]   # [] or [the full-coverage block]
-        self.alloc.adopt(lease, shared)
-        priv = self.alloc.map(lease, self._pages(length) - kept)
+        alloc.adopt(lease, shared)
+        priv = alloc.map(lease, self._pages(length) - kept)
         self._leases[slot] = lease
         self._lengths[slot] = length
-        self._pt[slot, :kept] = shared
-        self._pt[slot, kept:self._pages(length)] = priv
+        self._pt[slot, :kept] = [b + goff for b in shared]
+        self._pt[slot, kept:self._pages(length)] = [b + goff for b in priv]
         self._pt_dirty = True
         if cow_src:
+            # the device copy addresses global storage rows (plain jit)
             self.pool = self._copy_block(
-                self.pool, jnp.asarray(cow_src[0], jnp.int32),
-                jnp.asarray(priv[0], jnp.int32))
-            self.alloc.release_ref(cow_src[0])  # the hold on the source
+                self.pool, jnp.asarray(cow_src[0] + goff, jnp.int32),
+                jnp.asarray(priv[0] + goff, jnp.int32))
+            self._repin()
+            alloc.release_ref(cow_src[0])  # the hold on the source
             self._cow_copies += 1
         req.prefix_blocks = []  # references now live in the lease
 
@@ -541,6 +695,7 @@ class ServeEngine:
         logits, self.pool = self._prefill_suffix(
             self.params, batch, self.pool, jnp.asarray([slot]),
             jnp.asarray(self._pt[slot:slot + 1]))
+        self._repin()
         self._buckets_used.add(("sfx", bucket, 1))
         toks = np.asarray(self._sample_dev(logits, self._next_key()))
         now = time.time()
@@ -567,25 +722,27 @@ class ServeEngine:
         hashes = chain_hashes(tokens, self.block)
         if not hashes:
             return 0
-        if any(self.alloc.lookup(h) is None for h in hashes):
+        if not any(all(a.lookup(h) is not None for h in hashes)
+                   for a in self._allocs):
             rid = self.submit(tokens, max_new_tokens=1)
             while any(r.rid == rid for r in self.sched.waiting) or any(
                     r.rid == rid for r in self.sched.running.values()):
                 self.step()
         pinned = 0
-        for h in hashes:
-            b = self.alloc.lookup(h)
-            if b is None or not self.alloc.acquire(b):
-                break
-            self._pins.append(b)
-            pinned += 1
+        for shard, alloc in enumerate(self._allocs):
+            for h in hashes:
+                b = alloc.lookup(h)
+                if b is None or not alloc.acquire(b):
+                    break
+                self._pins.append((shard, b))
+                pinned += 1
         return pinned
 
     def release_pins(self) -> None:
         """Drop every pin reference (pinned blocks become cached-free —
         still indexed, reclaimable under pressure)."""
-        for b in self._pins:
-            self.alloc.release_ref(b)
+        for shard, b in self._pins:
+            self._allocs[shard].release_ref(b)
         self._pins.clear()
 
     # ------------------------------------------------------------------
@@ -633,12 +790,13 @@ class ServeEngine:
         # leave NO state behind for the slot's next tenant (FlareState.m_max
         # must return to -inf etc.); a single-lane reset compiles once
         self.pool = self._reset_slot(self.pool, jnp.asarray([slot]))
+        self._repin()
         self._cur_tok[slot] = 0
         if self.paged:
             # pages (mapped + unused reservation) back to the free list; the
-            # page-table row goes back to the trash sink
-            self.alloc.release(self._leases.pop(slot))
-            self._pt[slot] = self.slot_cache.trash
+            # page-table row goes back to the slot's shard's trash sink
+            self._alloc_for(slot).release(self._leases.pop(slot))
+            self._pt[slot] = self._trash_of(slot)
             self._pt_dirty = True
             self._lengths[slot] = 0
             if self._sanitize:
@@ -665,6 +823,7 @@ class ServeEngine:
         else:
             logits, self.pool = self._prefill_into(
                 self.params, batch, self.pool, slots_arr)
+        self._repin()
         self._buckets_used.add((bucket, g))
         if g > 1:
             self.stats["coalesced_prefills"] += 1
@@ -687,7 +846,8 @@ class ServeEngine:
                 self._cur_tok[slot] = int(toks[i])
 
     def _admit(self) -> None:
-        self._pending_pages = 0
+        self._pending_pages = [0] * self._shards
+        self._free_preview = list(self.sched.free)
         self._match_on_admit = True
         now = time.time()
         admitted = self.sched.admit(
@@ -702,7 +862,8 @@ class ServeEngine:
             # disabled so the gate can't re-acquire what it just dropped.
             for r in self.sched.waiting:
                 self._drop_prefix_holds(r)
-            self._pending_pages = 0
+            self._pending_pages = [0] * self._shards
+            self._free_preview = list(self.sched.free)
             self._match_on_admit = False
             try:
                 admitted = self.sched.admit(now, can_admit=self._can_admit)
@@ -743,20 +904,24 @@ class ServeEngine:
         ``REPRO_SANITIZE=1``."""
         if not self.paged:
             return
-        refs: dict = {}
-        for lease in self._leases.values():
+        refs: list = [dict() for _ in self._allocs]
+        for slot, lease in self._leases.items():
+            r = refs[self._shard_of(slot)]
             for b in lease.mapped:
-                refs[b] = refs.get(b, 0) + 1
-        for b in self._pins:
-            refs[b] = refs.get(b, 0) + 1
+                r[b] = r.get(b, 0) + 1
+        for shard, b in self._pins:
+            refs[shard][b] = refs[shard].get(b, 0) + 1
         for req in self.sched.waiting:
+            r = refs[req.prefix_shard if req.prefix_shard is not None else 0]
             for b in (req.prefix_blocks or []):
-                refs[b] = refs.get(b, 0) + 1
-        self.alloc.check_invariants(external_refs=refs)
-        trash = self.slot_cache.trash
+                r[b] = r.get(b, 0) + 1
+        for alloc, r in zip(self._allocs, refs):
+            alloc.check_invariants(external_refs=r)
         for slot in range(self._pt.shape[0]):
+            goff = self._goff(self._shard_of(slot))
+            trash = self._trash_of(slot)
             lease = self._leases.get(slot)
-            mapped = list(lease.mapped) if lease is not None else []
+            mapped = [b + goff for b in lease.mapped] if lease is not None else []
             row = self._pt[slot]
             got = [int(x) for x in row[:len(mapped)]]
             if got != mapped:
@@ -785,12 +950,13 @@ class ServeEngine:
             self.last_logits = logits
             return toks_out
         if self._has_paged:
-            trash = self.slot_cache.trash
             for slot in self.sched.running:
                 p = int(self._lengths[slot] % self.capacity)
                 j = p // self.block
-                if self._pt[slot, j] == trash:
-                    self._pt[slot, j] = self.alloc.append(self._leases[slot])
+                if self._pt[slot, j] == self._trash_of(slot):
+                    self._pt[slot, j] = (
+                        self._goff(self._shard_of(slot))
+                        + self._alloc_for(slot).append(self._leases[slot]))
                     self._pt_dirty = True
             if self._pt_dirty:
                 self._pt_dev = jnp.asarray(self._pt)
@@ -895,6 +1061,7 @@ class ServeEngine:
                 compiled += 1
             trash = jnp.asarray(self.slot_cache.trash, jnp.int32)
             self.pool = self._copy_block(self.pool, trash, trash)
+            self._repin()
             compiled += 1
         dc_before = self._decode_compiles
         toks = jnp.zeros((self.slots, 1), jnp.int32)
@@ -923,11 +1090,16 @@ class ServeEngine:
             / max(1, self.stats["decode_steps"]))
         self.stats.update(self.sched.stats())
         if self.paged:
-            self.stats["pool"] = self.alloc.stats()  # incl. pages_appended
+            pool_stats = self.alloc.stats()  # incl. pages_appended
+            if self._shards > 1:
+                pool_stats = {k: sum(a.stats()[k] for a in self._allocs)
+                              for k in pool_stats}
+            self.stats["pool"] = pool_stats
             self.stats["prefix_hit_rate"] = (
                 self._prefix_hit_tokens / self._prefix_prompt_tokens
                 if self._prefix_prompt_tokens else 0.0)
-            self.stats["shared_pages"] = self.alloc.shared_blocks()
+            self.stats["shared_pages"] = sum(a.shared_blocks()
+                                             for a in self._allocs)
             self.stats["cow_copies"] = self._cow_copies
             self.stats["pinned_pages"] = len(self._pins)
 

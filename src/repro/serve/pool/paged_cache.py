@@ -20,6 +20,17 @@ Pool capacity is therefore sized in **tokens** (``pool_tokens``), not
 slots; admission stakes pages through ``blocks.BlockAllocator`` and the
 engine appends pages as decode crosses block boundaries.
 
+With ``shards > 1`` (DESIGN.md §15 "Mesh-parallel execution") storage is
+laid out as ``shards`` contiguous partitions of ``shard_blocks + 1`` rows
+each — every partition carrying its OWN trash sink row — so sharding dim 0
+over the mesh hands each device exactly its partition, local trash
+included. Page tables store GLOBAL row ids (``shard * (shard_blocks+1) +
+local``); the engine's shard_map'd decode body subtracts the shard's
+offset to localize them, while host-side prefill / copy-on-write keep
+addressing the one global array under plain jit. ``shards=1`` is
+bit-identical to the historical layout (ids, trash row, storage shape all
+unchanged).
+
 ``init`` runs under ``jax.jit`` so the dense token-leaf allocations inside
 ``init_fn`` are dead-code-eliminated — the pool never materializes a
 slots x capacity cache.
@@ -51,13 +62,20 @@ class PagedModelCache:
     ``init_caches(batch, capacity)`` pytree."""
 
     def __init__(self, init_fn: Callable[[int, int], Any], capacity: int, *,
-                 pool_tokens: int, block: int = 16, quant: str = "none"):
+                 pool_tokens: int, block: int = 16, quant: str = "none",
+                 shards: int = 1):
         if pool_tokens < block:
             raise ValueError(f"pool_tokens={pool_tokens} < block={block}")
         self.init_fn = init_fn
         self.capacity = capacity
         self.block = block
         self.num_blocks = pool_tokens // block
+        if shards < 1 or self.num_blocks % shards:
+            raise ValueError(
+                f"pool of {self.num_blocks} blocks not divisible into "
+                f"{shards} shards — pick pool_tokens so blocks % shards == 0")
+        self.shards = shards
+        self.shard_blocks = self.num_blocks // shards
         self.quant = get_quant(quant)
         self.max_pages = -(-capacity // block)
 
@@ -97,10 +115,24 @@ class PagedModelCache:
     # ------------------------------------------------------------------
     @property
     def trash(self) -> int:
-        return self.num_blocks  # storage row reserved as the write sink
+        # the LAST storage row — always a valid write sink for global
+        # (plain-jit) ops; per-shard code must use trash_row(shard) so idle
+        # writes land in the executing shard's local partition
+        return self.num_blocks + self.shards - 1
+
+    def trash_row(self, shard: int) -> int:
+        """Global row id of ``shard``'s trash sink."""
+        return shard * (self.shard_blocks + 1) + self.shard_blocks
+
+    def global_offset(self, shard: int) -> int:
+        """Global row id of ``shard``'s first block (local id 0)."""
+        return shard * (self.shard_blocks + 1)
 
     def allocator(self) -> BlockAllocator:
-        return BlockAllocator(self.num_blocks, self.block)
+        """One PER-SHARD allocator (ids are shard-local; the engine keeps
+        one per shard and offsets ids by :meth:`global_offset` before they
+        enter a page table). ``shards=1``: the historical global allocator."""
+        return BlockAllocator(self.shard_blocks, self.block)
 
     def _dense_leaves(self, slots: int):
         leaves = jax.tree.leaves(self.init_fn(slots, self.capacity))
@@ -110,12 +142,27 @@ class PagedModelCache:
     def init(self, slots: int) -> dict:
         dense = jax.jit(self._dense_leaves, static_argnums=0)(slots)
         data, scale = [], []
+        rows = self.num_blocks + self.shards  # shards x (shard_blocks + 1)
         for meta, rest in zip(self.spec.paged, self._rest_shapes):
             sd = self.quant.storage_dtype(meta.dtype)
-            data.append(jnp.zeros((self.num_blocks + 1, self.block) + rest, sd))
-            scale.append(jnp.ones((self.num_blocks + 1, self.block) + rest[:-1],
+            data.append(jnp.zeros((rows, self.block) + rest, sd))
+            scale.append(jnp.ones((rows, self.block) + rest[:-1],
                                   jnp.float32) if self.quant.scaled else None)
         return {"dense": dense, "data": tuple(data), "scale": tuple(scale)}
+
+    def pool_pspecs(self, axes) -> dict:
+        """PartitionSpec prefix tree for slot-sharding a pool over mesh
+        ``axes`` (flattened — every axis shards the slot/storage dim): block
+        storage and scales shard dim 0 (each device gets its partition incl.
+        trash row), dense leaves shard their slot axis, slot-independent
+        dense leaves replicate. Shaped to be passed directly as a shard_map
+        in/out spec for the pool dict."""
+        from jax.sharding import PartitionSpec as P
+
+        el = axes[0] if len(axes) == 1 else tuple(axes)
+        dense = tuple(P() if ax is None else P(*((None,) * ax), el)
+                      for ax in self.spec.dense_slot_axes)
+        return {"dense": dense, "data": P(el), "scale": P(el)}
 
     # ------------------------------------------------------------------
     # jit-side ops the engine compiles
@@ -257,9 +304,11 @@ class PagedModelCache:
         return self.num_blocks * self.block * self.token_bytes_paged()
 
     def describe(self) -> str:
+        shard = (f"{self.shards} shards x {self.shard_blocks} blocks, "
+                 if self.shards > 1 else "")
         return (f"paged-pool[{len(self.spec.paged)} paged + "
                 f"{len(self.spec.dense_slot_axes)} dense leaves, "
-                f"{self.num_blocks}x{self.block}-token blocks (+trash), "
+                f"{self.num_blocks}x{self.block}-token blocks (+trash), {shard}"
                 f"quant={self.quant.name}, "
                 f"{self.pool_bytes() / 1e6:.2f} MB storage, "
                 f"{self.token_bytes_paged():.0f} B/token vs "

@@ -41,6 +41,10 @@ class ServeRequest:
     # slot's lease at admission, and `SlotScheduler.on_drop` must release
     # them when the request is dropped while still waiting
     prefix_blocks: List[int] = dataclasses.field(default_factory=list)
+    # which pool shard `prefix_blocks` reference (slot-sharded pools match
+    # at the admission gate against the target slot's shard; ids are
+    # shard-local there). None until matched; always 0 on unsharded pools
+    prefix_shard: Optional[int] = None
     admit_t: Optional[float] = None
     first_token_t: Optional[float] = None
     finish_t: Optional[float] = None

@@ -1,4 +1,6 @@
 import os
+import subprocess
+import sys
 
 # Tests must see the single real CPU device (the 512-device fleet is ONLY for
 # the dry-run). Keep XLA quiet and deterministic.
@@ -6,6 +8,34 @@ os.environ.setdefault("JAX_PLATFORMS", "cpu")
 
 import numpy as np
 import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def run_in_cpu_mesh(code: str, devices: int = 4, timeout: int = 600) -> str:
+    """Run `code` in a subprocess seeing `devices` virtual CPU devices.
+
+    The forced-host-platform flag must be set before jax initializes, and the
+    main test process must keep seeing exactly one device — hence the
+    subprocess. The snippet must print "PASS" on success; stdout is returned
+    for extra assertions. This is how sharded-parity tests (DESIGN.md §15)
+    run in plain single-CPU CI.
+    """
+    env = dict(os.environ)
+    env["JAX_PLATFORMS"] = "cpu"
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={devices}"
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    out = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                         text=True, env=env, cwd=REPO, timeout=timeout)
+    assert out.returncode == 0 and "PASS" in out.stdout, \
+        (out.stdout + out.stderr)[-3000:]
+    return out.stdout
+
+
+@pytest.fixture
+def cpu_mesh_run():
+    """Fixture handle on :func:`run_in_cpu_mesh` for mesh-parity tests."""
+    return run_in_cpu_mesh
 
 
 @pytest.fixture

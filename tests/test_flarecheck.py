@@ -238,6 +238,48 @@ def admit(self, now):
     assert lint_source(src, ENGINE) == []
 
 
+def test_rt005_mesh_built_inside_jitted_shard_map():
+    src = """
+@jax.jit
+def step(pool, pt):
+    mesh = Mesh(jax.devices(), ("data",))
+    return shard_map(body, mesh=mesh, in_specs=specs, out_specs=specs)(pool, pt)
+"""
+    fs = lint_source(src, ENGINE)
+    assert rules_of(fs) == ["RT005"] and fs[0].line == 5
+
+
+def test_rt005_partial_jit_with_make_mesh():
+    src = """
+@functools.partial(jax.jit, static_argnames=("n",))
+def run(x, n):
+    mesh = make_mesh((n,), ("data",))
+    return lax.psum(x, "data")
+"""
+    path = "src/repro/backends/packed_shard.py"
+    assert rules_of(lint_source(src, path)) == ["RT005"]
+
+
+def test_rt005_mesh_from_build_time_ok():
+    # the engine idiom: mesh built at __init__, shard_map closes over it in a
+    # NON-jitted builder — clean
+    src = """
+def _make_decode_step_sharded(self):
+    mesh = self.mesh
+    return shard_map(self._body, mesh=mesh, in_specs=specs, out_specs=specs)
+"""
+    assert lint_source(src, ENGINE) == []
+
+
+def test_rt005_jitted_collective_without_mesh_ctor_ok():
+    src = """
+@jax.jit
+def step(x):
+    return lax.psum(x, "data")
+"""
+    assert lint_source(src, ENGINE) == []
+
+
 # ---------------------------------------------------------------------------
 # pallas-contract (PC*)
 # ---------------------------------------------------------------------------
