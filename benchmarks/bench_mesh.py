@@ -109,6 +109,16 @@ def _child() -> None:
     shard, dt, outs = drain(mesh)
     s = shard.stats
     toks = s["tokens_generated"]
+    # registry snapshot (DESIGN.md §16): the sharded engine's per-shard
+    # allocators share metric handles, so these read as pool-wide sums
+    msnap = shard.metrics.snapshot()
+    mstep = msnap.get("engine.decode_step_s", {"count": 0, "sum": 0.0})
+    out["serve_metrics"] = {
+        "m_admitted": msnap.get("sched.admitted", 0),
+        "m_tokens_out": msnap.get("engine.tokens_out", 0),
+        "m_pages_mapped": msnap.get("pool.pages_mapped", 0),
+        "m_step_ms_mean": mstep["sum"] / max(mstep["count"], 1) * 1e3,
+    }
     out["serve"] = {
         "arch": arch,
         "us_per_tok": dt * 1e6 / max(toks, 1),
@@ -154,12 +164,17 @@ def run() -> None:
     if not sv["match"]:
         raise RuntimeError("sharded greedy decode diverged from the "
                            "single-device pool")
+    mm = data["serve_metrics"]
     emit(f"serve/{sv['arch']}/sharded_tok_s", sv["us_per_tok"],
          f"tok_s={sv['tok_s']:.1f};single_tok_s={sv['single_tok_s']:.1f};"
          f"mesh={sv['mesh']};shards={sv['shards']};"
          f"host_syncs_per_step={sv['host_syncs']:.1f};"
          f"compiles={sv['compiles']};requests={sv['requests']};"
-         f"greedy_match={sv['match']};prefix_hit_rate=0.000",
+         f"greedy_match={sv['match']};prefix_hit_rate=0.000;"
+         f"m_admitted={mm['m_admitted']:.0f};"
+         f"m_tokens_out={mm['m_tokens_out']:.0f};"
+         f"m_pages_mapped={mm['m_pages_mapped']:.0f};"
+         f"m_step_ms_mean={mm['m_step_ms_mean']:.2f}",
          backend=sv["decode_backend"])
 
 

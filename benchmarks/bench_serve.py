@@ -20,8 +20,18 @@ Enters the tracked perf trajectory (BENCH_<tag>.json) with rows per arch:
                               prefix_hit_rate, COW copies and peak shared
                               pages.
 
+    serve/<arch>/obs_overhead the observability tax (DESIGN.md §16): the
+                              SAME seeded drain with the span tracer + a
+                              live registry on vs the default engine,
+                              min-of-reps both ways; derived carries both
+                              tok/s, the overhead percentage and the span
+                              count. The tracer only re-labels stamps the
+                              engine already takes, so this stays ~0%.
+
 Every row's derived string records ``prefix_hit_rate`` (0.0 for rows that
-don't enable the cache) so BENCH jsons diff cleanly across PRs.
+don't enable the cache) so BENCH jsons diff cleanly across PRs, and the
+engine rows append a registry snapshot (``m_*`` fields) — the counters a
+production scrape would see for the same run.
 
 Workload: a seeded mixed-length batch of requests with staggered
 max_new_tokens (exactly the shape that made the old wave engine waste
@@ -62,6 +72,20 @@ TEMPLATE_LEN = 40
 PREFIX_MAX_NEW = 4
 
 
+def _metric_fields(engine: ServeEngine) -> str:
+    """Registry-backed derived fields (DESIGN.md §16): every engine carries
+    a live private MetricsRegistry by default, so the rows can snapshot the
+    same series a production scrape would."""
+    m = engine.metrics.snapshot()
+    step = m.get("engine.decode_step_s", {"count": 0, "sum": 0.0})
+    pf = m.get("engine.prefill_s", {"count": 0, "sum": 0.0})
+    return (f"m_admitted={m.get('sched.admitted', 0):.0f};"
+            f"m_tokens_out={m.get('engine.tokens_out', 0):.0f};"
+            f"m_cow={m.get('engine.cow_copies', 0):.0f};"
+            f"m_step_ms_mean={step['sum'] / max(step['count'], 1) * 1e3:.2f};"
+            f"m_prefill_ms_mean={pf['sum'] / max(pf['count'], 1) * 1e3:.2f}")
+
+
 def _bench_arch(arch: str, requests: int) -> None:
     cfg = get_smoke_config(arch)
     model = get_model(cfg, seq_len_hint=CAPACITY)
@@ -88,7 +112,8 @@ def _bench_arch(arch: str, requests: int) -> None:
          f"util={s['slot_utilization']:.2f};steps={s['decode_steps']};"
          f"slots={SLOTS};requests={requests};"
          f"compiles={s['decode_compiles']};"
-         f"prefix_hit_rate={s['prefix_hit_rate']:.3f}",
+         f"prefix_hit_rate={s['prefix_hit_rate']:.3f};"
+         + _metric_fields(engine),
          backend=s["mixer_backend"] or s["decode_backend"])
 
 
@@ -156,7 +181,8 @@ def _bench_paged_arch(arch: str, requests: int) -> None:
          f"coalesced={s['coalesced_prefills']};"
          f"hbm_rd_B_per_step={paged_rd:.0f};dense_rd_B_per_step={dense_rd:.0f};"
          f"util={s['slot_utilization']:.2f};compiles={s['decode_compiles']};"
-         f"prefix_hit_rate={s['prefix_hit_rate']:.3f}",
+         f"prefix_hit_rate={s['prefix_hit_rate']:.3f};"
+         + _metric_fields(paged),
          backend=s["mixer_backend"] or s["decode_backend"])
 
 
@@ -221,8 +247,49 @@ def _bench_prefix_arch(arch: str, users: int) -> None:
          f"users={users};templates={PREFIX_TEMPLATES};"
          f"template_len={TEMPLATE_LEN};slots={PREFIX_SLOTS};"
          f"pool_tokens={pool_tokens};quant={PAGED_QUANT};block={PAGED_BLOCK};"
-         f"compiles={s['decode_compiles']}",
+         f"compiles={s['decode_compiles']};"
+         + _metric_fields(warm),
          backend=s["mixer_backend"] or s["decode_backend"])
+
+
+def _bench_obs_overhead(arch: str, requests: int, reps: int) -> None:
+    """Tracing off vs on, same seeded drain, min-of-reps: the span tracer
+    and a live registry record only from stamps/integers the engine already
+    holds, so the overhead must stay in the noise (<~2%)."""
+    from repro.obs.metrics import MetricsRegistry
+    from repro.obs.trace import Tracer
+
+    cfg = get_smoke_config(arch)
+    model = get_model(cfg, seq_len_hint=CAPACITY)
+    params = model.init(jax.random.PRNGKey(0))
+
+    def run_mode(tracer):
+        eng = ServeEngine(model, params, capacity=CAPACITY, slots=SLOTS,
+                          seed=0, tracer=tracer,
+                          metrics=MetricsRegistry() if tracer else None)
+        eng.warmup(max_prompt_len=16)
+        best, toks = float("inf"), 0
+        for _ in range(reps):
+            _workload(eng, cfg.vocab, requests)
+            t0 = time.time()
+            while eng.step():
+                pass
+            best = min(best, time.time() - t0)
+        toks = eng.stats["tokens_generated"] // reps
+        return eng, best, toks
+
+    base, base_dt, base_toks = run_mode(None)
+    tr = Tracer()
+    traced, dt, toks = run_mode(tr)
+    overhead = (dt - base_dt) / base_dt * 100.0
+    emit(f"serve/{arch}/obs_overhead", dt * 1e6 / max(toks, 1),
+         f"tok_s={toks / dt:.1f};base_tok_s={base_toks / base_dt:.1f};"
+         f"overhead_pct={overhead:.2f};spans={len(tr.events)};"
+         f"reps={reps};requests={requests};"
+         f"host_syncs_per_step={traced.stats['host_syncs_per_step']:.1f};"
+         f"prefix_hit_rate=0.000;" + _metric_fields(traced),
+         backend=traced.stats["mixer_backend"]
+         or traced.stats["decode_backend"])
 
 
 def run() -> None:
@@ -234,6 +301,8 @@ def run() -> None:
         _bench_paged_arch(arch, 6 if smoke else REQUESTS)
     for arch in ARCHS_PAGED[:1] if smoke else ARCHS_PAGED:
         _bench_prefix_arch(arch, 8 if smoke else PREFIX_USERS)
+    _bench_obs_overhead("qwen2_1_5b", 4 if smoke else REQUESTS,
+                        reps=2 if smoke else 3)
 
 
 if __name__ == "__main__":

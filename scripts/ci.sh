@@ -114,6 +114,46 @@ echo "$out" | grep -q "decode backend: paged(" \
 echo "$out" | grep -q "host syncs/step: 0.0" \
     || { echo "ERROR: fused decode step is syncing logits to the host"; exit 1; }
 
+echo "== observability smoke (DESIGN.md §16) =="
+# the fused-decode config again, now with span tracing + a metrics dump:
+# tracing is host-side relabeling of stamps the engine already takes, so
+# the zero-host-sync invariant must survive it — and the exported trace
+# must be schema-valid Chrome trace-event JSON covering every lifecycle
+# phase with monotonic timestamps
+obs_dir="$(mktemp -d)"
+trap 'rm -rf "$obs_dir"' EXIT
+obs_out="$(python -m repro.launch.serve --arch qwen2_1_5b --smoke --requests 6 \
+    --max-new 12 --capacity 32 --slots 4 --pool-tokens 96 --block-size 8 \
+    --decode-backend paged --warmup --max-decode-compiles 0 \
+    --trace-out "$obs_dir/trace.json" --metrics-out "$obs_dir/metrics.json")"
+echo "$obs_out" | tail -n 6
+echo "$obs_out" | grep -q "host syncs/step: 0.0" \
+    || { echo "ERROR: tracing broke the fused decode step's zero-sync invariant"; exit 1; }
+OBS_DIR="$obs_dir" python - <<'PY'
+import json, os
+
+d = os.environ["OBS_DIR"]
+doc = json.load(open(os.path.join(d, "trace.json")))
+evs = doc["traceEvents"]
+assert isinstance(evs, list) and evs, "empty traceEvents"
+data = [e for e in evs if e.get("ph") != "M"]
+for e in data:
+    assert {"name", "ph", "ts", "pid", "tid"} <= set(e), f"malformed event {e}"
+    assert e["ph"] in ("X", "i"), f"unexpected phase {e['ph']!r}"
+ts = [e["ts"] for e in data]
+assert ts == sorted(ts) and ts[0] == 0.0, "trace ts not monotonic/rebased"
+names = {e["name"] for e in data}
+from repro.obs.trace import PHASES
+missing = [p for p in PHASES if p not in names]
+assert not missing, f"lifecycle phases missing from trace: {missing}"
+metrics = json.load(open(os.path.join(d, "metrics.json")))["metrics"]
+for series in ("sched.admitted", "engine.tokens_out", "engine.decode_step_s"):
+    assert series in metrics, f"metrics dump missing {series}"
+assert metrics["sched.admitted"] == 6.0, metrics["sched.admitted"]
+print(f"obs smoke OK ({len(data)} spans, {len(metrics)} metric series, "
+      "all lifecycle phases present)")
+PY
+
 echo "== prefix-cache smoke (DESIGN.md §4 'Prefix cache') =="
 # two waves sharing a 40-token template on a tiny pool: the cached+pinned
 # run must (a) report a nonzero hit rate, (b) exercise at least one

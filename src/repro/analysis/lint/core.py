@@ -105,7 +105,7 @@ def register_checker(cls: type) -> type:
 def _ensure_registered() -> None:
     # import-for-effect: each checker module registers its class
     from repro.analysis.lint import (  # noqa: F401
-        dtype_staging, host_sync, pallas_contract, retrace)
+        dtype_staging, host_sync, obs_boundary, pallas_contract, retrace)
 
 
 def all_checkers() -> List[Checker]:

@@ -1,0 +1,136 @@
+"""obs-boundary checker (OB001): observability stays at host boundaries.
+
+PR10's observability layer (DESIGN.md §16) records spans and metrics from
+timestamps and host integers the engine/trainer already hold. The boundary
+rule that keeps it zero-cost on the compiled paths: **clock reads and
+metrics mutation never execute inside traced code or a decode hot scope.**
+A ``time.perf_counter()`` inside a jitted function runs once at trace time
+and then lies forever; a ``Counter.inc()`` there silently counts traces,
+not events (the ``decode_compiles`` lesson — its registry gauge is set in
+``_refresh_stats``, never in the traced body). ``jax.named_scope`` is the
+ONE obs construct legal inside traced code (trace-time metadata only).
+
+Traced/hot scopes:
+
+  - functions decorated with ``jit``/``pjit`` (``@jax.jit``, ``@jit``,
+    ``@functools.partial(jax.jit, ...)``) — and everything nested inside
+  - Pallas kernel bodies: ``kernels/`` functions named ``*_kernel`` or
+    taking ``*_ref`` parameters
+  - the HS hot scopes (``serve/sampling.py`` file-wide, ``serve/engine.py``
+    decode-path functions, ``models/*`` decode entries) — per-step host
+    wrappers where obs bookkeeping must be delegated out (the engine's
+    ``_note_step`` pattern), keeping the hot body auditable
+
+Flagged inside those:
+
+  OB001  ``time.monotonic()`` / ``time.perf_counter()`` calls, and metrics
+         mutation — any ``.inc(...)``/``.observe(...)`` method call, or any
+         call rooted at a registry name (``REGISTRY``, ``NULL_REGISTRY``,
+         ``*.metrics``, ``registry``).
+
+``time.time`` is deliberately NOT flagged: the engine's hot wrappers stamp
+their stats (and therefore their spans) with the two ``time.time`` reads
+they have always taken — the rule bans *new* clock flavors and counter
+traffic, not the pre-existing timebase.
+"""
+from __future__ import annotations
+
+import ast
+import re
+from typing import List, Optional
+
+from repro.analysis.lint.core import Checker, Finding, Rule, register_checker
+from repro.analysis.lint.host_sync import HostSyncChecker, _dotted
+
+OB001 = Rule("OB001", "clock read or metrics mutation inside a traced "
+                      "function / kernel / decode hot scope")
+
+_CLOCKS = {"time.monotonic", "time.perf_counter", "monotonic", "perf_counter"}
+_MUTATORS = {"inc", "observe"}
+_REG_ROOT = re.compile(r"(^|\.)(REGISTRY|NULL_REGISTRY|metrics|registry)\.")
+_KERNEL_FILE = re.compile(r"(^|/)kernels/[^/]+\.py$")
+
+
+def _is_jitted(fn: ast.AST) -> bool:
+    """``@jax.jit`` / ``@jit`` / ``@pjit`` / ``@partial(jax.jit, ...)``."""
+    for dec in getattr(fn, "decorator_list", []):
+        target = dec.func if isinstance(dec, ast.Call) else dec
+        d = _dotted(target) or ""
+        if d.rsplit(".", 1)[-1] in ("jit", "pjit"):
+            return True
+        if isinstance(dec, ast.Call) and d.rsplit(".", 1)[-1] == "partial" \
+                and dec.args:
+            inner = _dotted(dec.args[0]) or ""
+            if inner.rsplit(".", 1)[-1] in ("jit", "pjit"):
+                return True
+    return False
+
+
+def _is_kernel(path: str, fn: ast.AST) -> bool:
+    if not _KERNEL_FILE.search(path):
+        return False
+    if fn.name.endswith("_kernel"):
+        return True
+    args = fn.args
+    return any(a.arg.endswith("_ref")
+               for a in args.posonlyargs + args.args)
+
+
+@register_checker
+class ObsBoundaryChecker(Checker):
+    rules = (OB001,)
+
+    def applies(self, path: str) -> bool:
+        # jitted functions can live anywhere — scope by scope kind, not path
+        return path.endswith(".py")
+
+    @staticmethod
+    def _scope_kind(path: str, fn: ast.AST) -> Optional[str]:
+        if _is_jitted(fn):
+            return "jitted function"
+        if _is_kernel(path, fn):
+            return "Pallas kernel"
+        if HostSyncChecker._hot_fn(path, fn.name):
+            return "decode hot scope"
+        return None
+
+    def check(self, path: str, tree: ast.Module,
+              source: str) -> List[Finding]:
+        lines = source.splitlines()
+        findings: List[Finding] = []
+        seen: set = set()  # nested traced defs, already covered by a parent
+
+        for fn in ast.walk(tree):
+            if not isinstance(fn, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                continue
+            if id(fn) in seen:
+                continue
+            kind = self._scope_kind(path, fn)
+            if kind is None:
+                continue
+            # the whole subtree is traced — nested defs (closures the jit
+            # traces through) inherit the scope; mark them visited so they
+            # are not re-reported
+            for node in ast.walk(fn):
+                if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)) \
+                        and node is not fn:
+                    seen.add(id(node))
+                if not isinstance(node, ast.Call):
+                    continue
+                d = _dotted(node.func) or ""
+                if d in _CLOCKS:
+                    findings.append(self.finding(
+                        OB001.id, path, node,
+                        f"{d}() inside a {kind} ({fn.name}) runs at trace "
+                        "time / per step — record obs from stamps the host "
+                        "boundary already holds", lines))
+                elif isinstance(node.func, ast.Attribute) and (
+                        node.func.attr in _MUTATORS
+                        or _REG_ROOT.search(d)):
+                    findings.append(self.finding(
+                        OB001.id, path, node,
+                        f"metrics mutation ({d or node.func.attr}) inside a "
+                        f"{kind} ({fn.name}) counts traces, not events — "
+                        "move it to a host boundary (e.g. _refresh_stats / "
+                        "a _note_* helper)", lines))
+        return findings

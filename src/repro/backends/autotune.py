@@ -43,9 +43,20 @@ import time
 from typing import Callable, Iterable, Optional
 
 from repro.core.dispatch import MixerShape
+from repro.obs.metrics import REGISTRY
 
 _MEM_CACHE: dict = {}  # path -> {key: entry} mirror of the JSON file
 _FORCE: list = []  # policy-scoped overrides of the REPRO_AUTOTUNE env var
+
+# cache-effectiveness counters (DESIGN.md §16) on the process-wide registry:
+# plan resolution is module-level (no engine/trainer to hand a registry in),
+# and one process shares one on-disk cache anyway
+_M_HITS = REGISTRY.counter(
+    "autotune.cache_hits", "best_params lookups served from the JSON cache")
+_M_MISSES = REGISTRY.counter(
+    "autotune.cache_misses", "lookups that fell through to measure/heuristic")
+_M_MEASURED = REGISTRY.counter(
+    "autotune.measured", "candidate sweeps actually timed on device")
 
 
 def cache_path() -> str:
@@ -217,6 +228,7 @@ def measure_tiles(shape: MixerShape, dtype, device: str,
     """Time each candidate with ``runner(params) -> seconds`` and cache the
     winner. Returns the winning param dict (also annotated with timings)."""
     cands = list(candidates) if candidates is not None else _CANDIDATES[kind](shape)
+    _M_MEASURED.inc()
     timed = []
     for params in cands:
         try:
@@ -252,9 +264,12 @@ def best_params(shape: MixerShape, dtype, device: str, *, kind: str = "tiles",
         entry = cached.get(key)
         if entry is not None:
             try:
-                return {p: int(entry[p]) for p in _KIND_PARAMS[kind]}
+                out = {p: int(entry[p]) for p in _KIND_PARAMS[kind]}
+                _M_HITS.inc()
+                return out
             except (KeyError, TypeError, ValueError):
                 pass  # corrupt/partial entry — fall through
+    _M_MISSES.inc()
     if (autotune if autotune is not None else autotune_enabled()) and runner is not None:
         best = measure_tiles(shape, dtype, device, runner, kind=kind, mesh=mesh)
         return {p: best[p] for p in _KIND_PARAMS[kind]}

@@ -56,10 +56,14 @@ def _plan(shape: MixerShape, mesh, dtype) -> MixerPlan:
 
 def _run(plan: MixerPlan, q, k, v):
     from repro.kernels.flare_packed import flare_mixer_packed
+    from repro.obs import scope
 
-    return flare_mixer_packed(q, k, v,
-                              pack=plan.params.get("pack"),
-                              block_n=plan.params.get("block_n", 256))
+    # named_scope: the packed-kernel launch carries this label in XLA
+    # profiles (trace-time metadata only — OB001-legal inside jit)
+    with scope("kernels.flare_packed"):
+        return flare_mixer_packed(q, k, v,
+                                  pack=plan.params.get("pack"),
+                                  block_n=plan.params.get("block_n", 256))
 
 
 register(MixerBackend(

@@ -49,6 +49,7 @@ def pack_pages(x, block: int):
 
 def _run(plan: MixerPlan, q, k, v):
     from repro.kernels.paged_attention import paged_attention
+    from repro.obs import scope
 
     b, h, n, d = k.shape
     m = q.shape[1]
@@ -57,7 +58,10 @@ def _run(plan: MixerPlan, q, k, v):
     vp, _ = pack_pages(v, block)
     lengths = jnp.full((b,), n, jnp.int32)
     qb = jnp.broadcast_to(q.astype(k.dtype)[None], (b, h, m, d))
-    z = paged_attention(qb, kp, vp, pt, lengths, scale=1.0)  # encode [B,H,M,D]
+    # named_scope: the kernel launch shows up under this label in XLA
+    # profiles (trace-time metadata only — OB001-legal inside jit)
+    with scope("kernels.paged_attention"):
+        z = paged_attention(qb, kp, vp, pt, lengths, scale=1.0)  # [B,H,M,D]
     # decode: per-token softmax over the M latents (paper Fig. 3, 2nd SDPA)
     s = jnp.einsum("hmd,bhnd->bhmn", q.astype(jnp.float32),
                    k.astype(jnp.float32))

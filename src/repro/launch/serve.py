@@ -90,6 +90,14 @@ def main():
                          "0 is the exact template). 0 = independent prompts. "
                          "Workload construction ignores --prefix-cache, so "
                          "cached and cold runs see identical prompts")
+    ap.add_argument("--trace-out", default=None, metavar="PATH",
+                    help="record request-lifecycle spans and write a "
+                         "Chrome-trace-event JSON (Perfetto-loadable) here "
+                         "(DESIGN.md §16); host-side only — host syncs/step "
+                         "stays 0.0 and greedy outputs are unchanged")
+    ap.add_argument("--metrics-out", default=None, metavar="PATH",
+                    help="dump the engine's metrics registry (counters/"
+                         "gauges/histograms) as JSON here at exit")
     args = ap.parse_args()
 
     cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
@@ -122,6 +130,11 @@ def main():
                 raise SystemExit(f"--mesh {args.mesh}: at most 2 axes")
             mesh = make_host_mesh(shape, axes)
 
+    tracer = None
+    if args.trace_out:
+        from repro.obs.trace import Tracer
+
+        tracer = Tracer()
     engine = ServeEngine(model, params, capacity=args.capacity, slots=args.slots,
                          temperature=args.temperature, seed=args.seed,
                          pool_tokens=args.pool_tokens, kv_quant=args.kv_quant,
@@ -129,7 +142,8 @@ def main():
                          coalesce_prefill=args.coalesce,
                          sample=args.sample, top_k=args.top_k,
                          decode_backend=args.decode_backend,
-                         prefix_cache=args.prefix_cache, mesh=mesh)
+                         prefix_cache=args.prefix_cache, mesh=mesh,
+                         tracer=tracer)
     print(f"engine: {args.slots} slots, capacity {args.capacity}, "
           f"{engine.stats['cache']}")
     if mesh is not None:
@@ -227,6 +241,13 @@ def main():
               f"shared_pages={s['shared_pages']} "
               f"cow_copies={s['cow_copies']} "
               f"pinned={s.get('pinned_pages', 0)}")
+    if args.trace_out:
+        n = engine.tracer.write(args.trace_out)
+        print(f"trace: {n} spans -> {args.trace_out}")
+    if args.metrics_out:
+        engine.metrics.dump_json(args.metrics_out)
+        print(f"metrics: {len(engine.metrics.snapshot())} series -> "
+              f"{args.metrics_out}")
 
 
 if __name__ == "__main__":

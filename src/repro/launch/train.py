@@ -34,6 +34,11 @@ def main():
                     help="FLARE mixer backend preference, comma-separated "
                          "(e.g. 'packed,sdpa', or 'packed_shard' with "
                          "--mesh for the shard_map'd kernel); default: auto")
+    ap.add_argument("--trace-out", default=None, metavar="PATH",
+                    help="record per-step train spans (data vs device step "
+                         "breakdown) and write Chrome-trace-event JSON here")
+    ap.add_argument("--metrics-out", default=None, metavar="PATH",
+                    help="dump the trainer's metrics registry as JSON here")
     args = ap.parse_args()
     logging.basicConfig(level=logging.INFO, format="%(asctime)s %(message)s")
 
@@ -60,7 +65,13 @@ def main():
     tcfg = TrainConfig(steps=args.steps, learning_rate=args.lr,
                        checkpoint_every=max(10, args.steps // 4),
                        checkpoint_dir=args.ckpt, log_every=10)
-    trainer = Trainer(model, tcfg, mesh, num_microbatches=args.microbatches)
+    tracer = None
+    if args.trace_out:
+        from repro.obs.trace import Tracer
+
+        tracer = Tracer()
+    trainer = Trainer(model, tcfg, mesh, num_microbatches=args.microbatches,
+                      tracer=tracer)
 
     if cfg.family == "pde":
         batch_fn = lambda step: darcy_batch(0, step % 16, args.global_batch,
@@ -84,6 +95,13 @@ def main():
     if history:
         print(f"\n{cfg.name}: {len(history)} steps, "
               f"loss {history[0]['loss']:.4f} -> {history[-1]['loss']:.4f}")
+    if args.trace_out:
+        n = trainer.tracer.write(args.trace_out)
+        print(f"trace: {n} spans -> {args.trace_out}")
+    if args.metrics_out:
+        trainer.metrics.dump_json(args.metrics_out)
+        print(f"metrics: {len(trainer.metrics.snapshot())} series -> "
+              f"{args.metrics_out}")
 
 
 if __name__ == "__main__":

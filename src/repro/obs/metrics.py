@@ -1,0 +1,252 @@
+"""Process-wide metrics registry (DESIGN.md §16 "Observability").
+
+Stdlib-only and jax-free on purpose: the registry is mutated from the same
+pure-host bookkeeping paths as ``serve.scheduler`` and ``serve.pool.blocks``
+(admission, retirement, page mapping), and must import in the linter's
+no-accelerator environment too.
+
+Three metric kinds, Prometheus-shaped:
+
+  - :class:`Counter` — monotonically increasing float (``inc``).
+  - :class:`Gauge` — last-write-wins float (``set``).
+  - :class:`Histogram` — fixed, immutable bucket bounds chosen at creation
+    (``observe``); cumulative counts + sum + count. Fixed buckets keep
+    ``observe`` O(log B) with zero allocation — safe for per-admission /
+    per-retirement paths.
+
+Contracts the serving stack leans on:
+
+  - **Near-zero cost when disabled**: every mutator first checks the owning
+    registry's ``enabled`` flag (one attribute read + branch) and returns.
+    ``NULL_REGISTRY`` (module-level, permanently disabled) is the default
+    sink for components built without observability, so instrumented code
+    never branches on ``if registry is not None``.
+  - **Explicitly thread-safe**: mutators take a per-metric lock. The
+    host-side allocator/scheduler paths are single-threaded today, but the
+    registry is process-wide and bench harnesses/warmup threads may share
+    it — correctness must not depend on the GIL's increment atomicity.
+  - **Get-or-create**: ``registry.counter(name)`` returns the same object
+    for the same name (re-registration with a different kind raises), so
+    per-shard allocators binding the same registry naturally sum into one
+    counter.
+  - **Host boundaries only**: registry mutation inside a traced scope
+    (jitted function, Pallas kernel, decode hot path) is a flarecheck
+    OB001 finding — it would either burn trace-time-only side effects or
+    force a host sync. Instrument where the numbers already live on host.
+
+Dumps: :meth:`MetricsRegistry.snapshot` (plain dict), ``dump_text`` (one
+``name value`` line per metric, histograms expanded), ``dump_json``.
+"""
+from __future__ import annotations
+
+import bisect
+import json
+import threading
+from typing import Dict, Iterable, Optional, Tuple
+
+__all__ = [
+    "Counter", "Gauge", "Histogram", "MetricsRegistry",
+    "DEFAULT_BUCKETS", "NULL_REGISTRY", "REGISTRY", "get_registry",
+]
+
+# seconds-scale latency buckets: 50us .. 30s, roughly x4 per step — wide
+# enough for CPU-interpret kernels and TPU steps alike
+DEFAULT_BUCKETS: Tuple[float, ...] = (
+    5e-5, 2e-4, 1e-3, 4e-3, 1.6e-2, 6.4e-2, 0.25, 1.0, 4.0, 30.0)
+
+
+class _Metric:
+    """Shared base: name, help text, a lock, and the owning registry's
+    enabled flag (checked first in every mutator)."""
+
+    kind = "metric"
+
+    def __init__(self, registry: "MetricsRegistry", name: str, help: str = ""):
+        self._reg = registry
+        self.name = name
+        self.help = help
+        self._lock = threading.Lock()
+
+
+class Counter(_Metric):
+    kind = "counter"
+
+    def __init__(self, registry, name, help=""):
+        super().__init__(registry, name, help)
+        self._value = 0.0
+
+    def inc(self, n: float = 1.0) -> None:
+        if not self._reg.enabled:
+            return
+        if n < 0:
+            raise ValueError(f"counter {self.name}: inc({n}) would decrease")
+        with self._lock:
+            self._value += n
+
+    @property
+    def value(self) -> float:
+        return self._value
+
+    def snapshot(self):
+        return self._value
+
+
+class Gauge(_Metric):
+    kind = "gauge"
+
+    def __init__(self, registry, name, help=""):
+        super().__init__(registry, name, help)
+        self._value = 0.0
+
+    def set(self, v: float) -> None:
+        if not self._reg.enabled:
+            return
+        with self._lock:
+            self._value = float(v)
+
+    @property
+    def value(self) -> float:
+        return self._value
+
+    def snapshot(self):
+        return self._value
+
+
+class Histogram(_Metric):
+    kind = "histogram"
+
+    def __init__(self, registry, name, help="",
+                 buckets: Iterable[float] = DEFAULT_BUCKETS):
+        super().__init__(registry, name, help)
+        bounds = tuple(float(b) for b in buckets)
+        if not bounds or list(bounds) != sorted(set(bounds)):
+            raise ValueError(
+                f"histogram {name}: bucket bounds must be non-empty, sorted "
+                f"and unique, got {bounds}")
+        self.bounds = bounds
+        # counts[i] = observations <= bounds[i]; counts[-1] = overflow (+inf)
+        self._counts = [0] * (len(bounds) + 1)
+        self._sum = 0.0
+        self._count = 0
+
+    def observe(self, v: float) -> None:
+        if not self._reg.enabled:
+            return
+        v = float(v)
+        i = bisect.bisect_left(self.bounds, v)
+        with self._lock:
+            self._counts[i] += 1
+            self._sum += v
+            self._count += 1
+
+    @property
+    def count(self) -> int:
+        return self._count
+
+    @property
+    def sum(self) -> float:
+        return self._sum
+
+    @property
+    def mean(self) -> float:
+        return self._sum / self._count if self._count else 0.0
+
+    def snapshot(self):
+        return {"count": self._count, "sum": self._sum,
+                "buckets": dict(zip([*map(str, self.bounds), "+inf"],
+                                    self._counts))}
+
+
+class MetricsRegistry:
+    """A namespace of metrics. Instantiable (the engine keeps one per
+    instance so concurrent engines/tests never cross-count); a process-wide
+    default lives at :data:`REGISTRY` for module-level producers (the
+    autotune cache)."""
+
+    def __init__(self, enabled: bool = True):
+        self.enabled = enabled
+        self._metrics: Dict[str, _Metric] = {}
+        self._lock = threading.Lock()
+
+    # -- lifecycle -------------------------------------------------------
+    def enable(self) -> None:
+        self.enabled = True
+
+    def disable(self) -> None:
+        self.enabled = False
+
+    def reset(self) -> None:
+        """Drop every metric (tests; a fresh bench repetition)."""
+        with self._lock:
+            self._metrics.clear()
+
+    # -- get-or-create ---------------------------------------------------
+    def _get(self, cls, name: str, help: str, **kw) -> _Metric:
+        with self._lock:
+            m = self._metrics.get(name)
+            if m is not None:
+                if not isinstance(m, cls):
+                    raise ValueError(
+                        f"metric {name!r} already registered as {m.kind}, "
+                        f"requested {cls.kind}")
+                return m
+            m = cls(self, name, help, **kw)
+            self._metrics[name] = m
+            return m
+
+    def counter(self, name: str, help: str = "") -> Counter:
+        return self._get(Counter, name, help)
+
+    def gauge(self, name: str, help: str = "") -> Gauge:
+        return self._get(Gauge, name, help)
+
+    def histogram(self, name: str, help: str = "",
+                  buckets: Iterable[float] = DEFAULT_BUCKETS) -> Histogram:
+        return self._get(Histogram, name, help, buckets=buckets)
+
+    def get(self, name: str) -> Optional[_Metric]:
+        return self._metrics.get(name)
+
+    # -- dumps -----------------------------------------------------------
+    def snapshot(self) -> dict:
+        """``{name: value}`` for counters/gauges, ``{name: {count, sum,
+        buckets}}`` for histograms, sorted by name."""
+        with self._lock:
+            items = sorted(self._metrics.items())
+        return {name: m.snapshot() for name, m in items}
+
+    def dump_text(self) -> str:
+        """One ``name value`` line per scalar metric; histograms expand to
+        ``name_count`` / ``name_sum`` / ``name_bucket{le=...}`` lines."""
+        lines = []
+        for name, m in sorted(self._metrics.items()):
+            if isinstance(m, Histogram):
+                snap = m.snapshot()
+                for le, c in snap["buckets"].items():
+                    lines.append(f"{name}_bucket{{le=\"{le}\"}} {c}")
+                lines.append(f"{name}_count {snap['count']}")
+                lines.append(f"{name}_sum {snap['sum']:.9g}")
+            else:
+                lines.append(f"{name} {m.snapshot():.9g}")
+        return "\n".join(lines) + ("\n" if lines else "")
+
+    def dump_json(self, path: Optional[str] = None) -> str:
+        """Snapshot as a JSON string; also written to ``path`` if given."""
+        payload = {"metrics": self.snapshot()}
+        text = json.dumps(payload, indent=1, sort_keys=True)
+        if path is not None:
+            with open(path, "w", encoding="utf-8") as f:
+                f.write(text + "\n")
+        return text
+
+
+#: permanently-disabled sink — the default for uninstrumented construction,
+#: so producers never branch on "is observability on".
+NULL_REGISTRY = MetricsRegistry(enabled=False)
+
+#: the process-wide default registry (module-level producers: autotune).
+REGISTRY = MetricsRegistry()
+
+
+def get_registry() -> MetricsRegistry:
+    return REGISTRY

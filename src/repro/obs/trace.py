@@ -1,0 +1,188 @@
+"""Request-lifecycle span tracing with Chrome-trace-event export
+(DESIGN.md §16 "Observability").
+
+Host-side only, stdlib-only, jax-free. The tracer records what the serving
+engine and trainer *already know* — the ``time.time()`` stamps and host
+integers their stats bookkeeping computes anyway — so tracing adds zero
+device work and zero host<->device syncs: the fused decode path's
+``host_syncs_per_step == 0`` invariant holds with tracing on (asserted by
+scripts/ci.sh), and greedy outputs stay bit-identical (pinned by
+tests/test_obs.py).
+
+Two event shapes:
+
+  - **complete spans** (:meth:`Tracer.complete`, Chrome ``ph="X"``): a
+    named interval with explicit start + duration. The engine passes the
+    ``t0``/``now`` pair it already measured for ``stats`` — no extra clock
+    reads on the decode path.
+  - **instants** (:meth:`Tracer.instant`, ``ph="i"``): point events —
+    enqueue, admit, retire, expire, prefix_hit, cow_copy.
+
+Tracks: ``tid`` is the engine slot for slot-resident events (prefill,
+decode, retire), ``TID_ENGINE`` (a dedicated track) for engine-wide events
+(enqueue, decode-step aggregates, warmup, train steps). Every event's
+``args`` carries the request id(s) involved, so a Perfetto query can stitch
+a request's full lifecycle across tracks.
+
+Export (:meth:`Tracer.to_chrome` / :meth:`Tracer.write`): the Chrome
+trace-event JSON object format — ``{"traceEvents": [...]}`` — loadable by
+Perfetto (ui.perfetto.dev) and ``chrome://tracing``. Timestamps are
+microseconds relative to the first recorded event, events sorted by time,
+so the exported stream is monotonic (the CI obs smoke asserts this).
+Correlation with XLA profiles: wrap the same boundaries in
+``repro.obs.annotate`` (``jax.profiler.TraceAnnotation``) and the engine
+span names line up with the host rows of a ``jax.profiler.trace`` capture.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import threading
+import time
+from typing import Dict, List, Optional
+
+__all__ = ["Span", "Tracer", "NULL_TRACER", "TID_ENGINE", "PHASES"]
+
+#: dedicated track for engine-wide (not slot-resident) events
+TID_ENGINE = 0
+
+#: the request-lifecycle phase names the engine emits — the CI obs smoke
+#: requires >= 1 event of each phase in an exported trace of a real run
+PHASES = ("enqueue", "admit", "prefill", "decode", "retire")
+
+
+@dataclasses.dataclass
+class Span:
+    name: str
+    ph: str               # "X" complete | "i" instant
+    ts: float             # seconds (time.time timebase — the engine's clock)
+    dur: float = 0.0      # seconds; 0 for instants
+    cat: str = "serve"
+    tid: int = TID_ENGINE
+    args: Optional[dict] = None
+
+
+class Tracer:
+    """Append-only span recorder. ``enabled=False`` (or :data:`NULL_TRACER`)
+    turns every record call into one attribute read + return — the same
+    near-zero disabled cost contract as the metrics registry."""
+
+    def __init__(self, enabled: bool = True):
+        self.enabled = enabled
+        self._events: List[Span] = []
+        self._tid_names: Dict[int, str] = {}
+        self._lock = threading.Lock()
+
+    # -- recording -------------------------------------------------------
+    def now(self) -> float:
+        """The tracer's clock — ``time.time()``, deliberately the same
+        timebase the engine/scheduler stamp requests with, so explicit-ts
+        records and tracer-clocked records interleave consistently."""
+        return time.time()
+
+    def complete(self, name: str, ts: float, dur: float, *,
+                 cat: str = "serve", tid: int = TID_ENGINE,
+                 args: Optional[dict] = None) -> None:
+        """Record a finished interval from timestamps the caller already
+        holds (seconds, ``time.time`` timebase)."""
+        if not self.enabled:
+            return
+        with self._lock:
+            self._events.append(Span(name, "X", ts, max(dur, 0.0),
+                                     cat=cat, tid=tid, args=args))
+
+    def instant(self, name: str, *, ts: Optional[float] = None,
+                cat: str = "serve", tid: int = TID_ENGINE,
+                args: Optional[dict] = None) -> None:
+        if not self.enabled:
+            return
+        if ts is None:
+            ts = time.time()
+        with self._lock:
+            self._events.append(Span(name, "i", ts, 0.0,
+                                     cat=cat, tid=tid, args=args))
+
+    def span(self, name: str, *, cat: str = "serve", tid: int = TID_ENGINE,
+             args: Optional[dict] = None):
+        """Context manager measuring a host-side interval with the tracer's
+        own clock (for callers without pre-existing stamps, e.g. the train
+        loop)."""
+        return _SpanCtx(self, name, cat, tid, args)
+
+    def set_track_name(self, tid: int, name: str) -> None:
+        if self.enabled:
+            self._tid_names[tid] = name
+
+    # -- introspection ---------------------------------------------------
+    @property
+    def events(self) -> List[Span]:
+        return list(self._events)
+
+    def by_phase(self) -> Dict[str, List[Span]]:
+        out: Dict[str, List[Span]] = {}
+        for e in self._events:
+            out.setdefault(e.name, []).append(e)
+        return out
+
+    def clear(self) -> None:
+        with self._lock:
+            self._events.clear()
+
+    # -- export ----------------------------------------------------------
+    def to_chrome(self, pid: int = 1,
+                  process_name: str = "repro") -> dict:
+        """Chrome trace-event JSON (object format). Events are sorted by
+        timestamp and rebased to the first event (microseconds), so the
+        exported ``ts`` sequence is monotonically non-decreasing."""
+        with self._lock:
+            events = sorted(self._events, key=lambda e: (e.ts, e.name))
+        t0 = events[0].ts if events else 0.0
+        out: List[dict] = [{
+            "name": "process_name", "ph": "M", "pid": pid, "tid": 0,
+            "args": {"name": process_name},
+        }]
+        for tid, name in sorted(self._tid_names.items()):
+            out.append({"name": "thread_name", "ph": "M", "pid": pid,
+                        "tid": tid, "args": {"name": name}})
+        for e in events:
+            rec = {"name": e.name, "cat": e.cat, "ph": e.ph,
+                   "ts": (e.ts - t0) * 1e6, "pid": pid, "tid": e.tid}
+            if e.ph == "X":
+                rec["dur"] = e.dur * 1e6
+            else:
+                rec["s"] = "t"  # instant scope: thread
+            if e.args:
+                rec["args"] = e.args
+            out.append(rec)
+        return {"traceEvents": out, "displayTimeUnit": "ms"}
+
+    def write(self, path: str, **kw) -> int:
+        """Export to ``path``; returns the number of recorded events."""
+        with open(path, "w", encoding="utf-8") as f:
+            json.dump(self.to_chrome(**kw), f, indent=1)
+            f.write("\n")
+        return len(self._events)
+
+
+class _SpanCtx:
+    __slots__ = ("_tr", "_name", "_cat", "_tid", "_args", "_t0")
+
+    def __init__(self, tr, name, cat, tid, args):
+        self._tr, self._name = tr, name
+        self._cat, self._tid, self._args = cat, tid, args
+        self._t0 = 0.0
+
+    def __enter__(self):
+        self._t0 = time.time()
+        return self
+
+    def __exit__(self, *exc):
+        if self._tr.enabled:
+            now = time.time()
+            self._tr.complete(self._name, self._t0, now - self._t0,
+                              cat=self._cat, tid=self._tid, args=self._args)
+        return False
+
+
+#: permanently-disabled tracer — the default for uninstrumented construction.
+NULL_TRACER = Tracer(enabled=False)

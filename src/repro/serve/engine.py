@@ -66,6 +66,15 @@ outputs are bit-identical to a solo run of each request on the same engine
 geometry — for the paged pool too, storage permitting (``kv_quant="none"``;
 int8/fp8 trade exactness for ~2-4x more resident tokens) — pinned by
 tests/test_serve_continuous.py and tests/test_paged_pool.py.
+
+Observability (DESIGN.md §16): the engine owns a per-engine
+:class:`repro.obs.metrics.MetricsRegistry` (shared with its scheduler and
+allocators) and an optional :class:`repro.obs.trace.Tracer`. Every span is
+recorded host-side from timestamps the stats bookkeeping already takes —
+enqueue/admit/retire instants, prefill launches, per-N decode-step
+aggregates — so tracing adds no device work and no host<->device syncs:
+``host_syncs_per_step`` stays 0.0 and greedy outputs stay bit-identical
+with tracing on (pinned by tests/test_obs.py, asserted by scripts/ci.sh).
 """
 from __future__ import annotations
 
@@ -79,6 +88,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.obs import annotate, scope
+from repro.obs.metrics import MetricsRegistry
+from repro.obs.trace import NULL_TRACER, TID_ENGINE
 from repro.serve.cache import ModelSlotCache
 from repro.serve.pool.blocks import chain_hashes
 from repro.serve.scheduler import ServeRequest, SlotScheduler
@@ -99,10 +111,17 @@ class ServeEngine:
                  block_size: int = 16, coalesce_prefill: bool = False,
                  sample: str = "greedy", top_k: int = 0,
                  decode_backend: str = "auto", prefix_cache: bool = False,
-                 mesh=None):
+                 mesh=None, tracer=None, metrics=None):
         if decode_backend not in ("auto", "paged", "gather"):
             raise ValueError(f"unknown decode_backend {decode_backend!r} "
                              "(auto | paged | gather)")
+        # observability (DESIGN.md §16): a per-engine registry (shared with
+        # the scheduler and the allocators, so their counters land in one
+        # place) and an optional span tracer; the defaults — a live private
+        # registry, the disabled null tracer — keep uninstrumented engines
+        # paying one enabled-check per event and nothing else
+        self.metrics = metrics if metrics is not None else MetricsRegistry()
+        self.tracer = tracer if tracer is not None else NULL_TRACER
         self.mesh = mesh
         self._shards = 1
         if mesh is not None:
@@ -174,6 +193,10 @@ class ServeEngine:
             # historical single global allocator, bit-for-bit)
             self._allocs = [self.slot_cache.allocator()
                             for _ in range(self._shards)]
+            for a in self._allocs:
+                # shards share the metric handles (get-or-create), so the
+                # counters read as pool-wide sums
+                a.bind_metrics(self.metrics)
             self.alloc = self._allocs[0]
             self.pool = self.slot_cache.init(slots)
             self._pool_specs = None
@@ -227,12 +250,13 @@ class ServeEngine:
         self._decode_compiles = 0
         self._decode_step = jax.jit(self._make_decode_step())
 
-        self.sched = SlotScheduler(slots)
+        self.sched = SlotScheduler(slots, registry=self.metrics)
         self._match_on_admit = True
-        if self._prefix_enabled:
-            # queued requests can hold prefix refcounts from enqueue-time
-            # matching; a deadline drop must hand them back (satellite fix)
-            self.sched.on_drop = self._drop_prefix_holds
+        # queued requests can hold prefix refcounts from enqueue-time
+        # matching; a deadline drop must hand them back — and every drop
+        # is an "expire" trace instant. _on_drop guards the prefix part,
+        # so the always-installed hook is safe for dense engines too.
+        self.sched.on_drop = self._on_drop
         self._pins: list = []            # blocks held alive by pin_prefix
         # REPRO_SANITIZE=1: cross-check allocator/page-table/lease state at
         # every admission and retirement (DESIGN.md §14) — debug tax, off by
@@ -241,6 +265,35 @@ class ServeEngine:
         self._prefix_hit_tokens = 0      # prompt tokens NOT re-prefilled
         self._prefix_prompt_tokens = 0   # prompt tokens admitted (hit + cold)
         self._cow_copies = 0
+        m = self.metrics
+        self._m_prefill_s = m.histogram(
+            "engine.prefill_s", "wall seconds per prefill launch")
+        self._m_step_s = m.histogram(
+            "engine.decode_step_s", "wall seconds per fused decode step")
+        self._m_tokens_out = m.counter(
+            "engine.tokens_out", "generated tokens on retired requests")
+        self._m_cow = m.counter(
+            "engine.cow_copies", "copy-on-write block copies")
+        self._m_hit_tokens = m.counter(
+            "engine.prefix_hit_tokens",
+            "prompt tokens served from the prefix cache")
+        self._m_g_prefill_compiles = m.gauge(
+            "engine.prefill_compiles",
+            "distinct (bucket, lanes) prefill program variants traced")
+        self._m_g_decode_compiles = m.gauge(
+            "engine.decode_compiles", "fused decode-step traces")
+        # decode-step trace aggregation window: ONE "decode" span per
+        # _trace_every steps (flushed early at pool idle), never per step —
+        # the tracer's cost on the hot loop stays O(1/N) appends and the
+        # span stream stays readable at long generations
+        self._trace_every = 16
+        self._win_t0: Optional[float] = None
+        self._win_end = 0.0
+        self._win_steps = 0
+        self._win_toks = 0
+        self.tracer.set_track_name(TID_ENGINE, "engine")
+        for s in range(slots):
+            self.tracer.set_track_name(s + 1, f"slot{s}")
         self._next_rid = 0
         self._cur_tok = np.zeros(slots, np.int32)  # next token fed per slot
         self._buckets_used: set = set()            # (bucket, lanes) traced
@@ -359,15 +412,24 @@ class ServeEngine:
                 from repro.serve.pool import PagedCacheView
 
                 self._decode_compiles += 1  # trace-time only
+                # named_scope is trace-time jaxpr/HLO metadata (the ONE obs
+                # construct legal inside jitted code — OB001): XLA profiles
+                # show the decode/sample split under these names
                 view = PagedCacheView(pool, pt, write_pos, spec)
-                logits, out = self.model.decode_step(params, toks, view)
-                return self._sampler(logits, key), logits, out.pool
+                with scope("serve.decode"):
+                    logits, out = self.model.decode_step(params, toks, view)
+                with scope("serve.sample"):
+                    tok = self._sampler(logits, key)
+                return tok, logits, out.pool
         else:
 
             def _fused(params, toks, pool, key):
                 self._decode_compiles += 1  # trace-time only
-                logits, new_pool = self.model.decode_step(params, toks, pool)
-                return self._sampler(logits, key), logits, new_pool
+                with scope("serve.decode"):
+                    logits, new_pool = self.model.decode_step(params, toks, pool)
+                with scope("serve.sample"):
+                    tok = self._sampler(logits, key)
+                return tok, logits, new_pool
 
         return _fused
 
@@ -398,8 +460,10 @@ class ServeEngine:
                 ax = lax.axis_index(name)
                 idx = ax if idx is None else idx * mesh.shape[name] + ax
             view = PagedCacheView(pool, pt - idx * rows, write_pos, spec)
-            logits, out = self.model.decode_step(params, toks, view)
-            tok = self._sampler(logits, key)
+            with scope("serve.decode"):
+                logits, out = self.model.decode_step(params, toks, view)
+            with scope("serve.sample"):
+                tok = self._sampler(logits, key)
             # the ONE cross-shard sync of the step: host-visible outputs
             # gather to global slot order (innermost mesh axis first keeps
             # the flattened-shard-index contiguity of the slot layout)
@@ -454,6 +518,7 @@ class ServeEngine:
                              f"capacity {self.capacity}")
         holds: list = []
         holds_shard = None
+        walk = None
         if self.paged and self._has_paged:
             if (self._prefix_enabled and self._shards == 1
                     and prompt.size + max_new_tokens <= self.capacity):
@@ -462,7 +527,10 @@ class ServeEngine:
                 # _can_admit re-walks for blocks registered since. Sharded
                 # pools skip this — the target shard is unknown until a slot
                 # is in hand, so matching happens at the admission gate
+                w0 = time.time() if self.tracer.enabled else 0.0
                 holds = self._acquire_prefix(self.alloc, prompt)
+                if self.tracer.enabled:
+                    walk = (w0, time.time() - w0)
                 holds_shard = 0
             # Feasibility is ALWAYS the full-prompt worst case: prefix hits
             # only help admission (suffix-sized stake), never become
@@ -480,11 +548,20 @@ class ServeEngine:
                     "lower max_new_tokens")
         rid = self._next_rid
         self._next_rid += 1
+        now = time.time()
         self.sched.submit(ServeRequest(
             rid=rid, prompt=prompt, max_new_tokens=max_new_tokens,
             eos_id=eos_id, deadline_s=deadline_s, on_token=on_token,
-            submit_t=time.time(), prefix_blocks=holds,
+            submit_t=now, prefix_blocks=holds,
             prefix_shard=holds_shard))
+        if self.tracer.enabled:
+            if walk is not None:
+                self.tracer.complete(
+                    "prefix_walk", walk[0], walk[1],
+                    args={"rid": rid, "hit_blocks": len(holds)})
+            self.tracer.instant("enqueue", ts=now,
+                                args={"rid": rid,
+                                      "prompt_len": int(prompt.size)})
         return rid
 
     # ------------------------------------------------------------------
@@ -596,6 +673,16 @@ class ServeEngine:
             alloc.release_ref(b)
         req.prefix_blocks = []
 
+    def _on_drop(self, req: ServeRequest) -> None:
+        """Scheduler drop hook (deadline expiry while still queued): hand
+        back any enqueue-time prefix holds, then mark the expiry on the
+        trace. Installed unconditionally — the prefix part is guarded, so
+        dense/unpaged engines (no ``_allocs``) never touch allocator state."""
+        if req.prefix_blocks:
+            self._drop_prefix_holds(req)
+        self.tracer.instant("expire", ts=req.finish_t,
+                            args={"rid": req.rid})
+
     def _kept_shared(self, req: ServeRequest) -> int:
         """How many of the request's hit blocks stay SHARED in its page
         table. Full coverage (the whole prompt is hit full blocks) keeps
@@ -672,6 +759,9 @@ class ServeEngine:
             self._repin()
             alloc.release_ref(cow_src[0])  # the hold on the source
             self._cow_copies += 1
+            self._m_cow.inc()
+            self.tracer.instant("cow_copy", tid=slot + 1,
+                                args={"rid": req.rid})
         req.prefix_blocks = []  # references now live in the lease
 
     def _prefill_suffix_one(self, req: ServeRequest, slot: int) -> None:
@@ -685,6 +775,7 @@ class ServeEngine:
         t0 = time.time()
         self._stake_suffix(req, slot)
         self._prefix_hit_tokens += offset
+        self._m_hit_tokens.inc(offset)
         self._prefix_prompt_tokens += len(req.prompt)
         bucket = self._bucket(slen)
         tokens = np.zeros((1, bucket), np.int32)
@@ -692,14 +783,23 @@ class ServeEngine:
         batch = {"tokens": jnp.asarray(tokens),
                  "lengths": jnp.asarray([slen], jnp.int32),
                  "offsets": jnp.asarray([offset], jnp.int32)}
-        logits, self.pool = self._prefill_suffix(
-            self.params, batch, self.pool, jnp.asarray([slot]),
-            jnp.asarray(self._pt[slot:slot + 1]))
+        with annotate(f"serve/prefill_sfx_b{bucket}"):
+            logits, self.pool = self._prefill_suffix(
+                self.params, batch, self.pool, jnp.asarray([slot]),
+                jnp.asarray(self._pt[slot:slot + 1]))
         self._repin()
         self._buckets_used.add(("sfx", bucket, 1))
         toks = np.asarray(self._sample_dev(logits, self._next_key()))
         now = time.time()
         self.stats["prefill_s"] += now - t0
+        self._m_prefill_s.observe(now - t0)
+        if self.tracer.enabled:
+            self.tracer.instant("prefix_hit", ts=t0, tid=slot + 1,
+                                args={"rid": req.rid, "hit_tokens": offset})
+            self.tracer.complete(
+                "prefill", t0, now - t0, tid=slot + 1,
+                args={"rid": req.rid, "kind": "suffix", "bucket": bucket,
+                      "offset": offset})
         self.stats["requests"] += 1
         self._register_blocks(req, slot)
         if self._emit(req, int(toks[0]), now):
@@ -786,7 +886,10 @@ class ServeEngine:
         return token == req.eos_id or len(req.tokens) >= req.max_new_tokens
 
     def _retire(self, slot: int, now: float) -> None:
-        self.sched.retire(slot, now)
+        req = self.sched.retire(slot, now)
+        self._m_tokens_out.inc(len(req.tokens))
+        self.tracer.instant("retire", ts=now, tid=slot + 1,
+                            args={"rid": req.rid, "tokens": len(req.tokens)})
         # leave NO state behind for the slot's next tenant (FlareState.m_max
         # must return to -inf etc.); a single-lane reset compiles once
         self.pool = self._reset_slot(self.pool, jnp.asarray([slot]))
@@ -818,11 +921,14 @@ class ServeEngine:
         if self.paged:
             bids = np.stack([self._stake_pages(req, slot, bucket)
                              for req, slot in group])
-            logits, self.pool = self._prefill_into(
-                self.params, batch, self.pool, slots_arr, jnp.asarray(bids))
+            with annotate(f"serve/prefill_b{bucket}x{g}"):
+                logits, self.pool = self._prefill_into(
+                    self.params, batch, self.pool, slots_arr,
+                    jnp.asarray(bids))
         else:
-            logits, self.pool = self._prefill_into(
-                self.params, batch, self.pool, slots_arr)
+            with annotate(f"serve/prefill_b{bucket}x{g}"):
+                logits, self.pool = self._prefill_into(
+                    self.params, batch, self.pool, slots_arr)
         self._repin()
         self._buckets_used.add((bucket, g))
         if g > 1:
@@ -832,6 +938,12 @@ class ServeEngine:
         toks = np.asarray(self._sample_dev(logits, self._next_key()))
         now = time.time()
         self.stats["prefill_s"] += now - t0
+        self._m_prefill_s.observe(now - t0)
+        if self.tracer.enabled:
+            self.tracer.complete(
+                "prefill", t0, now - t0, tid=group[0][1] + 1,
+                args={"rids": [r.rid for r, _ in group], "bucket": bucket,
+                      "lanes": g})
         self.stats["requests"] += g
         for req, slot in group:
             if self.paged and self._prefix_enabled:
@@ -877,6 +989,12 @@ class ServeEngine:
                     "or raise pool_tokens)")
         if not admitted:
             return
+        if self.tracer.enabled:
+            for req, slot in admitted:
+                self.tracer.instant(
+                    "admit", ts=req.admit_t, tid=slot + 1,
+                    args={"rid": req.rid,
+                          "queue_s": round(req.admit_t - req.submit_t, 6)})
         cold = [(r, s) for r, s in admitted if not r.prefix_blocks]
         hits = [(r, s) for r, s in admitted if r.prefix_blocks]
         if self.coalesce:
@@ -991,17 +1109,48 @@ class ServeEngine:
             # flarecheck: disable=HS003 -- the one sanctioned per-step sync
             toks = np.asarray(toks_dev)
             now = time.time()
+            active = len(self.sched.running)
             self.stats["decode_s"] += now - t0
             self.stats["decode_steps"] += 1
             self.sched.note_decode_step()
+            self._note_step(t0, now, active)
             for slot, req in list(self.sched.running.items()):
                 tok = int(toks[slot])
                 if self._emit(req, tok, now):
                     self._retire(slot, now)
                 else:
                     self._cur_tok[slot] = tok
+        if self._win_t0 is not None and not self.sched.running:
+            self._flush_window()  # pool idle: close the partial window
         self._refresh_stats()
         return self.sched.has_work()
+
+    def _note_step(self, t0: float, now: float, active: int) -> None:
+        """Per-step obs bookkeeping, from the two stamps ``step`` already
+        took — no extra clock reads, no device traffic. Lives OUTSIDE the
+        hot-scope names (OB001/HS001 boundary) on purpose: ``step`` itself
+        only calls here."""
+        self._m_step_s.observe(now - t0)
+        if not self.tracer.enabled:
+            return
+        if self._win_t0 is None:
+            self._win_t0 = t0
+        self._win_end = now
+        self._win_steps += 1
+        self._win_toks += active
+        if self._win_steps >= self._trace_every:
+            self._flush_window()
+
+    def _flush_window(self) -> None:
+        """Emit the aggregated "decode" span for the open step window."""
+        if self._win_t0 is None:
+            return
+        self.tracer.complete(
+            "decode", self._win_t0, self._win_end - self._win_t0,
+            args={"steps": self._win_steps, "tokens": self._win_toks})
+        self._win_t0 = None
+        self._win_steps = 0
+        self._win_toks = 0
 
     def warmup(self, max_prompt_len: Optional[int] = None,
                max_lanes: Optional[int] = None) -> int:
@@ -1078,13 +1227,21 @@ class ServeEngine:
         jax.block_until_ready(out[0])
         compiled += self._decode_compiles - dc_before
         self.stats["warmup_compiles"] += compiled
-        self.stats["warmup_s"] += time.time() - t0
+        dur = time.time() - t0
+        self.stats["warmup_s"] += dur
+        self.tracer.complete("warmup", t0, dur,
+                             args={"compiles": compiled})
         self._refresh_stats()
         return compiled
 
     def _refresh_stats(self) -> None:
         self.stats["prefill_compiles"] = len(self._buckets_used)
         self.stats["decode_compiles"] = self._decode_compiles
+        # registry mirrors of the compile counters — set HERE, never inside
+        # the traced fused body (the OB001 boundary: _decode_compiles is a
+        # trace-time python increment; the gauges are host bookkeeping)
+        self._m_g_prefill_compiles.set(len(self._buckets_used))
+        self._m_g_decode_compiles.set(self._decode_compiles)
         self.stats["host_syncs_per_step"] = (
             self.stats["sample_host_syncs"]
             / max(1, self.stats["decode_steps"]))

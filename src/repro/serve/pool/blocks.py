@@ -46,6 +46,8 @@ from typing import Dict, List, Optional, Sequence
 
 import numpy as np
 
+from repro.obs.metrics import NULL_REGISTRY, MetricsRegistry
+
 
 def chain_hashes(tokens, block: int) -> List[bytes]:
     """Chain hash per FULL block of a token-id sequence: ``h_i =
@@ -92,6 +94,24 @@ class BlockAllocator:
         self.peak_mapped = 0        # high-water mark of mapped blocks
         self.prefix_hits = 0        # acquire() calls that took a reference
         self.hash_evictions = 0     # cached-free blocks recycled to fresh use
+        self.bind_metrics(NULL_REGISTRY)
+
+    def bind_metrics(self, registry: MetricsRegistry,
+                     prefix: str = "pool") -> None:
+        """Mirror this allocator's event counts into ``registry``
+        (DESIGN.md §16). Per-shard allocators binding the same registry
+        share the counters, so the registry view is the pool-wide sum —
+        matching the engine's summed ``stats["pool"]``."""
+        self._m_mapped = registry.counter(
+            f"{prefix}.pages_mapped", "pages handed to leases (incl. appends)")
+        self._m_appended = registry.counter(
+            f"{prefix}.pages_appended", "block-boundary appends mid-decode")
+        self._m_prefix_hits = registry.counter(
+            f"{prefix}.prefix_hits", "content-index references taken")
+        self._m_hash_evictions = registry.counter(
+            f"{prefix}.hash_evictions", "cached-free blocks recycled")
+        self._m_cached_free = registry.counter(
+            f"{prefix}.cached_free_returns", "blocks freed with hash kept")
 
     # -- admission -------------------------------------------------------
     def available(self) -> int:
@@ -128,12 +148,14 @@ class BlockAllocator:
         lease.reserved -= pages
         lease.mapped.extend(ids)
         self.peak_mapped = max(self.peak_mapped, self.mapped_blocks())
+        self._m_mapped.inc(len(ids))
         return ids
 
     def append(self, lease: PageLease) -> int:
         """Map one more page (a decode step crossed a block boundary)."""
         (page,) = self.map(lease, 1)
         self.pages_appended += 1
+        self._m_appended.inc()
         return page
 
     # -- content-hash index (DESIGN.md §4 "Prefix cache") ----------------
@@ -164,6 +186,7 @@ class BlockAllocator:
         if block in self._mapped:
             self._ref[block] += 1
             self.prefix_hits += 1
+            self._m_prefix_hits.inc()
             return True
         if block not in self._hash_of:
             raise RuntimeError(f"acquire of unindexed block {block}")
@@ -173,6 +196,7 @@ class BlockAllocator:
         self._mapped.add(block)
         self._ref[block] = 1
         self.prefix_hits += 1
+        self._m_prefix_hits.inc()
         self.peak_mapped = max(self.peak_mapped, self.mapped_blocks())
         return True
 
@@ -187,6 +211,7 @@ class BlockAllocator:
         if h is not None:
             self._by_hash.pop(h, None)
             self.hash_evictions += 1
+            self._m_hash_evictions.inc()
 
     # -- retirement ------------------------------------------------------
     def release_ref(self, block: int) -> None:
@@ -205,6 +230,8 @@ class BlockAllocator:
         del self._ref[block]
         self._mapped.discard(block)
         bisect.insort(self._free, block)  # lowest-id-first stays deterministic
+        if block in self._hash_of:
+            self._m_cached_free.inc()  # resurrectable until map() recycles it
 
     def release(self, lease: PageLease) -> None:
         """Return a lease's references and unused reservation. Private

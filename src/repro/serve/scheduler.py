@@ -14,6 +14,11 @@ scheduler owns *which request lives in which slot*:
   - **Stats**: per-request latencies (total + first-token) for p50/p99, and
     per-decode-step slot-occupancy samples for the utilization stat the
     no-idle-waste acceptance check reads.
+  - **Metrics** (DESIGN.md §16): admissions, retirements and deadline drops
+    also count into a :class:`repro.obs.metrics.MetricsRegistry` (the
+    engine passes its own; the default is the disabled null registry, so an
+    uninstrumented scheduler pays one branch per event). ``stats()``
+    surfaces the registry-backed totals plus the live queue depth.
 """
 from __future__ import annotations
 
@@ -22,6 +27,24 @@ from collections import deque
 from typing import Callable, Dict, List, Optional, Tuple
 
 import numpy as np
+
+from repro.obs.metrics import NULL_REGISTRY, MetricsRegistry
+
+
+def percentile(xs, q: float) -> float:
+    """Percentile with defined behaviour at every size — the latency lists
+    arrive empty (no finished requests yet) or single-sample (one request)
+    all the time in smoke runs:
+
+      - empty   -> ``nan`` (explicitly "no data", never a crash)
+      - [x]     -> ``x`` for every q (np.percentile agrees, but pin it)
+      - else    -> linear-interpolated ``np.percentile``
+    """
+    if len(xs) == 0:
+        return float("nan")
+    if len(xs) == 1:
+        return float(xs[0])
+    return float(np.percentile(np.asarray(xs, np.float64), q))
 
 
 @dataclasses.dataclass
@@ -55,7 +78,8 @@ class ServeRequest:
 
 
 class SlotScheduler:
-    def __init__(self, num_slots: int):
+    def __init__(self, num_slots: int,
+                 registry: Optional[MetricsRegistry] = None):
         if num_slots < 1:
             raise ValueError("need at least one slot")
         self.num_slots = num_slots
@@ -70,10 +94,24 @@ class SlotScheduler:
         # (deadline expiry) so resources taken at enqueue time — prefix
         # refcounts — are released; admitted requests release via retire
         self.on_drop: Optional[Callable[[ServeRequest], None]] = None
+        reg = registry if registry is not None else NULL_REGISTRY
+        self.metrics = reg
+        self._m_submitted = reg.counter(
+            "sched.submitted", "requests enqueued")
+        self._m_admitted = reg.counter(
+            "sched.admitted", "requests admitted into a slot")
+        self._m_retired = reg.counter(
+            "sched.retired", "requests retired (ran to completion)")
+        self._m_expired = reg.counter(
+            "sched.expired", "queued requests dropped at deadline expiry")
+        self._m_queue = reg.gauge(
+            "sched.queue_depth", "waiting requests after the last admit")
 
     # -- queue ------------------------------------------------------------
     def submit(self, req: ServeRequest) -> None:
         self.waiting.append(req)
+        self._m_submitted.inc()
+        self._m_queue.set(len(self.waiting))
 
     def admit(self, now: float,
               can_admit: Optional[Callable[[ServeRequest], bool]] = None,
@@ -95,6 +133,7 @@ class SlotScheduler:
                 req.dropped = True
                 req.finish_t = now
                 self.dropped.append(req)
+                self._m_expired.inc()
                 if self.on_drop is not None:
                     self.on_drop(req)
                 continue
@@ -107,6 +146,9 @@ class SlotScheduler:
             self.running[slot] = req
             self.admission_log.append((req.rid, slot))
             admitted.append((req, slot))
+        if admitted:
+            self._m_admitted.inc(len(admitted))
+        self._m_queue.set(len(self.waiting))
         return admitted
 
     def retire(self, slot: int, now: float) -> ServeRequest:
@@ -115,6 +157,7 @@ class SlotScheduler:
         self.finished.append(req)
         self.free.append(slot)
         self.free.sort()
+        self._m_retired.inc()
         return req
 
     def has_work(self) -> bool:
@@ -129,16 +172,22 @@ class SlotScheduler:
         total = [r.finish_t - r.submit_t for r in done]
         first = [r.first_token_t - r.submit_t for r in done
                  if r.first_token_t is not None]
-        pct = lambda xs, q: float(np.percentile(xs, q)) if xs else float("nan")
         util = float(np.mean(self._util) / self.num_slots) if self._util else 0.0
         return {
             "finished": len(self.finished),
             "dropped": len(self.dropped),
             "waiting": len(self.waiting),
             "running": len(self.running),
-            "latency_p50_s": pct(total, 50),
-            "latency_p99_s": pct(total, 99),
-            "first_token_p50_s": pct(first, 50),
-            "first_token_p99_s": pct(first, 99),
+            "latency_p50_s": percentile(total, 50),
+            "latency_p99_s": percentile(total, 99),
+            "first_token_p50_s": percentile(first, 50),
+            "first_token_p99_s": percentile(first, 99),
             "slot_utilization": util,
+            # registry-backed lifecycle totals (DESIGN.md §16) — all zero
+            # when the owner wired no live registry in
+            "queue_depth": len(self.waiting),
+            "submitted_total": int(self._m_submitted.value),
+            "admitted_total": int(self._m_admitted.value),
+            "retired_total": int(self._m_retired.value),
+            "expired_total": int(self._m_expired.value),
         }

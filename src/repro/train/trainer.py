@@ -28,6 +28,9 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 from repro.checkpoint.manager import CheckpointManager
 from repro.config import TrainConfig
 from repro.distributed.sharding import batch_spec, param_shardings
+from repro.obs import annotate
+from repro.obs.metrics import MetricsRegistry
+from repro.obs.trace import NULL_TRACER
 from repro.optim.adamw import init_adamw
 from repro.train.steps import make_train_step
 
@@ -44,11 +47,29 @@ class Trainer:
         num_microbatches: int = 1,
         on_straggler: Optional[Callable[[int, float, float], None]] = None,
         straggler_factor: float = 3.0,
+        tracer=None,
+        metrics=None,
     ):
         self.model = model
         self.tcfg = tcfg
         self.mesh = mesh
         self.num_microbatches = num_microbatches
+        # observability (DESIGN.md §16): per-trainer registry + optional
+        # span tracer; the step-time breakdown (host data feed vs device
+        # step, incl. the metric sync) is recorded from the two stamps the
+        # fit loop takes anyway
+        self.metrics = metrics if metrics is not None else MetricsRegistry()
+        self.tracer = tracer if tracer is not None else NULL_TRACER
+        self._m_steps = self.metrics.counter(
+            "train.steps", "optimizer steps completed")
+        self._m_data_s = self.metrics.histogram(
+            "train.data_s", "per-step host data feed seconds")
+        self._m_step_s = self.metrics.histogram(
+            "train.step_s", "per-step device step seconds (incl. metric sync)")
+        self._m_ckpts = self.metrics.counter(
+            "train.checkpoints", "checkpoint saves issued")
+        self._m_stragglers = self.metrics.counter(
+            "train.stragglers", "steps flagged by the straggler watchdog")
         self.on_straggler = on_straggler or (
             lambda step, dt, med: log.warning("straggler: step %d took %.3fs (median %.3fs)", step, dt, med)
         )
@@ -130,10 +151,24 @@ class Trainer:
             t0 = time.time()
             batch = batch_fn(self.step)
             batch = {k: jnp.asarray(v) for k, v in batch.items()}
-            self.params, self.opt_state, metrics = self._train_step(
-                self.params, self.opt_state, batch)
-            metrics = {k: float(v) for k, v in metrics.items()}
-            dt = time.time() - t0
+            t1 = time.time()  # host data feed done; device step begins
+            with annotate("train/step"):
+                self.params, self.opt_state, metrics = self._train_step(
+                    self.params, self.opt_state, batch)
+                # the float() sync blocks until the step has executed, so
+                # everything after t1 is device step + metric readback
+                metrics = {k: float(v) for k, v in metrics.items()}
+            now = time.time()
+            dt = now - t0
+            self._m_steps.inc()
+            self._m_data_s.observe(t1 - t0)
+            self._m_step_s.observe(now - t1)
+            if self.tracer.enabled:
+                self.tracer.complete(
+                    "train_step", t0, dt, cat="train",
+                    args={"step": self.step, "data_s": round(t1 - t0, 6),
+                          "step_s": round(now - t1, 6),
+                          "loss": metrics.get("loss")})
             self._watchdog(dt)
             self.step += 1
             metrics["step"] = self.step
@@ -145,6 +180,9 @@ class Trainer:
                          metrics["lr"], dt)
             if self.step % self.tcfg.checkpoint_every == 0:
                 self.ckpt.save(self.step, self.params)
+                self._m_ckpts.inc()
+                self.tracer.instant("checkpoint", cat="train",
+                                    args={"step": self.step})
         # final (blocking) save — also the preemption path
         self.ckpt.save(self.step, self.params, blocking=True)
         return history
@@ -154,6 +192,7 @@ class Trainer:
         if len(self._step_times) >= 5:
             med = statistics.median(self._step_times[-50:])
             if dt > self.straggler_factor * med:
+                self._m_stragglers.inc()
                 self.on_straggler(self.step, dt, med)
 
     def save_full_state(self):

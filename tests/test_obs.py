@@ -1,0 +1,338 @@
+"""Observability layer (DESIGN.md §16): registry semantics (counters /
+gauges / histograms, disabled no-op, thread-safety), span tracer + Chrome
+trace export, the scheduler percentile hardening, and the acceptance bars —
+a scripted serve run produces a correctly-ordered span tree with every
+lifecycle phase, and tracing changes NOTHING: greedy outputs stay
+bit-identical and ``host_syncs_per_step`` stays 0.0.
+"""
+import json
+import math
+import threading
+
+import numpy as np
+import pytest
+
+from repro.obs.metrics import (DEFAULT_BUCKETS, NULL_REGISTRY,
+                               MetricsRegistry)
+from repro.obs.trace import NULL_TRACER, PHASES, TID_ENGINE, Tracer
+from repro.serve.scheduler import ServeRequest, SlotScheduler, percentile
+
+# ---------------------------------------------------------------------------
+# metrics registry
+# ---------------------------------------------------------------------------
+
+
+def test_counter_semantics():
+    reg = MetricsRegistry()
+    c = reg.counter("c", "help")
+    c.inc()
+    c.inc(2.5)
+    assert c.value == 3.5
+    with pytest.raises(ValueError, match="decrease"):
+        c.inc(-1)
+    assert reg.counter("c") is c  # get-or-create
+
+def test_gauge_last_write_wins():
+    reg = MetricsRegistry()
+    g = reg.gauge("g")
+    g.set(7)
+    g.set(3)
+    assert g.value == 3.0
+
+
+def test_histogram_buckets_and_moments():
+    reg = MetricsRegistry()
+    h = reg.histogram("h", buckets=(1.0, 10.0))
+    for v in (0.5, 0.9, 5.0, 100.0):
+        h.observe(v)
+    snap = h.snapshot()
+    assert snap["count"] == 4 and snap["sum"] == pytest.approx(106.4)
+    assert snap["buckets"] == {"1.0": 2, "10.0": 1, "+inf": 1}
+    assert h.mean == pytest.approx(106.4 / 4)
+
+
+def test_histogram_bounds_validated():
+    reg = MetricsRegistry()
+    with pytest.raises(ValueError, match="sorted"):
+        reg.histogram("bad", buckets=(2.0, 1.0))
+    with pytest.raises(ValueError, match="sorted"):
+        reg.histogram("dup", buckets=(1.0, 1.0))
+    assert len(DEFAULT_BUCKETS) == len(set(DEFAULT_BUCKETS))
+
+
+def test_kind_conflict_raises():
+    reg = MetricsRegistry()
+    reg.counter("x")
+    with pytest.raises(ValueError, match="already registered as counter"):
+        reg.gauge("x")
+
+
+def test_disabled_registry_is_noop():
+    reg = MetricsRegistry(enabled=False)
+    c, g, h = reg.counter("c"), reg.gauge("g"), reg.histogram("h")
+    c.inc(10)
+    g.set(10)
+    h.observe(10)
+    assert c.value == 0 and g.value == 0 and h.count == 0
+    reg.enable()
+    c.inc(1)
+    assert c.value == 1
+    reg.disable()
+    c.inc(1)
+    assert c.value == 1
+    assert NULL_REGISTRY.enabled is False
+
+
+def test_thread_safety_smoke():
+    reg = MetricsRegistry()
+    c = reg.counter("c")
+    h = reg.histogram("h")
+
+    def work():
+        for _ in range(5000):
+            c.inc()
+            h.observe(0.001)
+
+    threads = [threading.Thread(target=work) for _ in range(8)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert c.value == 8 * 5000
+    assert h.count == 8 * 5000
+
+
+def test_dump_text_and_json(tmp_path):
+    reg = MetricsRegistry()
+    reg.counter("sched.admitted").inc(3)
+    reg.histogram("lat", buckets=(1.0,)).observe(0.5)
+    text = reg.dump_text()
+    assert "sched.admitted 3" in text
+    assert 'lat_bucket{le="1.0"} 1' in text and "lat_count 1" in text
+    p = tmp_path / "metrics.json"
+    reg.dump_json(str(p))
+    data = json.loads(p.read_text())
+    assert data["metrics"]["sched.admitted"] == 3.0
+    assert data["metrics"]["lat"]["count"] == 1
+
+
+# ---------------------------------------------------------------------------
+# percentile hardening (scheduler satellite)
+# ---------------------------------------------------------------------------
+
+
+def test_percentile_empty_is_nan_not_crash():
+    assert math.isnan(percentile([], 50))
+    assert math.isnan(percentile([], 99))
+
+
+def test_percentile_single_sample():
+    for q in (0, 50, 99, 100):
+        assert percentile([0.25], q) == 0.25
+
+
+def test_percentile_interpolates():
+    xs = [1.0, 2.0, 3.0, 4.0]
+    assert percentile(xs, 50) == pytest.approx(np.percentile(xs, 50))
+    assert percentile(xs, 99) == pytest.approx(np.percentile(xs, 99))
+
+
+def test_fresh_scheduler_stats_defined():
+    s = SlotScheduler(2).stats()
+    assert math.isnan(s["latency_p50_s"]) and math.isnan(s["first_token_p99_s"])
+    for k in ("queue_depth", "submitted_total", "admitted_total",
+              "retired_total", "expired_total"):
+        assert s[k] == 0
+
+
+def test_scheduler_registry_totals():
+    reg = MetricsRegistry()
+    sched = SlotScheduler(2, registry=reg)
+    sched.submit(ServeRequest(rid=0, prompt=np.ones(3, np.int32), submit_t=0.0))
+    sched.submit(ServeRequest(rid=1, prompt=np.ones(3, np.int32), submit_t=0.0,
+                              deadline_s=0.5))
+    admitted = sched.admit(now=1.0)  # rid 0 admitted; rid 1 expired in queue
+    assert [r.rid for r, _ in admitted] == [0]
+    sched.retire(admitted[0][1], now=2.0)
+    s = sched.stats()
+    assert s["submitted_total"] == 2 and s["admitted_total"] == 1
+    assert s["retired_total"] == 1 and s["expired_total"] == 1
+    assert s["queue_depth"] == 0
+    assert reg.counter("sched.expired").value == 1
+
+
+# ---------------------------------------------------------------------------
+# tracer + Chrome export
+# ---------------------------------------------------------------------------
+
+
+def test_tracer_records_and_disabled_noop():
+    tr = Tracer()
+    tr.complete("prefill", ts=10.0, dur=0.5, tid=1, args={"rid": 0})
+    tr.instant("enqueue", ts=9.0)
+    with tr.span("warmup"):
+        pass
+    assert [e.name for e in tr.events] == ["prefill", "enqueue", "warmup"]
+    off = Tracer(enabled=False)
+    off.complete("x", ts=0, dur=1)
+    off.instant("y")
+    with off.span("z"):
+        pass
+    assert off.events == []
+    assert NULL_TRACER.enabled is False
+
+
+def test_chrome_export_sorted_rebased_microseconds():
+    tr = Tracer()
+    tr.set_track_name(TID_ENGINE, "engine")
+    tr.complete("b", ts=100.002, dur=0.001)
+    tr.instant("a", ts=100.000)
+    doc = tr.to_chrome()
+    evs = doc["traceEvents"]
+    meta = [e for e in evs if e["ph"] == "M"]
+    assert {m["name"] for m in meta} >= {"process_name", "thread_name"}
+    data = [e for e in evs if e["ph"] != "M"]
+    assert [e["name"] for e in data] == ["a", "b"]  # sorted by ts
+    assert data[0]["ts"] == 0.0                      # rebased
+    assert data[1]["ts"] == pytest.approx(2000.0, abs=1.0)   # us
+    assert data[1]["dur"] == pytest.approx(1000.0)
+    assert data[0]["s"] == "t"                       # instant scope
+    ts = [e["ts"] for e in data]
+    assert ts == sorted(ts)
+
+
+def test_tracer_write_loadable(tmp_path):
+    tr = Tracer()
+    tr.instant("enqueue", ts=1.0, args={"rid": 0})
+    p = tmp_path / "trace.json"
+    n = tr.write(str(p))
+    assert n == 1
+    doc = json.loads(p.read_text())
+    assert isinstance(doc["traceEvents"], list)
+
+
+def test_negative_duration_clamped():
+    tr = Tracer()
+    tr.complete("x", ts=5.0, dur=-1.0)
+    assert tr.events[0].dur == 0.0
+
+
+# ---------------------------------------------------------------------------
+# serve-run span tree + tracing-changes-nothing (needs jax)
+# ---------------------------------------------------------------------------
+
+jax = pytest.importorskip("jax")
+
+from repro.configs import get_smoke_config          # noqa: E402
+from repro.models.api import get_model              # noqa: E402
+from repro.serve.engine import ServeEngine          # noqa: E402
+
+_MODELS = {}
+
+
+def _model(arch):
+    if arch not in _MODELS:
+        model = get_model(get_smoke_config(arch))
+        _MODELS[arch] = (model, model.init(jax.random.PRNGKey(0)))
+    return _MODELS[arch]
+
+
+def _template(n=40, lo=1, hi=50):
+    return (np.arange(1, n + 1, dtype=np.int32) * 7) % (hi - lo) + lo
+
+
+def _engine(arch="qwen2_1_5b", *, tracer=None, metrics=None, slots=2,
+            block=8, pool_blocks=24, prefix=True):
+    model, params = _model(arch)
+    return ServeEngine(model, params, capacity=64, slots=slots,
+                       pool_tokens=pool_blocks * block, block_size=block,
+                       prefix_cache=prefix, tracer=tracer, metrics=metrics)
+
+
+def _drive(eng, prompts, max_new=6, deadlines=None):
+    rids = [eng.submit(p, max_new_tokens=max_new,
+                       deadline_s=None if deadlines is None else deadlines[i])
+            for i, p in enumerate(prompts)]
+    while eng.step():
+        pass
+    done = {r.rid: np.asarray(r.tokens, np.int32)
+            for r in eng.sched.finished + eng.sched.dropped}
+    return [done[r] for r in rids]
+
+
+def test_serve_span_tree_ordering_and_phases():
+    tr = Tracer()
+    reg = MetricsRegistry()
+    eng = _engine(tracer=tr, metrics=reg, slots=1)
+    t = _template(40)
+    tail = _template(4, lo=50, hi=60)
+    # rid0 cold donor; rid1 identical (full coverage -> COW); rid2 shares
+    # the 40-token template then diverges (partial hit)
+    _drive(eng, [t, t.copy(), np.concatenate([t, tail])])
+
+    by = {}
+    for e in tr.events:
+        by.setdefault(e.name, []).append(e)
+    for ph in PHASES:
+        assert by.get(ph), f"no {ph!r} span recorded"
+    assert by.get("prefix_hit") and by.get("cow_copy")
+
+    # per-request lifecycle ordering: enqueue <= admit <= prefill <= retire
+    def rid_ts(name, rid):
+        for e in by[name]:
+            a = e.args or {}
+            if a.get("rid") == rid or rid in a.get("rids", []):
+                return e.ts
+        raise AssertionError(f"no {name} event for rid {rid}")
+
+    for rid in range(3):
+        tq, ta = rid_ts("enqueue", rid), rid_ts("admit", rid)
+        tp, tr_ = rid_ts("prefill", rid), rid_ts("retire", rid)
+        assert tq <= ta <= tp <= tr_
+
+    # decode aggregates cover every step, flushed at idle
+    steps = sum(e.args["steps"] for e in by["decode"])
+    assert steps == eng.stats["decode_steps"] > 0
+
+    # registry saw the same lifecycle the scheduler reports
+    snap = reg.snapshot()
+    assert snap["sched.admitted"] == 3 and snap["sched.retired"] == 3
+    assert snap["engine.cow_copies"] == eng.stats["cow_copies"] >= 1
+    assert snap["pool.prefix_hits"] >= 1
+    assert snap["engine.tokens_out"] == eng.stats["tokens_generated"]
+
+    # export is valid, monotonic, and carries every phase
+    doc = tr.to_chrome()
+    ts = [e["ts"] for e in doc["traceEvents"] if "ts" in e]
+    assert ts == sorted(ts) and min(ts) == 0.0
+
+
+def test_expire_instant_on_deadline_drop():
+    tr = Tracer()
+    eng = _engine(tracer=tr, slots=1, prefix=False)
+    t = _template(24)
+    outs = _drive(eng, [t, t, t], max_new=8,
+                  deadlines=[None, -1.0, None])  # rid1 expires while queued
+    assert outs[1].size == 0
+    expires = [e for e in tr.events if e.name == "expire"]
+    assert len(expires) == 1 and expires[0].args["rid"] == 1
+    assert eng.stats["expired_total"] == 1
+
+
+def test_tracing_changes_nothing_bit_identical_greedy():
+    prompts = [_template(40), _template(40),
+               np.concatenate([_template(40), _template(3, lo=50, hi=60)])]
+    base = _engine()                                   # default: NULL tracer
+    plain = _drive(base, [p.copy() for p in prompts])
+    tr = Tracer()
+    traced_eng = _engine(tracer=tr, metrics=MetricsRegistry())
+    traced = _drive(traced_eng, [p.copy() for p in prompts])
+    assert len(plain) == len(traced) == 3
+    for a, b in zip(plain, traced):
+        np.testing.assert_array_equal(a, b)
+    # the invariant tracing must not break: zero per-step host syncs, and
+    # the tracer actually recorded the run
+    assert traced_eng.stats["host_syncs_per_step"] == 0.0
+    assert len(tr.events) > 0
+    base.check_invariants()
+    traced_eng.check_invariants()
